@@ -1,0 +1,44 @@
+"""Beyond-paper ablation: the compression ratio r drives the payload
+s = r·d·p and therefore the whole communication/learning tradeoff of 𝒫₁.
+Sweeps r and reports the solver's optimal (B*, T, E) — showing where the
+system flips from communication-bound to compute-bound, plus the tau>1
+multiple-local-updates extension (paper §VII future work)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.channels.model import Cell
+from repro.core import DeviceProfile, gradient_bits, solve_period
+from repro.data.pipeline import ClassificationData
+from repro.fed.trainer import FeelSimulation
+
+
+def main(fast: bool = True):
+    devs = [DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+            for f in [0.7, 0.7, 1.4, 1.4, 2.1, 2.1]]
+    cell = Cell.make(0)
+    _, up, down = cell.sample_rates(6)
+    rows = []
+    for r in [0.001, 0.005, 0.02, 0.1, 1.0]:
+        s = gradient_bits(7_000_000, compression=r)
+        sol = solve_period(devs, up, down, s, 0.010, 0.010, xi=0.05,
+                           b_max=128)
+        rows.append((f"ablation_r/{r}", 0.0,
+                     f"B={sol.global_batch:.0f};T={sol.latency:.3f}s;"
+                     f"E={sol.efficiency:.4f}"))
+
+    # tau > 1 local updates (paper §VII)
+    full = ClassificationData.synthetic(n=1800, dim=128, seed=0, spread=6.0)
+    data, test = full.split(300)
+    for tau in ([1, 4] if fast else [1, 2, 4, 8]):
+        sim = FeelSimulation(devs, data, test, partition="iid", b_max=64,
+                             base_lr=0.1, local_steps=tau)
+        res = sim.run(40 if fast else 200, eval_every=20)
+        rows.append((f"ablation_tau/{tau}", res.times[-1] * 1e6,
+                     f"acc={res.accs[-1]:.4f};simT={res.times[-1]:.1f}s"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(map(str, row)))

@@ -1,0 +1,61 @@
+"""Regenerate the §Roofline table and §Perf appendix blocks in
+EXPERIMENTS.md from results/dryrun/*.jsonl and results/perf/*.jsonl."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def roofline_block() -> str:
+    from benchmarks.roofline import load, fmt_table
+    rows = [r for r in load() if r.get("mesh") == "16x16"]
+    lines = ["```", fmt_table(rows), "```", ""]
+    # multi-pod summary
+    mp = [r for r in load() if r.get("mesh") == "2x16x16"]
+    ok = sum(1 for r in mp if "error" not in r)
+    lines.append(f"Multi-pod (2×16×16): {ok}/{len(mp)} pairs lower+compile "
+                 f"(full table in baseline_multi_pod.jsonl).")
+    return "\n".join(lines)
+
+
+def perf_block() -> str:
+    out = ["", "### Variant measurements (raw)", "```"]
+    for path in sorted(glob.glob(os.path.join(ROOT, "results/perf",
+                                              "*.jsonl"))):
+        seen = {}
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                if "error" in r:
+                    continue
+                seen[r.get("variant", "?")] = r     # last run wins
+        for v, r in seen.items():
+            out.append(
+                f"{r['arch']:<22}{r['shape']:<13}{v:<34}"
+                f"compute={r['compute_s']:.3e} memory={r['memory_s']:.3e} "
+                f"collective={r['collective_s']:.3e}")
+    out.append("```")
+    return "\n".join(out)
+
+
+def main(fast: bool = True):
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\nReading of the table)",
+                  "<!-- ROOFLINE_TABLE -->\n" + roofline_block() + "\n",
+                  text, flags=re.S)
+    text = re.sub(r"<!-- PERF_RAW -->.*?(?=\n## |$)",
+                  "<!-- PERF_RAW -->\n" + perf_block() + "\n",
+                  text, flags=re.S)
+    with open(path, "w") as f:
+        f.write(text)
+    return [("fill_experiments", 0.0, "ok")]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+Reads results/dryrun/*.jsonl written by repro.launch.dryrun."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(pattern="baseline_*.jsonl"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            for line in f:
+                rows.append(json.loads(line))
+    return rows
+
+
+def fmt_table(rows):
+    out = []
+    hdr = (f"{'arch':<24}{'shape':<13}{'mesh':<9}{'compute_s':>11}"
+           f"{'memory_s':>11}{'collect_s':>11}{'dominant':>12}"
+           f"{'useful%':>9}")
+    out.append(hdr)
+    for r in rows:
+        if "error" in r:
+            out.append(f"{r['arch']:<24}{r['shape']:<13}"
+                       f"{r.get('mesh','?'):<9}  ERROR: {r['error'][:60]}")
+            continue
+        uf = r.get("useful_flops_ratio")
+        out.append(
+            f"{r['arch']:<24}{r['shape']:<13}{r['mesh']:<9}"
+            f"{r['compute_s']:>11.3e}{r['memory_s']:>11.3e}"
+            f"{r['collective_s']:>11.3e}"
+            f"{r['dominant'].replace('_s',''):>12}"
+            f"{(uf*100 if uf else 0):>8.1f}%")
+    return "\n".join(out)
+
+
+def main(fast: bool = True):
+    rows = load()
+    ok = [r for r in rows if "error" not in r]
+    errs = [r for r in rows if "error" in r]
+    out = []
+    if rows:
+        print(fmt_table(rows))
+    out.append(("roofline/pairs_ok", 0.0,
+                f"ok={len(ok)};fail={len(errs)};total={len(rows)}"))
+    for dom in ("compute_s", "memory_s", "collective_s"):
+        n = sum(1 for r in ok if r.get("dominant") == dom)
+        out.append((f"roofline/dominant_{dom.replace('_s','')}", 0.0,
+                    f"count={n}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

@@ -1,0 +1,32 @@
+"""Algorithm 1 scaling: solver wall time vs K (paper claims
+O((K log 1/ε)²) for 𝒫₂ and O(1/√ε·(K log 1/ε)²) overall)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import DeviceProfile, gradient_bits, solve_period
+
+
+def main(fast: bool = True):
+    rows = []
+    s = gradient_bits(7_000_000)
+    for k in ([4, 16, 64] if fast else [4, 16, 64, 256]):
+        rng = np.random.default_rng(0)
+        devs = [DeviceProfile(kind="cpu", f_cpu=f)
+                for f in rng.uniform(0.5e9, 3e9, k)]
+        r_up = rng.uniform(20e6, 200e6, k)
+        r_down = rng.uniform(20e6, 200e6, k)
+        t0 = time.time()
+        sol = solve_period(devs, r_up, r_down, s, 0.01, 0.01, xi=0.05,
+                           b_max=128)
+        us = (time.time() - t0) * 1e6
+        rows.append((f"solver_scaling/K{k}", us,
+                     f"B={sol.global_batch:.0f};E={sol.efficiency:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

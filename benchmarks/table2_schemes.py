@@ -1,0 +1,51 @@
+"""Table II — training performance of the four schemes, K=6 and K=12,
+IID and non-IID (synthetic data stand-in; scheme ORDERING is the
+reproduction target, DESIGN.md §9)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import DeviceProfile
+from repro.data.pipeline import ClassificationData
+from repro.fed.trainer import run_scheme
+
+
+def fleet(k):
+    tiers = [0.7e9, 1.4e9, 2.1e9]
+    return [DeviceProfile(kind="cpu", f_cpu=tiers[i % 3]) for i in range(k)]
+
+
+def main(fast: bool = True):
+    periods = 60 if fast else 400
+    n = 2200 if fast else 12000
+    rows = []
+    for k in ([6] if fast else [6, 12]):
+        for part in ["iid", "noniid"]:
+            full = ClassificationData.synthetic(n=n, dim=128, seed=0,
+                                                spread=6.0)
+            data, test = full.split(max(200, n // 10))
+            base = None
+            for scheme in ["individual", "model_fl", "gradient_fl", "feel"]:
+                t0 = time.time()
+                r = run_scheme(scheme, fleet(k), data, test, part, periods,
+                               eval_every=max(1, periods // 6))
+                # training speedup vs individual = inverse ratio of
+                # simulated time to a common accuracy target
+                target = 0.6
+                t_reach = r.speed(target)
+                if scheme == "individual":
+                    base = t_reach
+                speedup = (base / t_reach) if (base and np.isfinite(t_reach)
+                                               and np.isfinite(base)) else 0.0
+                rows.append((f"table2/K{k}/{part}/{scheme}",
+                             (time.time() - t0) * 1e6,
+                             f"acc={r.accs[-1]:.4f};simT={r.times[-1]:.1f}s;"
+                             f"speedup={speedup:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

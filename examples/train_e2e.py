@@ -1,0 +1,42 @@
+"""End-to-end training driver: a transformer from the assigned-architecture
+zoo trained with the FEEL scheduler in the loop (channel sampling ->
+joint batchsize/slot optimization -> weighted eq.(1) aggregation).
+
+Default is laptop-scale (a reduced qwen variant, ~8M params, 150 steps on
+synthetic Markov text).  ``--model-100m`` selects a ~100M-param variant
+(a few hundred steps is a multi-hour CPU run; on TPU it is minutes).
+
+Run:  PYTHONPATH=src python examples/train_e2e.py [--steps 150]
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]]  # reparse below
+
+from repro.launch import train as train_cli  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--model-100m", action="store_true")
+    ap.add_argument("--policy", default="proposed")
+    ap.add_argument("--compress-uplink", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    argv = ["--arch", "qwen1.5-4b", "--steps", str(args.steps),
+            "--devices", "4", "--slot", "8", "--seq", "64",
+            "--policy", args.policy]
+    if args.compress_uplink:
+        argv.append("--compress-uplink")
+    if args.model_100m:
+        # a genuine ~100M-param qwen-family variant (12 x d768); a few
+        # hundred steps is a multi-hour CPU run, minutes on TPU
+        argv += ["--layers", "12", "--d-model", "768", "--seq", "128"]
+    loss = train_cli.main(argv)
+    print(f"[example] final loss {loss:.4f} — see launch/train.py for the "
+          f"production entry point (--full + production mesh on TPU).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import save, restore, save_state, restore_state
+
+__all__ = ["save", "restore", "save_state", "restore_state"]

@@ -1,0 +1,82 @@
+"""msgpack-based checkpointing for arbitrary jax pytrees (no orbax offline).
+
+Arrays are serialized as {shape, dtype, raw bytes}; the tree structure is
+preserved via jax.tree_util flatten-with-paths.  Atomic write (tmp+rename);
+``save_state``/``restore_state`` add a step counter + metadata envelope.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x):
+    a = np.asarray(x)
+    # extended dtypes (bfloat16, float8) are stored by name; numpy's .str
+    # for them is an opaque void type
+    return {b"shape": list(a.shape), b"dtype": a.dtype.name,
+            b"data": a.tobytes()}
+
+
+def _np_dtype(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _unpack_leaf(d):
+    dt = _np_dtype(d[b"dtype"].decode() if isinstance(d[b"dtype"], bytes)
+                   else d[b"dtype"])
+    a = np.frombuffer(d[b"data"], dtype=dt)
+    return jnp.asarray(a.reshape(d[b"shape"]))
+
+
+def _key_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save(path: str, tree: Any) -> None:
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    payload = {_key_str(p).encode(): _pack_leaf(v) for p, v in leaves}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: Any) -> Any:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=True)
+    leaves = jax.tree_util.tree_leaves_with_path(like)
+    vals = []
+    for p, ref in leaves:
+        key = _key_str(p).encode()
+        if key not in payload:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        v = _unpack_leaf(payload[key])
+        if tuple(v.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch at {key!r}: "
+                             f"{v.shape} vs {np.shape(ref)}")
+        vals.append(v)
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def save_state(path: str, step: int, params: Any, opt_state: Any,
+               extra: Any = ()) -> None:
+    save(path, {"step": jnp.asarray(step), "params": params,
+                "opt": opt_state, "extra": extra})
+
+
+def restore_state(path: str, params_like: Any, opt_like: Any,
+                  extra_like: Any = ()):
+    out = restore(path, {"step": jnp.asarray(0), "params": params_like,
+                         "opt": opt_like, "extra": extra_like})
+    return int(out["step"]), out["params"], out["opt"], out["extra"]

@@ -1,0 +1,64 @@
+"""Sparse Binary Compression (Sattler et al. [24]) — the paper's gradient
+compression substrate (r = 0.005, §VI-A).
+
+Per tensor: (1) magnitude top-k sparsification at rate ``ratio``;
+(2) among survivors, keep only the sign group (positive or negative) with
+the larger magnitude sum; (3) binarize survivors to that group's mean
+magnitude.  With error feedback (residual accumulation) this preserves
+convergence.  ``compressed_bits`` reproduces the paper's payload model
+s = r·d·p.
+
+``compress_dense`` returns the *dense decompressed* gradient — the form the
+in-graph federated all-reduce consumes (DESIGN.md §3: uplink compression
+becomes a transform around the data-parallel mean).  The Pallas kernel
+(kernels/sbc_topk) computes the per-block magnitude threshold + binarize
+step on TPU; this module is its jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sbc_tensor(g: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    """Dense SBC approximation of one tensor (jnp oracle)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    k = max(1, int(round(n * ratio)))
+    mag = jnp.abs(flat)
+    # threshold = k-th largest magnitude
+    thr = jax.lax.top_k(mag, k)[0][-1]
+    keep = mag >= thr
+    pos = keep & (flat > 0)
+    neg = keep & (flat < 0)
+    pos_sum = jnp.sum(jnp.where(pos, mag, 0.0))
+    neg_sum = jnp.sum(jnp.where(neg, mag, 0.0))
+    use_pos = pos_sum >= neg_sum
+    grp = jnp.where(use_pos, pos, neg)
+    grp_sum = jnp.where(use_pos, pos_sum, neg_sum)
+    cnt = jnp.maximum(jnp.sum(grp), 1)
+    mean_mag = grp_sum / cnt
+    val = jnp.where(use_pos, mean_mag, -mean_mag)
+    out = jnp.where(grp, val, 0.0)
+    return out.reshape(g.shape).astype(g.dtype)
+
+
+def compress_dense(grads, ratio: float = 0.005, residual=None):
+    """Apply SBC to every leaf; with error-feedback residuals when given.
+
+    Returns (approx_grads, new_residual).
+    """
+    if residual is None:
+        residual = jax.tree_util.tree_map(jnp.zeros_like, grads)
+    acc = jax.tree_util.tree_map(lambda g, r: g + r, grads, residual)
+    approx = jax.tree_util.tree_map(lambda t: sbc_tensor(t, ratio), acc)
+    new_res = jax.tree_util.tree_map(lambda a, ap: a - ap, acc, approx)
+    return approx, new_res
+
+
+def compressed_bits(n_params: int, ratio: float = 0.005,
+                    bits_per_term: int = 64) -> float:
+    """Paper's payload model: s = r·d·p."""
+    return ratio * bits_per_term * n_params

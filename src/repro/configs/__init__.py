@@ -1,0 +1,43 @@
+"""Registry: ``--arch <id>`` -> ArchConfig."""
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, get_shape
+
+from repro.configs import (
+    granite_34b,
+    deepseek_v2_lite_16b,
+    mistral_nemo_12b,
+    musicgen_large,
+    zamba2_7b,
+    mamba2_2p7b,
+    arctic_480b,
+    qwen1p5_4b,
+    llava_next_mistral_7b,
+    minicpm3_4b,
+    feel_mlp,
+)
+
+_MODULES = [
+    granite_34b, deepseek_v2_lite_16b, mistral_nemo_12b, musicgen_large,
+    zamba2_7b, mamba2_2p7b, arctic_480b, qwen1p5_4b,
+    llava_next_mistral_7b, minicpm3_4b, feel_mlp,
+]
+
+ARCHS = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+# The 10 assigned architectures (feel-mlp is the paper's own extra).
+ASSIGNED = [
+    "granite-34b", "deepseek-v2-lite-16b", "mistral-nemo-12b",
+    "musicgen-large", "zamba2-7b", "mamba2-2.7b", "arctic-480b",
+    "qwen1.5-4b", "llava-next-mistral-7b", "minicpm3-4b",
+]
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = [
+    "ArchConfig", "ShapeConfig", "SHAPES", "ARCHS", "ASSIGNED",
+    "get_arch", "get_shape",
+]

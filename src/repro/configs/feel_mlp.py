@@ -1,0 +1,25 @@
+"""feel-mlp — the paper's own experiment-scale model class.
+
+The paper trains DenseNet121/ResNet18/MobileNetV2 on CIFAR-10; offline we
+use a compact MLP classifier over 3072-dim (32x32x3) synthetic inputs with
+10 classes, which exercises the identical FEEL scheduling problem
+(batchsize selection + TDMA allocation) at laptop scale.  This config is
+consumed by the federated trainer directly (not the transformer stack).
+"""
+from repro.configs.base import ArchConfig
+
+# family "mlp" is handled by repro.fed.feel_model, not models.model.
+CONFIG = ArchConfig(
+    name="feel-mlp",
+    family="mlp",
+    n_layers=3,
+    d_model=256,        # hidden width
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=10,           # classes
+    attn_kind="none",
+    source="paper §VI (CIFAR-10 class task, synthetic stand-in)",
+)
+
+INPUT_DIM = 3072

@@ -1,0 +1,20 @@
+"""granite-34b — dense llama-arch code model [arXiv:2405.04324].
+
+88L, d_model 6144, 48 Q heads, GQA kv=1 (MQA), d_ff 24576, vocab 49152.
+long_500k runs with the sliding-window variant (window 8192) — see DESIGN.md §5.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-34b",
+    family="dense",
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab=49152,
+    head_dim=128,
+    ffn_kind="mlp",                # GPT-BigCode 2-matrix MLP => ~34B params
+    source="arXiv:2405.04324",
+)

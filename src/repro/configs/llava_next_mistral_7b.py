@@ -1,0 +1,23 @@
+"""llava-next-mistral-7b — VLM, Mistral-7B backbone + anyres vision prefix
+[hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+32L, d_model 4096, 32 heads (GQA kv=8), d_ff 14336, vocab 32000.
+The vision tower (CLIP-ViT) + projector are STUBBED per the brief:
+input_specs() supplies pre-projected patch embeddings (anyres grid of up
+to 2880 tokens = 5 tiles x 24x24) prepended to the text tokens.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    head_dim=128,
+    vlm_prefix=2880,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

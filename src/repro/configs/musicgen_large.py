@@ -1,0 +1,22 @@
+"""musicgen-large — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+48L, d_model 2048, 32 heads (MHA), d_ff 8192, vocab 2048 per codebook,
+4 EnCodec codebooks (delay interleaving handled by the data pipeline stub).
+The EnCodec frontend is STUBBED per the brief: input_specs() supplies codec
+token ids; the model embeds each codebook and sums (MusicGen §3.1).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=2048,
+    head_dim=64,
+    n_codebooks=4,
+    source="arXiv:2306.05284",
+)

@@ -1,0 +1,19 @@
+"""qwen1.5-4b — dense with QKV bias [hf:Qwen/Qwen1.5-0.5B card family].
+
+40L, d_model 2560, 20 heads (MHA, kv=20), d_ff 6912, vocab 151936.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=6912,
+    vocab=151936,
+    head_dim=128,
+    qkv_bias=True,
+    source="hf:Qwen/Qwen1.5-0.5B",
+)

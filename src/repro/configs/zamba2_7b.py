@@ -1,0 +1,22 @@
+"""zamba2-7b — Mamba2 backbone + shared attention block [arXiv:2411.15242].
+
+81 Mamba2 layers (d_model 3584, ssm_state 64) with ONE shared
+attention+MLP block (32H MHA, d_ff 14336) re-applied every 9 layers with
+the same weights (81 = 9 segments x 9 layers) — DESIGN.md §5.
+"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab=32000,
+    head_dim=112,
+    ssm=SSMConfig(d_state=64, head_dim=64),
+    hybrid_every=9,
+    source="arXiv:2411.15242",
+)

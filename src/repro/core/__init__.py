@@ -1,0 +1,23 @@
+"""The paper's primary contribution: learning-efficiency-optimal joint
+batchsize selection + communication resource allocation (Theorems 1/2,
+Algorithm 1) and the FEEL period scheduler that applies it at runtime."""
+from repro.core.latency import (DeviceProfile, gradient_bits, period_latency,
+                                uplink_latency, downlink_latency)
+from repro.core.efficiency import (loss_decay, learning_efficiency, lr_scale,
+                                   XiEstimator)
+from repro.core.solver import (solve_uplink, solve_downlink, solve_period,
+                               batch_closed_form, tau_closed_form,
+                               e_up_bounds, mu_bounds,
+                               UplinkSolution, DownlinkSolution,
+                               PeriodSolution)
+from repro.core.baselines import POLICIES, PolicyResult
+from repro.core.scheduler import FeelScheduler, PeriodPlan
+
+__all__ = [
+    "DeviceProfile", "gradient_bits", "period_latency", "uplink_latency",
+    "downlink_latency", "loss_decay", "learning_efficiency", "lr_scale",
+    "XiEstimator", "solve_uplink", "solve_downlink", "solve_period",
+    "batch_closed_form", "tau_closed_form", "e_up_bounds", "mu_bounds",
+    "UplinkSolution", "DownlinkSolution", "PeriodSolution", "POLICIES",
+    "PolicyResult", "FeelScheduler", "PeriodPlan",
+]

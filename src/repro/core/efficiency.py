@@ -1,0 +1,45 @@
+"""Learning-efficiency criterion (paper Definition 1) and the ΔL = ξ√B
+global-loss-decay model (eq. 8) with an online ξ estimator.
+
+The √B law comes from keeping gradient-estimate variance constant under the
+η ∝ √B learning-rate scaling [36,37]; ξ is model/task specific, so the
+trainer re-estimates it from observed decays (EWMA) each period —
+the paper treats ξ as a known constant; the estimator is our runtime
+counterpart (same role as its offline fit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def loss_decay(xi: float, global_batch) -> np.ndarray:
+    """eq. (8): ΔL = ξ·√B."""
+    return xi * np.sqrt(np.asarray(global_batch, float))
+
+
+def learning_efficiency(xi: float, global_batch: float, period_latency: float
+                        ) -> float:
+    """Definition 1: E = ΔL / T."""
+    return float(loss_decay(xi, global_batch) / period_latency)
+
+
+def lr_scale(base_lr: float, global_batch: float, ref_batch: float) -> float:
+    """η = η₀·√(B/B_ref) (paper §III-A scaling law)."""
+    return base_lr * float(np.sqrt(global_batch / ref_batch))
+
+
+@dataclass
+class XiEstimator:
+    """EWMA estimate of ξ from observed per-period loss decays."""
+    xi: float = 0.05
+    beta: float = 0.9
+    _n: int = field(default=0)
+
+    def update(self, observed_decay: float, global_batch: float) -> float:
+        if global_batch > 0 and np.isfinite(observed_decay):
+            sample = max(observed_decay, 0.0) / np.sqrt(global_batch)
+            self.xi = self.beta * self.xi + (1 - self.beta) * sample
+            self._n += 1
+        return self.xi

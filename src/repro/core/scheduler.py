@@ -1,0 +1,94 @@
+"""FEEL period scheduler — the paper's technique as a first-class runtime
+feature (DESIGN.md §4).
+
+Each training period: sample the wireless channel → solve 𝒫₁ → emit a
+``PeriodPlan`` that the federated trainer consumes (per-device batchsizes
+as masks, η = η₀√(B/B_ref), simulated latency ledger).  Baseline policies
+are drop-in replacements via ``policy=``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.channels.model import Cell, CellConfig
+from repro.core.baselines import POLICIES
+from repro.core.efficiency import XiEstimator, lr_scale
+from repro.core.latency import DeviceProfile, gradient_bits
+
+
+@dataclass(frozen=True)
+class PeriodPlan:
+    period: int
+    batch: np.ndarray            # B_k per device (int)
+    tau_up: np.ndarray
+    tau_down: np.ndarray
+    lr: float
+    predicted_latency: float     # seconds (simulated wall-clock)
+    global_batch: int
+    rates_up: np.ndarray
+    rates_down: np.ndarray
+
+
+@dataclass
+class FeelScheduler:
+    devices: Sequence[DeviceProfile]
+    n_params: int
+    policy: str = "proposed"
+    b_max: int = 128
+    base_lr: float = 0.05
+    ref_batch: float = 128.0
+    bits_per_term: int = 64          # d (paper §VI-A)
+    compression: float = 0.005       # r (sparse binary compression [24])
+    cell: Optional[Cell] = None
+    cell_cfg: CellConfig = field(default_factory=CellConfig)
+    seed: int = 0
+    xi_est: XiEstimator = field(default_factory=XiEstimator)
+    reopt_every: int = 5         # outer B* search cadence (channel stats
+                                 # are stationary; warm-start in between)
+    _period: int = 0
+    _dist_km: Optional[np.ndarray] = None
+    _b_cache: Optional[float] = None
+
+    def __post_init__(self):
+        if self.cell is None:
+            self.cell = Cell.make(self.seed, self.cell_cfg)
+        self.rng = np.random.default_rng(self.seed + 1)
+        # user positions are fixed for a training run; fading varies per period
+        self._dist_km = self.cell.drop_users(len(self.devices))
+
+    @property
+    def payload_bits(self) -> float:
+        return gradient_bits(self.n_params, self.bits_per_term,
+                             self.compression)
+
+    def observe(self, loss_decay: float, global_batch: float):
+        """Feed back the realized ΔL to the ξ estimator."""
+        self.xi_est.update(loss_decay, global_batch)
+
+    def plan(self) -> PeriodPlan:
+        c = self.cell.cfg
+        rates_up = self.cell.avg_rate(self._dist_km)
+        rates_down = self.cell.avg_rate(self._dist_km)
+        kw = dict(rng=self.rng)
+        if self.policy == "proposed":
+            kw["xi"] = self.xi_est.xi
+            if self._b_cache is not None and self._period % self.reopt_every:
+                kw["B"] = self._b_cache
+        res = POLICIES[self.policy](
+            self.devices, rates_up, rates_down, self.payload_bits,
+            c.frame_up_s, c.frame_down_s, self.b_max, **kw)
+        if self.policy == "proposed":
+            self._b_cache = res.global_batch
+        batch = np.maximum(np.round(res.batch).astype(int), 1)
+        gb = int(batch.sum())
+        plan = PeriodPlan(
+            period=self._period, batch=batch, tau_up=res.tau_up,
+            tau_down=res.tau_down,
+            lr=lr_scale(self.base_lr, gb, self.ref_batch),
+            predicted_latency=res.latency, global_batch=gb,
+            rates_up=rates_up, rates_down=rates_down)
+        self._period += 1
+        return plan

@@ -1,0 +1,40 @@
+"""The paper-scale classifier (feel-mlp config): a compact MLP trained with
+the FEEL loop on synthetic 3072-dim / 10-class data (CIFAR-10 stand-in)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.feel_mlp import INPUT_DIM
+
+
+def init(key, hidden: int = 256, classes: int = 10, depth: int = 3,
+         input_dim: int = INPUT_DIM):
+    dims = [input_dim] + [hidden] * (depth - 1) + [classes]
+    keys = jax.random.split(key, len(dims) - 1)
+    return [{
+        "w": jax.random.normal(k, (i, o), jnp.float32) * jnp.sqrt(2.0 / i),
+        "b": jnp.zeros((o,), jnp.float32),
+    } for k, i, o in zip(keys, dims[:-1], dims[1:])]
+
+
+def apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(params, x, y, w=None):
+    """Weighted cross-entropy; w: per-example weights (eq. (1) masking)."""
+    logits = apply(params, x)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    if w is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1e-9)
+
+
+def accuracy(params, x, y):
+    return jnp.mean(jnp.argmax(apply(params, x), -1) == y)

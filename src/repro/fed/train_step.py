@@ -1,0 +1,134 @@
+"""Training / serving step builders for the big-model configs.
+
+``make_train_step`` realizes the FEEL aggregation (eq. 1) under SPMD:
+per-example weights (the federated B_k masks from the scheduler plan)
+enter the weighted CE loss; the cross-device gradient mean that jit/GSPMD
+emits over the data axis IS the paper's Step-3 aggregation.  Optional
+``compress_uplink`` applies SBC to the gradients *before* the optimizer —
+the in-graph counterpart of the paper's Step-2 compression.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression.sbc import sbc_tensor
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.layers import padded_vocab
+from repro.models.model import Runtime, forward, decode_step, init_cache
+from repro.optim import Optimizer, apply_updates
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.step), None),
+    lambda _, ch: TrainState(*ch))
+
+
+def weighted_ce(cfg: ArchConfig, logits, labels, weights):
+    """Weighted next-token CE.
+
+    logits: (B,S,V) or (B,S,ncb,V); labels alike; weights: (B,S) —
+    product of the federated per-example mask and any token mask.
+    eq. (1): Σ_k B_k·ḡ_k / Σ B_k  ==  Σ_i w_i·g_i / Σ w_i  (test-covered).
+    """
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if cfg.n_codebooks > 1:
+        nll = nll.sum(-1)                       # sum codebook losses
+    denom = jnp.maximum(jnp.sum(weights), 1e-6)
+    return jnp.sum(nll * weights) / denom
+
+
+def make_loss_fn(cfg: ArchConfig, rt: Runtime):
+    def loss_fn(params, batch):
+        logits, aux = forward(cfg, params, batch["tokens"],
+                              prefix_embeds=batch.get("prefix"), rt=rt)
+        loss = weighted_ce(cfg, logits, batch["labels"], batch["weights"])
+        return loss + aux.astype(jnp.float32), loss
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, rt: Runtime, opt: Optimizer,
+                    compress_uplink: bool = False,
+                    compress_ratio: float = 0.005):
+    loss_fn = make_loss_fn(cfg, rt)
+
+    def train_step(state: TrainState, batch, lr):
+        (total, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch)
+        if compress_uplink:
+            # Step 2: per-device SBC before the (implicit) all-reduce.
+            grads = jax.tree_util.tree_map(
+                lambda g: sbc_tensor(g, compress_ratio), grads)
+        updates, new_opt = opt.update(grads, state.opt, state.params, lr)
+        new_params = apply_updates(state.params, updates)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        metrics = {"loss": ce, "total_loss": total, "grad_norm": gnorm}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, rt: Runtime):
+    def prefill(params, batch):
+        logits, _ = forward(cfg, params, batch["tokens"],
+                            prefix_embeds=batch.get("prefix"), rt=rt)
+        return logits
+
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig, rt: Runtime):
+    def serve(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens, rt=rt)
+
+    return serve
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — the dry-run contract)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, rt: Runtime):
+    """Abstract inputs for every model input of the given (arch, shape).
+
+    Train/prefill: token batch (+ labels/weights for train, prefix embeds
+    for the VLM stub).  Decode: one new token per sequence + the KV/SSM
+    cache of ``seq_len`` context.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+    i32 = jnp.int32
+
+    if shape.mode in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)}
+        if cfg.vlm_prefix:
+            P = min(cfg.vlm_prefix, S // 2)
+            batch["prefix"] = jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                   rt.dtype)
+        if shape.mode == "train":
+            batch["labels"] = jax.ShapeDtypeStruct(tok_shape, i32)
+            batch["weights"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+        return batch
+
+    # decode: cache allocated at min(seq_len, window) context
+    cache = jax.eval_shape(partial(init_cache, cfg, B, S, rt))
+    tok1 = (B, 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, 1)
+    return {"cache": cache, "tokens": jax.ShapeDtypeStruct(tok1, i32)}

@@ -1,0 +1,247 @@
+"""FEEL training loop (paper §II-A five steps) + the Table-II scheme zoo.
+
+Simulated wall-clock comes from the core latency models (the container has
+no radio or edge devices); learning is real JAX compute on synthetic data.
+
+Schemes:
+  feel        — the paper's proposal: scheduler-planned B_k/τ_k, compressed
+                gradient aggregation (eq. (1)), η ∝ √B.
+  gradient_fl — [40]: full-slot batches, equal TDMA slots, compressed grads.
+  model_fl    — FedAvg [19]: one local epoch, parameter upload
+                (uncompressed payload d·p).
+  individual  — no collaboration; models averaged once at the end.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.sbc import compress_dense
+from repro.core import DeviceProfile, FeelScheduler
+from repro.core.latency import period_latency, uplink_latency
+from repro.data.pipeline import (ClassificationData, FederatedBatcher,
+                                 partition_iid, partition_noniid)
+from repro.fed import feel_model
+
+
+@dataclass
+class RunResult:
+    scheme: str
+    losses: List[float] = field(default_factory=list)
+    accs: List[float] = field(default_factory=list)
+    times: List[float] = field(default_factory=list)       # cumulative (s)
+    global_batches: List[int] = field(default_factory=list)
+
+    def speed(self, target_acc: float) -> float:
+        """Time to reach target accuracy (inf if never)."""
+        for a, t in zip(self.accs, self.times):
+            if a >= target_acc:
+                return t
+        return float("inf")
+
+
+@dataclass
+class FeelSimulation:
+    devices: Sequence[DeviceProfile]
+    data: ClassificationData
+    test: ClassificationData
+    partition: str = "noniid"            # iid | noniid
+    policy: str = "proposed"             # core.baselines key
+    compress: bool = True
+    b_max: int = 128
+    base_lr: float = 0.05
+    seed: int = 0
+    hidden: int = 256
+    depth: int = 3
+    local_steps: int = 1                 # paper §VII future work: multiple
+                                         # local updates per period (tau>1
+                                         # FedAvg-style); latency scales the
+                                         # local-compute term accordingly
+
+    def __post_init__(self):
+        k = len(self.devices)
+        if self.partition == "iid":
+            self.parts = partition_iid(len(self.data.y), k, self.seed)
+        else:
+            self.parts = partition_noniid(self.data.y, k, seed=self.seed)
+        self.batcher = FederatedBatcher(self.parts, self.b_max, self.seed)
+        self.params = feel_model.init(jax.random.key(self.seed), self.hidden,
+                                      depth=self.depth,
+                                      input_dim=self.data.x.shape[1])
+        self.n_params = sum(int(np.prod(np.shape(l)))
+                            for l in jax.tree_util.tree_leaves(self.params))
+        self.scheduler = FeelScheduler(
+            devices=self.devices, n_params=self.n_params, policy=self.policy,
+            b_max=self.b_max, base_lr=self.base_lr, seed=self.seed)
+        self.residuals = None
+        self._grad_fn = jax.jit(jax.vmap(
+            jax.grad(feel_model.loss_fn), in_axes=(None, 0, 0, 0)))
+        self._loss_fn = jax.jit(feel_model.loss_fn)
+        self._acc_fn = jax.jit(feel_model.accuracy)
+
+    # ---- one FEEL period (Steps 1-5) -------------------------------------
+    def run_period(self):
+        plan = self.scheduler.plan()
+        idx, w = self.batcher.sample(plan.batch)
+        x = jnp.asarray(self.data.x[idx])            # (K, slot, D)
+        y = jnp.asarray(self.data.y[idx])
+        wj = jnp.asarray(w)
+
+        loss_before = float(self._loss_fn(
+            self.params, x.reshape(-1, x.shape[-1]), y.reshape(-1),
+            wj.reshape(-1)))
+
+        if self.local_steps == 1:
+            grads = self._grad_fn(self.params, x, y, wj)  # leading K axis
+        else:
+            # tau>1: per-device local SGD; upload the cumulative update
+            # (parameter delta) as the "gradient" (paper §VII extension)
+            dev_params = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (self.batcher.k,) + a.shape),
+                self.params)
+            for _ in range(self.local_steps):
+                g = jax.vmap(jax.grad(feel_model.loss_fn))(
+                    dev_params, x, y, wj)
+                dev_params = jax.tree_util.tree_map(
+                    lambda p, gg: p - plan.lr * gg, dev_params, g)
+            grads = jax.tree_util.tree_map(
+                lambda p0, pk: (p0[None] - pk) / plan.lr,
+                self.params, dev_params)
+        if self.compress:
+            grads, self.residuals = compress_dense(
+                grads, self.scheduler.compression, self.residuals)
+        # eq. (1): weighted average by B_k
+        bk = jnp.asarray(plan.batch, jnp.float32)
+        wk = bk / jnp.sum(bk)
+        agg = jax.tree_util.tree_map(
+            lambda g: jnp.tensordot(wk, g, axes=1), grads)
+        self.params = jax.tree_util.tree_map(
+            lambda p, g: p - plan.lr * g, self.params, agg)
+
+        loss_after = float(self._loss_fn(
+            self.params, x.reshape(-1, x.shape[-1]), y.reshape(-1),
+            wj.reshape(-1)))
+        self.scheduler.observe(loss_before - loss_after, plan.global_batch)
+        return plan, loss_after
+
+    def run(self, periods: int, eval_every: int = 10) -> RunResult:
+        res = RunResult(scheme=f"feel/{self.policy}")
+        t = 0.0
+        for p in range(periods):
+            plan, loss = self.run_period()
+            # tau local steps multiply the local-compute subperiod
+            extra = (self.local_steps - 1) * max(
+                d.local_grad_latency(b) for d, b
+                in zip(self.devices, plan.batch))
+            t += plan.predicted_latency + extra
+            if p % eval_every == 0 or p == periods - 1:
+                acc = float(self._acc_fn(self.params,
+                                         jnp.asarray(self.test.x),
+                                         jnp.asarray(self.test.y)))
+                res.losses.append(loss)
+                res.accs.append(acc)
+                res.times.append(t)
+                res.global_batches.append(plan.global_batch)
+        return res
+
+
+# ---------------------------------------------------------------------------
+# Table-II scheme comparison
+# ---------------------------------------------------------------------------
+
+
+def _epoch_latency(devices, parts, batch, rates_up, rates_down, s_bits,
+                   frame_up, frame_down, upload: bool) -> float:
+    """Latency of one local epoch (+ optional sync upload/download)."""
+    t_local = np.array([
+        d.local_grad_latency(batch) * max(1, len(p) // batch)
+        for d, p in zip(devices, parts)])
+    if not upload:
+        return float(np.max(t_local))
+    K = len(devices)
+    tau_u = np.full(K, frame_up / K)
+    tau_d = np.full(K, frame_down / K)
+    t_up = uplink_latency(s_bits, tau_u, frame_up, rates_up)
+    t_down = uplink_latency(s_bits, tau_d, frame_down, rates_down)
+    t_upd = np.array([d.update_latency() for d in devices])
+    return period_latency(t_local, t_up, t_down, t_upd)
+
+
+def run_scheme(scheme: str, devices, data: ClassificationData,
+               test: ClassificationData, partition: str, periods: int,
+               seed: int = 0, b_max: int = 128, base_lr: float = 0.05,
+               eval_every: int = 10) -> RunResult:
+    """Run one Table-II scheme end-to-end and return its trajectory."""
+    if scheme in ("feel", "proposed"):
+        sim = FeelSimulation(devices, data, test, partition=partition,
+                             policy="proposed", compress=True, b_max=b_max,
+                             base_lr=base_lr, seed=seed)
+        return sim.run(periods, eval_every)
+    if scheme == "gradient_fl":
+        sim = FeelSimulation(devices, data, test, partition=partition,
+                             policy="full", compress=True, b_max=b_max,
+                             base_lr=base_lr, seed=seed)
+        r = sim.run(periods, eval_every)
+        r.scheme = "gradient_fl"
+        return r
+
+    # individual / model_fl need per-device parameter copies
+    k = len(devices)
+    parts = (partition_iid(len(data.y), k, seed) if partition == "iid"
+             else partition_noniid(data.y, k, seed=seed))
+    key = jax.random.key(seed)
+    p0 = feel_model.init(key, input_dim=data.x.shape[1])
+    dev_params = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (k,) + a.shape).copy(), p0)
+    n_params = sum(int(np.prod(np.shape(l)))
+                   for l in jax.tree_util.tree_leaves(p0))
+    from repro.channels.model import Cell
+    cell = Cell.make(seed)
+    dist = cell.drop_users(k)
+    rng = np.random.default_rng(seed)
+    batch = min(b_max, 64)
+
+    @jax.jit
+    def local_step(params, x, y, lr):
+        g = jax.vmap(jax.grad(feel_model.loss_fn))(params, x, y)
+        return jax.tree_util.tree_map(lambda p_, g_: p_ - lr * g_, params, g)
+
+    res = RunResult(scheme=scheme)
+    t = 0.0
+    # payload: parameters, uncompressed (model-based FL uploads the model)
+    s_bits = 32.0 * n_params
+    for period in range(periods):
+        idx = np.stack([rng.choice(p, size=batch, replace=len(p) < batch)
+                        for p in parts])
+        x = jnp.asarray(data.x[idx])
+        y = jnp.asarray(data.y[idx])
+        dev_params = local_step(dev_params, x, y, base_lr)
+        rates_up = cell.avg_rate(dist)
+        rates_down = cell.avg_rate(dist)
+        if scheme == "model_fl":
+            # FedAvg: average parameters every period (1 local epoch ≈
+            # len(part)/batch mini-steps folded into the latency model)
+            dev_params = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a.mean(0), a.shape), dev_params)
+            t += _epoch_latency(devices, parts, batch, rates_up, rates_down,
+                                s_bits, cell.cfg.frame_up_s,
+                                cell.cfg.frame_down_s, upload=True)
+        else:
+            t += _epoch_latency(devices, parts, batch, rates_up, rates_down,
+                                s_bits, cell.cfg.frame_up_s,
+                                cell.cfg.frame_down_s, upload=False)
+        if period % eval_every == 0 or period == periods - 1:
+            avg = jax.tree_util.tree_map(lambda a: a.mean(0), dev_params)
+            acc = float(feel_model.accuracy(avg, jnp.asarray(test.x),
+                                            jnp.asarray(test.y)))
+            loss = float(feel_model.loss_fn(avg, jnp.asarray(test.x),
+                                            jnp.asarray(test.y)))
+            res.losses.append(loss)
+            res.accs.append(acc)
+            res.times.append(t)
+            res.global_batches.append(batch * k)
+    return res

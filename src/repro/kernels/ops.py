@@ -1,0 +1,130 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Backend selection: on TPU the compiled Pallas kernel runs; elsewhere the
+wrapper falls back to the jnp oracle (CPU dry-runs lower pure-XLA HLO) or,
+when ``interpret=True`` is forced, executes the kernel body in Python —
+that is how tests validate the kernels on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import sbc as _sbc
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, pos_q=None, pos_k=None, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    """q: (B,S,Hq,hd); k/v: (B,S,Hkv,hd) — GQA groups expanded internally.
+
+    Positions are assumed contiguous from 0 (full-sequence train/prefill).
+    """
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hq, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hq, S, hd)
+    use_interp = (not _on_tpu()) if interpret is None else interpret
+    if interpret is None and not _on_tpu():
+        out = _ref.attention_ref(qf, kf, vf, causal=causal, window=window)
+    else:
+        out = _fa.flash_attention_bhsd(
+            qf, kf, vf, causal=causal, window=window,
+            block_q=min(block_q, S), block_k=min(block_k, S),
+            interpret=use_interp)
+    return out.reshape(B, Hq, S, hd).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# flash decode (one token vs long cache)
+# ---------------------------------------------------------------------------
+
+
+def flash_decode(q, k, v, pos, *, window=None, block_s: int = 512,
+                 interpret: Optional[bool] = None):
+    """q: (B,1,Hq,hd); k/v caches: (B,ctx,Hkv,hd); pos: scalar."""
+    from repro.kernels import flash_decode as _fd
+    B, _, Hq, hd = q.shape
+    ctx, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, 1, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hq, ctx, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hq, ctx, hd)
+    if interpret is None and not _on_tpu():
+        out = _ref.decode_attention_ref(qf, kf, vf, pos, window=window)
+    else:
+        out = _fd.flash_decode_bhd(
+            qf, kf, vf, pos, window=window, block_s=min(block_s, ctx),
+            interpret=bool(interpret) if interpret is not None else False)
+    return out.reshape(B, Hq, 1, hd).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256,
+        interpret: Optional[bool] = None):
+    if interpret is None and not _on_tpu():
+        return _ref.ssd_ref(x, dt, A, Bm, Cm, chunk)
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=min(chunk, x.shape[1]),
+                         interpret=bool(interpret) if interpret is not None
+                         else False)
+
+
+# ---------------------------------------------------------------------------
+# SBC compression
+# ---------------------------------------------------------------------------
+
+
+def sbc_compress(x, ratio: float = 0.005, *, block: int = 65536,
+                 interpret: Optional[bool] = None):
+    """Dense SBC approximation of one tensor via the kernel pipeline."""
+    if interpret is None and not _on_tpu():
+        return _ref.sbc_ref(x, ratio)
+    interp = bool(interpret) if interpret is not None else False
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    block = min(block, max(8, 1 << (n - 1).bit_length()))
+    pad = (-n) % block
+    fp = jnp.pad(flat, (0, pad))
+    k = max(1, int(round(n * ratio)))
+    thr = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    stats = _sbc.sbc_stats(fp, thr[None], block=block, interpret=interp)[0]
+    pos_sum, neg_sum, pos_cnt, neg_cnt = stats
+    use_pos = pos_sum >= neg_sum
+    mean_mag = jnp.where(use_pos,
+                         pos_sum / jnp.maximum(pos_cnt, 1.0),
+                         neg_sum / jnp.maximum(neg_cnt, 1.0))
+    scalars = jnp.stack([thr,
+                         jnp.where(use_pos, mean_mag, 0.0),
+                         jnp.where(use_pos, 0.0, -mean_mag)])
+    out = _sbc.sbc_apply(fp, scalars, block=block, interpret=interp)
+    return out[:n].reshape(x.shape).astype(x.dtype)

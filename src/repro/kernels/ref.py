@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression.sbc import sbc_tensor as sbc_ref          # noqa: F401
+from repro.models.mamba2 import ssd_reference                     # noqa: F401
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None):
+    """q,k,v: (BH, S, hd) -> (BH, S, hd); plain softmax attention."""
+    BH, S, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, chunk: int = 256):
+    """Returns y only (kernel contract)."""
+    y, _ = ssd_reference(x, dt, A, Bm, Cm, min(chunk, x.shape[1]))
+    return y
+
+
+def decode_attention_ref(q, k, v, pos, *, window: Optional[int] = None):
+    """q: (BH,1,hd); k/v: (BH,ctx,hd); pos scalar — one-token attention
+    over valid cache slots (ring-buffer aware when ``window``)."""
+    BH, ctx, hd = k.shape
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    idx = jnp.arange(ctx)
+    if window is not None:
+        key_pos = pos - ((pos - idx) % ctx)
+        valid = (key_pos >= 0) & (key_pos <= pos) & (key_pos > pos - window)
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,97 @@
+"""Sparse-binary-compression kernels (TPU Pallas): the paper's uplink
+compression hot-spot (Step 2, [24]) as a two-kernel pipeline.
+
+  * ``sbc_stats``   — tiled reduction: per-block partial sums/counts of
+    positive/negative magnitudes above a threshold (grid over 1-D blocks,
+    scratch accumulators, flushed on the last block).
+  * ``sbc_apply``   — tiled map: binarize survivors to ±mean-magnitude.
+
+The global top-k threshold itself stays in XLA (jax.lax.top_k): a sort is
+not a Pallas-shaped problem on TPU — the *bandwidth-bound streaming passes*
+are, which is exactly what these kernels tile.  Composition + oracle:
+kernels/ops.py vs compression.sbc.sbc_tensor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stats_kernel(x_ref, thr_ref, o_ref, acc_ref, *, nb: int):
+    bi = pl.program_id(0)
+
+    @pl.when(bi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    thr = thr_ref[0]
+    mag = jnp.abs(x)
+    keep = mag >= thr
+    pos = keep & (x > 0)
+    neg = keep & (x < 0)
+    acc_ref[0, 0] += jnp.sum(jnp.where(pos, mag, 0.0))
+    acc_ref[0, 1] += jnp.sum(jnp.where(neg, mag, 0.0))
+    acc_ref[0, 2] += jnp.sum(pos.astype(jnp.float32))
+    acc_ref[0, 3] += jnp.sum(neg.astype(jnp.float32))
+
+    @pl.when(bi == nb - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def sbc_stats(x_flat, thr, *, block: int = 65536, interpret: bool = False):
+    """x_flat: (n,) padded to block multiple; returns (1,4) f32
+    [pos_sum, neg_sum, pos_cnt, neg_cnt]."""
+    n = x_flat.shape[0]
+    assert n % block == 0
+    nb = n // block
+    return pl.pallas_call(
+        functools.partial(_stats_kernel, nb=nb),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda b: (b,)),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 4), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 4), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, 4), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x_flat, thr)
+
+
+def _apply_kernel(x_ref, sc_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    thr, val_pos, val_neg = sc_ref[0], sc_ref[1], sc_ref[2]
+    mag = jnp.abs(x)
+    keep = mag >= thr
+    out = jnp.where(keep & (x > 0), val_pos,
+                    jnp.where(keep & (x < 0), val_neg, 0.0))
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def sbc_apply(x_flat, scalars, *, block: int = 65536,
+              interpret: bool = False):
+    """scalars: (3,) f32 [thr, val_pos, val_neg] (val for dropped group = 0)."""
+    n = x_flat.shape[0]
+    assert n % block == 0
+    nb = n // block
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda b: (b,)),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x_flat.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x_flat, scalars)

@@ -1,0 +1,208 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) and
+extract roofline terms.  MUST set the placeholder device count before any
+other import — jax locks the device count on first init."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import re              # noqa: E402
+import sys             # noqa: E402
+import time            # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ASSIGNED, get_arch, get_shape, SHAPES  # noqa: E402
+from repro.fed.train_step import (TrainState, input_specs,       # noqa: E402
+                                  make_prefill_step, make_serve_step,
+                                  make_train_step)
+from repro.launch.mesh import make_production_mesh               # noqa: E402
+from repro.launch import sharding as shd                         # noqa: E402
+from repro.launch import hlo_cost                                # noqa: E402
+from repro.models.model import Runtime, param_spec               # noqa: E402
+from repro.optim import momentum                                 # noqa: E402
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+# long-context policy (DESIGN.md §5): full-attention GQA archs use the
+# sliding-window variant at 500k; MLA/SSM/hybrid run natively.
+LONG_CTX_WINDOW = 8192
+
+def runtime_for(cfg, shape, multi_pod: bool = False):
+    window = None
+    if (shape.name == "long_500k" and cfg.attn_kind == "gqa"
+            and cfg.n_heads and cfg.family not in ("ssm",)):
+        window = LONG_CTX_WINDOW
+    return Runtime(dtype=jnp.bfloat16, attn_impl="blockwise", block_q=512,
+                   window=window, remat=(shape.mode == "train"),
+                   moe_shard_axes=(("pod", "data") if multi_pod
+                                   else ("data",)))
+
+
+# ---------------------------------------------------------------------------
+# model-flops accounting
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch        # decode: one token
+
+
+# ---------------------------------------------------------------------------
+# the dry run
+# ---------------------------------------------------------------------------
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod: bool, rt=None,
+               opt=None, zero1: bool = False):
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    rt = rt or runtime_for(cfg, shape, multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    specs = input_specs(cfg, shape, rt)
+    pspec = param_spec(cfg, rt.dtype)
+
+    with mesh:
+        if shape.mode == "train":
+            opt = opt or momentum(0.9)
+            state_spec = jax.eval_shape(
+                lambda: TrainState(pspec, opt.init(pspec),
+                                   jnp.zeros((), jnp.int32)))
+            step = make_train_step(cfg, rt, opt)
+            st_sh = (shd.state_shardings_zero1(mesh, state_spec) if zero1
+                     else shd.state_shardings(mesh, state_spec))
+            in_sh = (st_sh, shd.batch_shardings(mesh, specs), None)
+            out_sh = (st_sh, None)
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh, donate_argnums=(0,)
+                              ).lower(state_spec, specs, 1e-2)
+        elif shape.mode == "prefill":
+            step = make_prefill_step(cfg, rt)
+            nd = 4 if cfg.n_codebooks > 1 else 3
+            from repro.models.layers import padded_vocab
+            lsh = shd.logits_sharding(mesh, nd, shape.global_batch,
+                                      padded_vocab(cfg.vocab))
+            in_sh = (shd.params_shardings(mesh, pspec),
+                     shd.batch_shardings(mesh, specs))
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=lsh).lower(pspec, specs)
+        else:  # decode
+            step = make_serve_step(cfg, rt)
+            nd = 4 if cfg.n_codebooks > 1 else 3
+            from repro.models.layers import padded_vocab
+            lsh = shd.logits_sharding(mesh, nd, shape.global_batch,
+                                      padded_vocab(cfg.vocab))
+            cache_sh = shd.cache_shardings(mesh, specs["cache"])
+            tok_sh = shd.decode_input_shardings(mesh, specs)["tokens"]
+            in_sh = (shd.params_shardings(mesh, pspec), cache_sh, tok_sh)
+            out_sh = (lsh, cache_sh)
+            lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=(1,)
+                              ).lower(pspec, specs["cache"], specs["tokens"])
+    return cfg, shape, mesh, lowered
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             collect: bool = True, rt=None, opt=None,
+             zero1: bool = False) -> dict:
+    t0 = time.time()
+    cfg, shape, mesh, lowered = lower_pair(arch, shape_name, multi_pod,
+                                           rt=rt, opt=opt, zero1=zero1)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    chips = 512 if multi_pod else 256
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:                                    # noqa: BLE001
+        mem_info = {"error": str(e)}
+
+    # structural cost with while-loop trip counts (hlo_cost.py)
+    totals = hlo_cost.analyze(compiled.as_text())
+    flops = totals.flops
+    bytes_acc = totals.bytes
+    coll_bytes, coll_by_op = totals.collective_bytes, totals.collective_by_op
+
+    mf = model_flops(cfg, shape)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    coll_s = coll_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "mode": shape.mode,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll_bytes,
+        "collective_by_op": coll_by_op,
+        "memory": mem_info,
+        **terms,
+        "dominant": dominant,
+        "model_flops_total": mf,
+        "useful_flops_ratio": (mf / (chips * flops)) if flops else None,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    results = []
+    for a in archs:
+        for s in shapes:
+            try:
+                r = run_pair(a, s, args.multi_pod)
+                print(f"[dryrun] {a} x {s} x {r['mesh']}: OK "
+                      f"dominant={r['dominant']} "
+                      f"compute={r['compute_s']:.3e}s "
+                      f"memory={r['memory_s']:.3e}s "
+                      f"collective={r['collective_s']:.3e}s "
+                      f"(compile {r['compile_s']}s)", flush=True)
+            except Exception as e:                            # noqa: BLE001
+                r = {"arch": a, "shape": s,
+                     "mesh": "2x16x16" if args.multi_pod else "16x16",
+                     "error": f"{type(e).__name__}: {e}"}
+                print(f"[dryrun] {a} x {s}: FAIL {r['error']}",
+                      flush=True)
+            results.append(r)
+    if args.out:
+        with open(args.out, "w") as f:
+            for r in results:
+                f.write(json.dumps(r) + "\n")
+    fails = [r for r in results if "error" in r]
+    print(f"[dryrun] {len(results) - len(fails)}/{len(results)} OK")
+    sys.exit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,331 @@
+"""Structural cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop (lax.scan) body ONCE —
+useless for scanned layer stacks.  This parser rebuilds the three roofline
+inputs with loop trip counts applied:
+
+  * FLOPs   — 2·M·N·K for every ``dot`` (contracting dims from the HLO
+    attributes), + 1/elem for arithmetic elementwise/reduce ops.
+  * HBM bytes — anchor-op fusion model: only ops that force HBM
+    round-trips on TPU count traffic (dot/conv, reduce, dynamic-(update-)
+    slice, gather/scatter, copy/concatenate/sort, collectives) — result +
+    operand bytes each.  Elementwise / broadcast / convert / select chains
+    are treated as fused into their anchors (zero traffic), matching what
+    the TPU backend actually emits; the CPU backend we parse materializes
+    them, so counting them would overstate the memory term ~10×.
+  * Collective bytes — result bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute ops.
+
+While-loop trip counts come from XLA's ``known_trip_count`` backend config
+(always present for lax.scan loops).  Validated against
+``cost_analysis()`` on loop-free modules in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e4m3": 1, "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4,
+                "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "token": 0, "opaque": 0}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ARITH = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+          "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "negate",
+          "abs", "floor", "ceil", "sign", "cosine", "sine", "logistic",
+          "expm1", "log1p", "atan2", "remainder"}
+
+# ops whose operands+results are real HBM traffic on TPU (everything else
+# is assumed fused into one of these anchors); `fusion` counts its RESULT
+# only — operand reads are attributed to the producing op's write.
+# Collectives are accounted in the collective term, not HBM bytes.
+_BYTE_ANCHORS = {"dot", "convolution", "reduce", "reduce-window",
+                 "dynamic-slice", "dynamic-update-slice", "gather",
+                 "scatter", "copy", "concatenate", "sort", "fusion",
+                 "custom-call", "rng-bit-generator", "pad"}
+_RESULT_ONLY = {"fusion"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        nb = _DTYPE_BYTES.get(m.group(1))
+        if nb is None:
+            continue
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+def _dims_of(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+# tuple shapes may carry /*index=N*/ comments — allow anything but parens
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^()]*\))|(?:\S+))\s+"
+    r"([\w\-]+)\(")
+# fallback for nested-tuple shapes (e.g. while carries holding pytrees):
+# non-greedy shape up to the op token — accepted only for known ops
+_INSTR_FALLBACK_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\(")
+_FALLBACK_OPS = {"while", "fusion", "call", "conditional", "custom-call",
+                 "dot", "copy", "tuple", "get-tuple-element", "dynamic-slice",
+                 "dynamic-update-slice", "all-reduce", "all-gather",
+                 "reduce-scatter", "all-to-all", "collective-permute",
+                 "all-reduce-start", "all-gather-start", "optimization-barrier"}
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        cm = _COMP_RE.match(line)
+        if cm:
+            cur = Computation(cm.group(2))
+            comps[cur.name] = cur
+            if cm.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            fm = _INSTR_FALLBACK_RE.match(line)
+            if fm and fm.group(3) in _FALLBACK_OPS:
+                im = fm
+        if im:
+            ins = Instr(im.group(1), im.group(2), im.group(3), line)
+            cur.instrs.append(ins)
+            cur.shapes["%" + ins.name] = ins.shape
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    res = _dims_of(ins.shape)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    pos = ins.line.find(f" {ins.op}(")
+    om = re.search(r"\(([^)]*)\)", ins.line[pos:]) if pos >= 0 else None
+    if not om:
+        return 0.0
+    operands = [o.strip() for o in om.group(1).split(",")]
+    lhs = operands[0] if operands else None
+    lhs_shape = comp.shapes.get(lhs, "")
+    lhs_dims = _dims_of(lhs_shape)
+    k = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            di = int(d)
+            if di < len(lhs_dims):
+                k *= lhs_dims[di]
+    out = 1
+    for d in res:
+        out *= d
+    return 2.0 * out * k
+
+
+def _operands(ins: Instr):
+    pos = ins.line.find(f" {ins.op}(")
+    om = re.search(r"\(([^)]*)\)", ins.line[pos:]) if pos >= 0 else None
+    if not om:
+        return []
+    return [o.strip() for o in om.group(1).split(",") if o.strip()]
+
+
+def _instr_bytes(ins: Instr, comp: Computation, comps) -> float:
+    """HBM bytes of one anchor instruction.
+
+    dynamic-update-slice writes only the slice (the buffer is aliased), so
+    it costs 2×update — the same applies to a fusion whose root is a DUS
+    (the lax.scan stacking pattern: counting the whole stacked buffer per
+    iteration would overstate traffic by the layer count).
+    """
+    base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+    ops_ = _operands(ins)
+    if base == "dynamic-update-slice":
+        upd = comp.shapes.get(ops_[1], "") if len(ops_) > 1 else ""
+        return 2.0 * shape_bytes(upd)
+    if base == "fusion":
+        fm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+        callee = comps.get(fm.group(1)) if fm else None
+        if callee and callee.instrs:
+            root = callee.instrs[-1]
+            # a DUS anywhere in the fused computation whose result shape
+            # matches the fusion result = in-place stack update (the
+            # lax.scan remat-stash pattern, possibly behind a bitcast)
+            for ei in callee.instrs:
+                if (ei.op == "dynamic-update-slice"
+                        and _SHAPE_RE.search(ei.shape)
+                        and ei.shape.split("{")[0] ==
+                        ins.shape.split("{")[0]):
+                    eops = _operands(ei)
+                    upd = (callee.shapes.get(eops[1], "")
+                           if len(eops) > 1 else "")
+                    if upd:
+                        return 2.0 * shape_bytes(upd)
+            if root.op == "dynamic-update-slice":
+                rops = _operands(root)
+                upd = callee.shapes.get(rops[1], "") if len(rops) > 1 else ""
+                if upd:
+                    return 2.0 * shape_bytes(upd)
+            if root.op == "tuple":
+                # per-element: DUS elements cost 2x their update slice
+                by_name = {i.name: i for i in callee.instrs}
+                b = 0.0
+                for o in _operands(root):
+                    ei = by_name.get(o.lstrip("%"))
+                    if ei is not None and ei.op == "dynamic-update-slice":
+                        eops = _operands(ei)
+                        upd = (callee.shapes.get(eops[1], "")
+                               if len(eops) > 1 else "")
+                        b += 2.0 * shape_bytes(upd)
+                    elif ei is not None:
+                        b += shape_bytes(ei.shape)
+                    else:
+                        b += shape_bytes(callee.shapes.get(o, ""))
+                return b
+        return shape_bytes(ins.shape)            # result only
+    b = shape_bytes(ins.shape)
+    for o in ops_:
+        if o.startswith("%"):
+            b += shape_bytes(comp.shapes.get(o, ""))
+    return b
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_op: Dict[str, float] = field(default_factory=dict)
+
+    def scaled(self, f: float) -> "CostTotals":
+        return CostTotals(self.flops * f, self.bytes * f,
+                          self.collective_bytes * f,
+                          {k: v * f for k, v in self.collective_by_op.items()})
+
+    def add(self, o: "CostTotals"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.collective_by_op.items():
+            self.collective_by_op[k] = self.collective_by_op.get(k, 0) + v
+
+
+def analyze(text: str) -> CostTotals:
+    comps, entry = parse_module(text)
+    if entry is None:
+        return CostTotals()
+    memo: Dict[Tuple[str, bool], CostTotals] = {}
+
+    def visit(name: str, fused: bool, stack) -> CostTotals:
+        key = (name, fused)
+        if key in memo:
+            return memo[key]
+        if name not in comps or name in stack:
+            return CostTotals()
+        comp = comps[name]
+        tot = CostTotals()
+        for ins in comp.instrs:
+            op = ins.op
+            base = op[:-6] if op.endswith("-start") else op
+            if op.endswith("-done"):
+                continue
+            # flops
+            if base == "dot":
+                tot.flops += _dot_flops(ins, comp)
+            elif base in _ARITH:
+                tot.flops += shape_elems(ins.shape)
+            elif base == "reduce":
+                # approx: one op per input element
+                om = re.search(r"reduce\(([^)]*)\)", ins.line)
+                if om:
+                    first = om.group(1).split(",")[0].strip()
+                    tot.flops += shape_elems(comp.shapes.get(first, ""))
+            # collectives.  The CPU backend's AllReducePromotion pass
+            # upcasts bf16 all-reduces to f32 (to_apply=%..._promoted);
+            # TPUs reduce in bf16 natively, so promoted ARs are counted
+            # at their un-promoted width.
+            if base in _COLLECTIVES:
+                b = shape_bytes(ins.shape)
+                if "promoted" in ins.line and "f32" in ins.shape:
+                    b /= 2.0
+                tot.collective_bytes += b
+                tot.collective_by_op[base] = \
+                    tot.collective_by_op.get(base, 0.0) + b
+            # bytes (top level, anchor ops only — see module docstring)
+            if not fused and base in _BYTE_ANCHORS:
+                b = _instr_bytes(ins, comp, comps)
+                tot.bytes += b
+            # recursion
+            if base == "fusion":
+                fm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                if fm:
+                    sub = visit(fm.group(1), True, stack | {name})
+                    tot.flops += sub.flops
+                    tot.collective_bytes += sub.collective_bytes
+                    for k, v in sub.collective_by_op.items():
+                        tot.collective_by_op[k] = \
+                            tot.collective_by_op.get(k, 0) + v
+            elif base == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                tm = re.search(r'known_trip_count.\s*:\s*.\s*"n"\s*:\s*"?(\d+)',
+                               ins.line)
+                trips = int(tm.group(1)) if tm else 1
+                if bm:
+                    sub = visit(bm.group(1), False, stack | {name})
+                    tot.add(sub.scaled(trips))
+            elif base in ("call", "conditional", "async-start"):
+                for fm in re.finditer(
+                        r"(?:calls|branch_computations)=\{?%?([\w\.\-, %]+)",
+                        ins.line):
+                    for cn in re.findall(r"[\w\.\-]+", fm.group(1)):
+                        sub = visit(cn, fused, stack | {name})
+                        tot.add(sub)
+        memo[key] = tot
+        return tot
+
+    return visit(entry, False, frozenset())

@@ -1,0 +1,29 @@
+"""Production mesh builders (function, not module constant — importing this
+module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke runs (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Every axis that carries the batch (all but 'model')."""
+    return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def data_size(mesh) -> int:
+    out = 1
+    for n in data_axes(mesh):
+        out *= mesh.shape[n]
+    return out

@@ -1,0 +1,104 @@
+"""§Perf hillclimb driver: re-lower a (arch × shape) pair under candidate
+optimizations and report the roofline-term deltas (EXPERIMENTS.md §Perf).
+
+Usage:
+  python -m repro.launch.perf --arch qwen1.5-4b --shape train_4k \
+      --variants baseline,flashjnp,seq_parallel,flashjnp+seq_parallel
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.launch.dryrun import run_pair, runtime_for  # noqa: E402
+from repro.configs import get_arch, get_shape          # noqa: E402
+from repro.optim import momentum                       # noqa: E402
+
+
+def build(variant: str, cfg, shape, multi_pod: bool = False):
+    """variant: '+'-joined knobs -> (rt, opt, zero1)."""
+    rt = runtime_for(cfg, shape, multi_pod)
+    opt = None
+    zero1 = False
+    for knob in variant.split("+"):
+        if knob in ("baseline", ""):
+            continue
+        elif knob == "flashjnp":
+            rt = dataclasses.replace(rt, attn_impl="flashjnp")
+        elif knob == "blockwise":
+            rt = dataclasses.replace(rt, attn_impl="blockwise")
+        elif knob == "seq_parallel":
+            rt = dataclasses.replace(rt, seq_parallel=True)
+        elif knob == "no_remat":
+            rt = dataclasses.replace(rt, remat=False)
+        elif knob == "remat_attn":
+            rt = dataclasses.replace(rt, remat_attn=True)
+        elif knob == "opt_bf16":
+            opt = momentum(0.9, state_dtype=jnp.bfloat16)
+        elif knob == "zero1":
+            zero1 = True
+        elif knob == "cap1.0":
+            rt = dataclasses.replace(rt, capacity_factor=1.0)
+        elif knob == "expert_choice":
+            rt = dataclasses.replace(rt, moe_impl="expert_choice")
+        elif knob == "gqa_expand":
+            rt = dataclasses.replace(rt, gqa_expand=True)
+        elif knob.startswith("window"):
+            rt = dataclasses.replace(rt, window=int(knob[6:]))
+        elif knob.startswith("blockq"):
+            rt = dataclasses.replace(rt, block_q=int(knob[6:]))
+        else:
+            raise ValueError(f"unknown knob {knob!r}")
+    return rt, opt, zero1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    shape = get_shape(args.shape)
+    results = []
+    base = None
+    for variant in args.variants.split(","):
+        rt, opt, zero1 = build(variant, cfg, shape, args.multi_pod)
+        try:
+            r = run_pair(args.arch, args.shape, args.multi_pod, rt=rt,
+                         opt=opt, zero1=zero1)
+            r["variant"] = variant
+            if variant == "baseline":
+                base = r
+            d = ""
+            if base is not None and r is not base:
+                d = ("  Δcompute={:+.1%} Δmemory={:+.1%} Δcoll={:+.1%}"
+                     .format(r["compute_s"] / base["compute_s"] - 1,
+                             r["memory_s"] / base["memory_s"] - 1,
+                             (r["collective_s"] / base["collective_s"] - 1)
+                             if base["collective_s"] else 0.0))
+            peak = (r.get("memory") or {}).get("temp_bytes")
+            print(f"[perf] {args.arch} x {args.shape} [{variant}]: "
+                  f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s"
+                  f" coll={r['collective_s']:.3e}s"
+                  f" temp={peak/1e9 if peak else 0:.1f}GB{d}", flush=True)
+        except Exception as e:                             # noqa: BLE001
+            r = {"variant": variant, "arch": args.arch,
+                 "shape": args.shape, "error": f"{type(e).__name__}: {e}"}
+            print(f"[perf] {variant}: FAIL {r['error']}", flush=True)
+        results.append(r)
+    if args.out:
+        with open(args.out, "a") as f:
+            for r in results:
+                f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

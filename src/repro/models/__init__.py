@@ -1,0 +1,5 @@
+from repro.models.model import (Runtime, SMOKE_RT, init, param_spec, forward,
+                                init_cache, cache_spec, decode_step)
+
+__all__ = ["Runtime", "SMOKE_RT", "init", "param_spec", "forward",
+           "init_cache", "cache_spec", "decode_step"]

@@ -1,0 +1,369 @@
+"""Attention: GQA (optional QKV bias / sliding window) and MLA.
+
+Train/prefill paths are full-sequence causal; the decode path consumes a
+KV cache and one new token per sequence.  The q-chunked implementation
+bounds the materialized logits to (B, H, block_q, S) — this is the memory
+shape XLA sees, so the roofline memory term stays honest at long context.
+On TPU the Pallas flash kernel (repro.kernels.flash_attention) is used
+instead; both agree with the naive oracle (test-covered).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+
+def _mask(pos_q, pos_k, causal: bool, window: Optional[int]):
+    """(Sq, Sk) boolean: True = attend."""
+    m = jnp.ones((pos_q.shape[0], pos_k.shape[0]), bool)
+    if causal:
+        m &= pos_k[None, :] <= pos_q[:, None]
+    if window is not None:
+        m &= pos_k[None, :] > pos_q[:, None] - window
+    return m
+
+
+def attend_naive(q, k, v, pos_q, pos_k, *, causal=True, window=None):
+    """q: (B,Sq,Hq,hd), k/v: (B,Sk,Hkv,hd_v?) -> (B,Sq,Hq,hd_v).
+
+    QK and PV products run in the storage dtype with f32 accumulation
+    (preferred_element_type) — materializing f32 score/probability tiles
+    would double the dominant memory-roofline traffic (§Perf cycle C2).
+    Softmax itself is computed in f32.
+    """
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(_mask(pos_q, pos_k, causal, window), logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def attend_chunked(q, k, v, pos_q, pos_k, *, causal=True, window=None,
+                   block_q: int = 256, remat_chunks: bool = False):
+    """Exact attention, scanning over query chunks to bound live memory.
+
+    ``remat_chunks`` checkpoints each chunk's score/softmax so the scan's
+    backward recomputes probability tiles instead of stacking the full
+    (nq, B, H, bq, S) = S^2 probability tensor as residuals — the
+    dominant memory-roofline term for long-sequence training (§Perf C3).
+    """
+    B, Sq, Hq, hd = q.shape
+    if Sq % block_q != 0:
+        return attend_naive(q, k, v, pos_q, pos_k, causal=causal, window=window)
+    nq = Sq // block_q
+    qc = q.reshape(B, nq, block_q, Hq, hd).swapaxes(0, 1)       # (nq,B,bq,H,hd)
+    pc = pos_q.reshape(nq, block_q)
+
+    chunk_fn = partial(attend_naive, causal=causal, window=window)
+    if remat_chunks:
+        chunk_fn = jax.checkpoint(chunk_fn, static_argnums=())
+
+    def body(_, qp):
+        qi, pi = qp
+        o = chunk_fn(qi, k, v, pi, pos_k)
+        return None, o
+
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    return out.swapaxes(0, 1).reshape(B, Sq, Hq, v.shape[-1])
+
+
+def attend_flashjnp(q, k, v, pos_q, pos_k, *, causal=True, window=None,
+                    block_q: int = 256, block_k: int = 512):
+    """Online-softmax (flash) attention in pure jnp: double scan over
+    (q blocks x kv blocks) carrying (acc, m, l).  Only (bq, bk) score
+    tiles are ever live — XLA fuses the tile chain, so the HLO's memory
+    traffic drops from O(S^2) materialized logits to O(S^2/bk) tile
+    reads (hillclimb #3, EXPERIMENTS.md §Perf)."""
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    if Sq % block_q or Sk % block_k:
+        return attend_chunked(q, k, v, pos_q, pos_k, causal=causal,
+                              window=window, block_q=block_q)
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qb = q.reshape(B, nq, block_q, Hkv, g, hd).swapaxes(0, 1)
+    pqb = pos_q.reshape(nq, block_q)
+    kb = k.reshape(B, nk, block_k, Hkv, hd).swapaxes(0, 1)
+    vb = v.reshape(B, nk, block_k, Hkv, hd).swapaxes(0, 1)
+    pkb = pos_k.reshape(nk, block_k)
+
+    def q_step(_, qp):
+        qi, pq = qp                                 # (B,bq,Hkv,g,hd), (bq,)
+
+        def kv_step(carry, kvp):
+            acc, m, l = carry
+            ki, vi, pk = kvp
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(pq, pk, causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, Hkv, g, block_q, hd), jnp.float32)
+        m0 = jnp.full((B, Hkv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, block_q), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      (kb, vb, pkb))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B,Hkv,g,bq,hd) -> (B,bq,Hq,hd)
+        return None, out.transpose(0, 3, 1, 2, 4).reshape(
+            B, block_q, Hq, hd).astype(q.dtype)
+
+    _, ob = jax.lax.scan(q_step, None, (qb, pqb))
+    return ob.swapaxes(0, 1).reshape(B, Sq, Hq, hd)
+
+
+def attend(q, k, v, pos_q, pos_k, *, causal=True, window=None, impl="auto",
+           block_q=256, remat_chunks=False):
+    if impl == "naive" or (impl == "auto" and q.shape[1] <= 1024):
+        return attend_naive(q, k, v, pos_q, pos_k, causal=causal, window=window)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window)
+    if impl == "flashjnp":
+        return attend_flashjnp(q, k, v, pos_q, pos_k, causal=causal,
+                               window=window, block_q=block_q)
+    return attend_chunked(q, k, v, pos_q, pos_k, causal=causal, window=window,
+                          block_q=block_q, remat_chunks=remat_chunks)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ArchConfig, dtype):
+    hd = cfg.hd()
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def _qkv(params, cfg: ArchConfig, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.hd()
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(params, cfg: ArchConfig, x, positions, *, window=None,
+                impl="auto", remat_chunks=False, expand_heads=False):
+    """Full-sequence causal self-attention (train / prefill).
+
+    ``expand_heads``: repeat kv to the full query-head count and pin all
+    three tensors to head-dim model sharding — avoids the redundant-pair
+    all-reduces GSPMD emits for uneven GQA head counts (§Perf pair A.4).
+    """
+    q, k, v = _qkv(params, cfg, x, positions)
+    if expand_heads and cfg.n_kv_heads < cfg.n_heads:
+        from jax.sharding import PartitionSpec as P
+        g = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        spec = P(None, None, "model", None)
+        q = jax.lax.with_sharding_constraint(q, spec)
+        k = jax.lax.with_sharding_constraint(k, spec)
+        v = jax.lax.with_sharding_constraint(v, spec)
+    out = attend(q, k, v, positions, positions, causal=True,
+                 window=window, impl=impl, remat_chunks=remat_chunks)
+    return out.reshape(x.shape[0], x.shape[1], -1) @ params["wo"]
+
+
+def gqa_decode(params, cfg: ArchConfig, x, cache_k, cache_v, pos, *,
+               window=None):
+    """One-token decode, synchronized batch.
+
+    x: (B, 1, d); cache_k/v: (B, ctx, Hkv, hd) ring-buffered when ``window``
+    is set (ctx == window); ``pos``: scalar — the absolute position of the
+    new token, shared across the batch (synchronized serving; a scalar
+    index keeps the batch dim sharded under GSPMD — per-sequence dynamic
+    indices would force cache all-gathers).
+    Returns (out, new_k, new_v).
+    """
+    B = x.shape[0]
+    ctx = cache_k.shape[1]
+    q, k, v = _qkv(params, cfg, x, pos[None])
+    slot = pos % ctx if window is not None else pos
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+
+    # key absolute positions for masking (ring buffer stores absolute pos
+    # implicitly: slot i holds the latest position p ≡ i (mod ctx), p <= pos)
+    idx = jnp.arange(ctx)
+    if window is not None:
+        key_pos = pos - ((pos - idx) % ctx)
+    else:
+        key_pos = idx
+    valid = (key_pos <= pos) & (key_pos >= 0)   # >=0: slot actually written
+    if window is not None:
+        valid &= key_pos > pos - window
+
+    hd = cfg.hd()
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, cfg.n_kv_heads, g, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    # keep the cache in its storage dtype; accumulate in f32 (a cast would
+    # make XLA hoist a full-cache f32 copy out of the layer loop)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype)
+    return out @ params["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V2 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ArchConfig, dtype):
+    m = cfg.mla
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": dense_init(ks[0], cfg.d_model, m.kv_lora_rank, dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "w_kr": dense_init(ks[1], cfg.d_model, m.qk_rope_head_dim, dtype),
+        "w_uk": dense_init(ks[2], m.kv_lora_rank, H * m.qk_nope_head_dim, dtype),
+        "w_uv": dense_init(ks[3], m.kv_lora_rank, H * m.v_head_dim, dtype),
+        "wo": dense_init(ks[4], H * m.v_head_dim, cfg.d_model, dtype),
+    }
+    qdim = H * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+    if m.q_lora_rank:
+        p["w_dq"] = dense_init(ks[5], cfg.d_model, m.q_lora_rank, dtype)
+        p["q_norm"] = rmsnorm_init(m.q_lora_rank, dtype)
+        p["w_uq"] = dense_init(ks[6], m.q_lora_rank, qdim, dtype)
+    else:
+        p["w_q"] = dense_init(ks[5], cfg.d_model, qdim, dtype)
+    return p
+
+
+def _mla_q(params, cfg, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    if m.q_lora_rank:
+        q = rmsnorm(params["q_norm"], x @ params["w_dq"]) @ params["w_uq"]
+    else:
+        q = x @ params["w_q"]
+    q = q.reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(params, cfg: ArchConfig, x, positions, *, impl="auto",
+                window=None, remat_chunks=False):
+    """Full-sequence MLA (decompressed form for train/prefill)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+
+    c_kv = rmsnorm(params["kv_norm"], x @ params["w_dkv"])   # (B,S,r)
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)                       # (B,S,1,rope)
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (c_kv @ params["w_uv"]).reshape(B, S, H, m.v_head_dim)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))],
+        axis=-1)
+    out = attend(q, k, v, positions, positions, causal=True, impl=impl,
+                 window=window, remat_chunks=remat_chunks)
+    return out.reshape(B, S, H * m.v_head_dim) @ params["wo"]
+
+
+def mla_decode(params, cfg: ArchConfig, x, cache_ckv, pos):
+    """Absorbed-matrix MLA decode against the compressed cache.
+
+    cache_ckv: (B, ctx, kv_lora + qk_rope) — per-token compressed KV plus the
+    shared rope key; ``pos``: scalar (synchronized batch).  Per-step cost is
+    linear in ctx; cache is tiny (the MLA advantage), so long_500k runs
+    natively.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    r = m.kv_lora_rank
+    ctx = cache_ckv.shape[1]
+
+    q_nope, q_rope = _mla_q(params, cfg, x, pos[None])        # (B,1,H,·)
+    c_kv = rmsnorm(params["kv_norm"], x @ params["w_dkv"])    # (B,1,r)
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], pos[None],
+                        cfg.rope_theta)[:, :, 0, :]           # (B,1,rope)
+    new_entry = jnp.concatenate([c_kv, k_rope], axis=-1)
+    cache_ckv = jax.lax.dynamic_update_slice(cache_ckv, new_entry,
+                                             (0, pos, 0))
+
+    w_uk = params["w_uk"].reshape(r, H, m.qk_nope_head_dim)
+    # absorb W_UK into q: (B,H,r)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    ckv, krope = cache_ckv[..., :r], cache_ckv[..., r:]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m.qk_nope_head_dim + m.qk_rope_head_dim,
+                                       jnp.float32))
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(ckv.dtype), ckv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(krope.dtype),
+                           krope, preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(ctx) <= pos
+    logits = jnp.where(valid[None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out_lat = jnp.einsum("bhs,bsr->bhr", w.astype(ckv.dtype), ckv,
+                         preferred_element_type=jnp.float32)
+    w_uv = params["w_uv"].reshape(r, H, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", out_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    return out @ params["wo"], cache_ckv

@@ -1,0 +1,121 @@
+"""Shared model layers: init helpers, RMSNorm, RoPE, embeddings, SwiGLU FFN.
+
+Everything is functional: params are nested dicts of jnp arrays, and every
+layer is ``apply(params, x, ...) -> y``.  Layer params for the repeated
+decoder stack carry a leading ``n_layers`` axis so the forward pass can
+``lax.scan`` over them (small HLO, fast compiles, scan-friendly remat).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def stacked(keys, fn):
+    """vmap an init fn over a leading layer axis."""
+    return jax.vmap(fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]              # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding (vocab padded for even model-axis sharding)
+# ---------------------------------------------------------------------------
+
+VOCAB_PAD_MULTIPLE = 128
+
+
+def padded_vocab(vocab: int) -> int:
+    return ((vocab + VOCAB_PAD_MULTIPLE - 1) // VOCAB_PAD_MULTIPLE) * VOCAB_PAD_MULTIPLE
+
+
+def embedding_init(key, vocab: int, d: int, dtype):
+    pv = padded_vocab(vocab)
+    return {"table": (jax.random.normal(key, (pv, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x, true_vocab: int):
+    """Project to (padded) vocab logits; mask padding ids to -inf."""
+    logits = jnp.einsum("...d,vd->...v", x, params["table"])
+    pv = params["table"].shape[0]
+    if pv != true_vocab:
+        mask = jnp.arange(pv) < true_vocab
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+
+def ffn_init(key, d: int, d_ff: int, dtype, kind: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = dense_init(k1, d, d_ff, dtype)
+    return p
+
+
+def ffn(params, x):
+    if "w_gate" in params:                       # SwiGLU
+        g = jax.nn.silu(x @ params["w_gate"])
+        u = x @ params["w_up"]
+        return (g * u) @ params["w_down"]
+    return jax.nn.gelu(x @ params["w_up"]) @ params["w_down"]

@@ -1,0 +1,183 @@
+"""Mamba2 block — SSD (state-space duality, arXiv:2405.21060).
+
+Train path: chunked SSD scan (intra-chunk quadratic + inter-chunk linear
+recurrence), pure-jnp; the per-chunk compute is what the Pallas
+``ssd_scan`` kernel accelerates on TPU (kernels/ssd_scan.py agrees with
+this oracle, test-covered).
+
+Decode path: exact single-step recurrence on the (B, H, hd, N) state plus
+a (B, d_conv-1, ch) rolling conv window — O(1) per token, which is why the
+SSM/hybrid archs run long_500k natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return d_in, n_heads, conv_ch
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype):
+    s = cfg.ssm
+    d_in, H, conv_ch = dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + H   # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_in, dtype),
+        "out_proj": dense_init(ks[2], d_in, cfg.d_model, dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj):
+    s = cfg.ssm
+    d_in, H, _ = dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * gn], axis=-1)
+    return z, xbc, dt                    # xbc holds conv channels
+
+
+def _causal_conv(w, b, xbc):
+    """Depthwise causal conv over (B, S, CH)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def segsum(a):
+    """Stable 'segment sum': out[..., i, j] = sum_{j<k<=i} a[..., k]."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_reference(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)    dt: (B, S, H)    A: (H,) negative decay rates
+    Bm, Cm: (B, S, G, N) with H % G == 0.
+    Returns y: (B, S, H, P), final state (B, H, P, N).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    nc = S // chunk
+    rep = H // G
+
+    def ch(t):  # (B, S, ...) -> (B, nc, chunk, ...)
+        return t.reshape((Bsz, nc, chunk) + t.shape[2:])
+
+    xc, dtc = ch(x.astype(jnp.float32)), ch(dt.astype(jnp.float32))
+    Bc, Cc = ch(Bm.astype(jnp.float32)), ch(Cm.astype(jnp.float32))
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)                   # (B,nc,l,H,N)
+    Ch_ = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                  # (B,nc,l,H)
+    dA_cum = jnp.cumsum(dA, axis=2)                    # within chunk
+    # intra-chunk (diagonal block): y = (C B^T ∘ L) (dt x)
+    Lmat = jnp.exp(segsum(jnp.moveaxis(dA, -1, -2)))   # (B,nc,H,l,l)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch_, Bh)
+    xdt = xc * dtc[..., None]                          # (B,nc,l,H,P)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores * Lmat, xdt)
+
+    # chunk states: S_c = sum_s exp(dA_end - dA_cum_s) B_s (dt x)_s
+    decay_out = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum) # (B,nc,l,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bh, decay_out, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])         # (B,nc,H)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                              # emit state ENTERING chunk
+
+    init = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)      # (B,nc,H,P,N)
+
+    # off-diagonal contribution: C_t exp(dA_cum_t) state_in
+    y_off = jnp.einsum("bclhn,bclh,bchpn->bclhp",
+                       Ch_, jnp.exp(dA_cum), prev_states)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def mamba2_forward(params, cfg: ArchConfig, x):
+    """Full-sequence train/prefill path. x: (B, S, d)."""
+    s = cfg.ssm
+    d_in, H, _ = dims(cfg)
+    B_, S, _ = x.shape
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(params["conv_w"], params["conv_b"], xbc)
+    gn = s.n_groups * s.d_state
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+    xs = xs.reshape(B_, S, H, s.head_dim)
+    Bm = Bm.reshape(B_, S, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B_, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    chunk = min(s.chunk, S)
+    y, _ = ssd_reference(xs, dt, A, Bm, Cm, chunk)
+    y = y + xs * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, d_in)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"]
+
+
+def mamba2_decode(params, cfg: ArchConfig, x, conv_state, ssm_state):
+    """One-token step. x: (B,1,d); conv_state: (B, d_conv-1, CH);
+    ssm_state: (B, H, P, N). Returns (y, conv_state, ssm_state)."""
+    s = cfg.ssm
+    d_in, H, CH = dims(cfg)
+    B_ = x.shape[0]
+    proj = x[:, 0] @ params["in_proj"]                 # (B, ·)
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    # rolling conv window
+    win = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,W,CH)
+    w = params["conv_w"]
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", win, w) + params["conv_b"])
+    new_conv_state = win[:, 1:]
+
+    gn = s.n_groups * s.d_state
+    xs, Bm, Cm = jnp.split(conv, [d_in, d_in + gn], axis=-1)
+    xs = xs.reshape(B_, H, s.head_dim).astype(jnp.float32)
+    Bm = Bm.reshape(B_, s.n_groups, s.d_state).astype(jnp.float32)
+    Cm = Cm.reshape(B_, s.n_groups, s.d_state).astype(jnp.float32)
+    rep = H // s.n_groups
+    Bh = jnp.repeat(Bm, rep, axis=1)                   # (B,H,N)
+    Ch_ = jnp.repeat(Cm, rep, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])                      # (B,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, xs, Bh)
+    ssm_state = ssm_state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state, Ch_)
+    y = y + xs * params["D"][None, :, None]
+    y = y.reshape(B_, 1, d_in).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z[:, None, :]))
+    return y @ params["out_proj"], new_conv_state, ssm_state

@@ -1,0 +1,442 @@
+"""Composable decoder model covering all assigned families.
+
+Families and wiring (see DESIGN.md §5):
+  dense / vlm        : [ln → attn(GQA|MLA) → ln → FFN] × L
+  audio (musicgen)   : same, multi-codebook embed/unembed
+  moe                : [ln → attn → ln → MoE] × L (first_dense_layers dense)
+  ssm (mamba2)       : [ln → mamba2] × L
+  hybrid (zamba2)    : L ssm layers in segments of ``hybrid_every``; after
+                       each segment ONE shared attention+FFN block (same
+                       weights every time) runs.
+
+The repeated stack is ``lax.scan``-ed over stacked layer params (compact
+HLO, scan-remat).  Decode threads per-layer caches through the same scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models.layers import (dense_init, embedding_init, ffn, ffn_init,
+                                 padded_vocab, rmsnorm, rmsnorm_init)
+
+
+@dataclass(frozen=True)
+class Runtime:
+    """Execution knobs independent of the architecture."""
+    dtype: jnp.dtype = jnp.float32
+    attn_impl: str = "auto"   # auto | naive | blockwise | flashjnp | pallas
+    block_q: int = 256
+    window: Optional[int] = None   # overrides cfg.attn_window when set
+    remat: bool = False
+    remat_attn: bool = False       # checkpoint the attention sub-block so
+                                   # the q-chunk scan does not stash the
+                                   # full S^2 probability stack (§Perf C3)
+    capacity_factor: float = 1.25
+    moe_impl: str = "scatter"      # scatter | expert_choice (§Perf A)
+    moe_shard_axes: tuple = ()     # data axes for expert-buffer constraint
+                                   # (set by the launcher; empty on 1 dev)
+    gqa_expand: bool = False       # expand kv->q heads + head-dim sharding
+                                   # constraint (uneven-GQA fix, §Perf A.4)
+    seq_parallel: bool = False     # Megatron-SP: residual stream sharded
+                                   # over 'model' on the sequence dim
+
+    def win(self, cfg: ArchConfig):
+        return self.window if self.window is not None else cfg.attn_window
+
+
+def _sp(x, rt: Runtime):
+    """Sequence-parallel sharding constraint on the residual stream."""
+    if not rt.seq_parallel:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(None, "model", None))
+
+
+SMOKE_RT = Runtime(dtype=jnp.float32, attn_impl="naive")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _attn_init(key, cfg, dtype):
+    if cfg.attn_kind == "mla":
+        return attn.mla_init(key, cfg, dtype)
+    return attn.gqa_init(key, cfg, dtype)
+
+
+def _dense_layer_init(key, cfg, dtype, d_ff=None):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": _attn_init(k1, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "ffn": ffn_init(k2, cfg.d_model, d_ff or cfg.d_ff, dtype,
+                        cfg.ffn_kind),
+    }
+
+
+def _moe_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": _attn_init(k1, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "moe": moe_mod.moe_init(k2, cfg, dtype),
+    }
+
+
+def _ssm_layer_init(key, cfg, dtype):
+    return {
+        "ln": rmsnorm_init(cfg.d_model, dtype),
+        "mixer": m2.mamba2_init(key, cfg, dtype),
+    }
+
+
+def init(cfg: ArchConfig, key, dtype=jnp.float32):
+    keys = jax.random.split(key, 8)
+    p = {}
+    if cfg.n_codebooks > 1:
+        tabs = jax.vmap(lambda k: embedding_init(k, cfg.vocab, cfg.d_model,
+                                                 dtype)["table"])(
+            jax.random.split(keys[0], cfg.n_codebooks))
+        p["embed"] = {"table": tabs}       # (n_cb, pv, d)
+        p["lm_head"] = jax.vmap(
+            lambda k: dense_init(k, cfg.d_model, padded_vocab(cfg.vocab),
+                                 dtype))(
+            jax.random.split(keys[1], cfg.n_codebooks))  # (n_cb, d, pv)
+    else:
+        p["embed"] = embedding_init(keys[0], cfg.vocab, cfg.d_model, dtype)
+        p["lm_head"] = dense_init(keys[1], cfg.d_model,
+                                  padded_vocab(cfg.vocab), dtype)
+    p["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+
+    lkeys = jax.random.split(keys[2], max(cfg.n_layers, 1))
+    if cfg.family in ("dense", "vlm", "audio"):
+        p["layers"] = jax.vmap(
+            lambda k: _dense_layer_init(k, cfg, dtype))(lkeys)
+    elif cfg.family == "moe":
+        nd = cfg.moe.first_dense_layers
+        if nd:
+            p["dense0"] = jax.vmap(
+                lambda k: _dense_layer_init(k, cfg, dtype))(lkeys[:nd])
+        p["layers"] = jax.vmap(
+            lambda k: _moe_layer_init(k, cfg, dtype))(lkeys[nd:])
+    elif cfg.family == "ssm":
+        p["layers"] = jax.vmap(lambda k: _ssm_layer_init(k, cfg, dtype))(lkeys)
+    elif cfg.family == "hybrid":
+        p["layers"] = jax.vmap(lambda k: _ssm_layer_init(k, cfg, dtype))(lkeys)
+        p["shared_attn"] = _dense_layer_init(keys[3], cfg, dtype)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def param_spec(cfg: ArchConfig, dtype=jnp.float32):
+    return jax.eval_shape(lambda: init(cfg, jax.random.key(0), dtype))
+
+
+# ---------------------------------------------------------------------------
+# embed / unembed
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg, tokens):
+    if cfg.n_codebooks > 1:
+        # tokens: (B, S, n_cb); sum codebook embeddings (MusicGen §3.1)
+        tabs = params["embed"]["table"]            # (n_cb, pv, d)
+        return sum(tabs[i][tokens[..., i]] for i in range(cfg.n_codebooks))
+    return params["embed"]["table"][tokens]
+
+
+def _unembed(params, cfg, x):
+    pv = padded_vocab(cfg.vocab)
+    if cfg.n_codebooks > 1:
+        logits = jnp.einsum("bsd,cdv->bscv", x, params["lm_head"])
+    else:
+        logits = x @ params["lm_head"]
+    if pv != cfg.vocab:
+        mask = jnp.arange(pv) < cfg.vocab
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# layer bodies (full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _attn_fwd(lp, cfg, x, positions, rt: Runtime):
+    if cfg.attn_kind == "mla":
+        return attn.mla_forward(lp, cfg, x, positions, impl=rt.attn_impl,
+                                window=rt.win(cfg),
+                                remat_chunks=rt.remat_attn)
+    return attn.gqa_forward(lp, cfg, x, positions, window=rt.win(cfg),
+                            impl=rt.attn_impl, remat_chunks=rt.remat_attn,
+                            expand_heads=rt.gqa_expand)
+
+
+def _dense_block(lp, cfg, x, positions, rt):
+    x = _sp(x, rt)
+    x = x + _attn_fwd(lp["attn"], cfg, rmsnorm(lp["ln1"], x), positions, rt)
+    x = _sp(x, rt)
+    x = x + ffn(lp["ffn"], rmsnorm(lp["ln2"], x))
+    return x
+
+
+def _moe_block(lp, cfg, x, positions, rt):
+    x = _sp(x, rt)
+    x = x + _attn_fwd(lp["attn"], cfg, rmsnorm(lp["ln1"], x), positions, rt)
+    x = _sp(x, rt)
+    y, aux = moe_mod.moe_forward(lp["moe"], cfg, rmsnorm(lp["ln2"], x),
+                                 capacity_factor=rt.capacity_factor,
+                                 impl=rt.moe_impl,
+                                 shard_axes=rt.moe_shard_axes)
+    return x + y, aux
+
+
+def _ssm_block(lp, cfg, x, rt):
+    return _sp(x, rt) + m2.mamba2_forward(lp["mixer"], cfg,
+                                          rmsnorm(lp["ln"], x))
+
+
+def _maybe_remat(fn, rt: Runtime):
+    return jax.checkpoint(fn) if rt.remat else fn
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
+            rt: Runtime = SMOKE_RT):
+    """Full-sequence forward.
+
+    tokens: (B, S) int32 — or (B, S, n_cb) for multi-codebook audio.
+    prefix_embeds: (B, P, d) pre-projected patch/frame embeddings (vlm stub);
+    they replace the first P token positions.
+    Returns (logits, aux_loss).
+    """
+    x = _embed(params, cfg, tokens).astype(rt.dtype)
+    B, S = x.shape[0], x.shape[1]
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(rt.dtype), x[:, P:]], axis=1)
+    positions = jnp.arange(S)          # 1-D; identical across the batch
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        body = _maybe_remat(
+            lambda h, lp: (_dense_block(lp, cfg, h, positions, rt), None), rt)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    elif cfg.family == "moe":
+        if "dense0" in params:
+            bodyd = _maybe_remat(
+                lambda h, lp: (_dense_block(lp, cfg, h, positions, rt), None),
+                rt)
+            x, _ = jax.lax.scan(bodyd, x, params["dense0"])
+
+        def bodym(carry, lp):
+            h, a = carry
+            h, al = _moe_block(lp, cfg, h, positions, rt)
+            return (h, a + al), None
+        bodym = _maybe_remat(bodym, rt)
+        (x, aux), _ = jax.lax.scan(bodym, (x, aux), params["layers"])
+    elif cfg.family == "ssm":
+        body = _maybe_remat(
+            lambda h, lp: (_ssm_block(lp, cfg, h, rt), None), rt)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    elif cfg.family == "hybrid":
+        per = cfg.hybrid_every
+        nseg = cfg.n_layers // per
+        seg_params = jax.tree_util.tree_map(
+            lambda a: a.reshape((nseg, per) + a.shape[1:]), params["layers"])
+        shared = params["shared_attn"]
+
+        def inner(h, lp):
+            return _ssm_block(lp, cfg, h, rt), None
+
+        def outer(h, sp):
+            h, _ = jax.lax.scan(_maybe_remat(inner, rt), h, sp)
+            h = _maybe_remat(
+                lambda hh: _dense_block(shared, cfg, hh, positions, rt), rt)(h)
+            return h, None
+
+        x, _ = jax.lax.scan(outer, x, seg_params)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["final_norm"], x)
+    return _unembed(params, cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, KV/SSM caches)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, ctx: int, rt: Runtime = SMOKE_RT,
+               _zeros=jnp.zeros):
+    """Build the decode cache pytree (use with jax.eval_shape for specs).
+
+    ``ctx`` is the attention context to *allocate*: for sliding-window archs
+    pass min(seq_len, window); SSM state is O(1) regardless.
+    """
+    dt = rt.dtype
+    c = {"pos": _zeros((), jnp.int32)}   # synchronized decode position
+    hd = cfg.hd()
+    L = cfg.n_layers
+    win = rt.win(cfg)
+    kv_ctx = min(ctx, win) if win else ctx
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        if cfg.attn_kind == "mla":
+            m = cfg.mla
+            width = m.kv_lora_rank + m.qk_rope_head_dim
+            c["ckv"] = _zeros((L, batch, kv_ctx, width), dt)
+        else:
+            c["k"] = _zeros((L, batch, kv_ctx, cfg.n_kv_heads, hd), dt)
+            c["v"] = _zeros((L, batch, kv_ctx, cfg.n_kv_heads, hd), dt)
+    if cfg.family in ("ssm", "hybrid"):
+        d_in, H, CH = m2.dims(cfg)
+        s = cfg.ssm
+        c["conv"] = _zeros((L, batch, s.d_conv - 1, CH), dt)
+        c["ssm"] = _zeros((L, batch, H, s.head_dim, s.d_state), jnp.float32)
+    if cfg.family == "hybrid":
+        nseg = cfg.n_layers // cfg.hybrid_every
+        c["k"] = _zeros((nseg, batch, kv_ctx, cfg.n_kv_heads, hd), dt)
+        c["v"] = _zeros((nseg, batch, kv_ctx, cfg.n_kv_heads, hd), dt)
+    return c
+
+
+def cache_spec(cfg, batch, ctx, rt: Runtime = SMOKE_RT):
+    return jax.eval_shape(partial(init_cache, cfg, batch, ctx, rt))
+
+
+def _attn_decode(lp, cfg, x, cache_layer, pos, rt):
+    if cfg.attn_kind == "mla":
+        out, ckv = attn.mla_decode(lp, cfg, x, cache_layer["ckv"], pos)
+        return out, {"ckv": ckv}
+    out, k, v = attn.gqa_decode(lp, cfg, x, cache_layer["k"], cache_layer["v"],
+                                pos, window=rt.win(cfg))
+    return out, {"k": k, "v": v}
+
+
+def _dense_block_decode(lp, cfg, x, cl, pos, rt):
+    a, cl = _attn_decode(lp["attn"], cfg, rmsnorm(lp["ln1"], x), cl, pos, rt)
+    x = x + a
+    x = x + ffn(lp["ffn"], rmsnorm(lp["ln2"], x))
+    return x, cl
+
+
+def _moe_block_decode(lp, cfg, x, cl, pos, rt):
+    a, cl = _attn_decode(lp["attn"], cfg, rmsnorm(lp["ln1"], x), cl, pos, rt)
+    x = x + a
+    # decode is drop-free: per-row capacity = S*top_k (= top_k at S=1)
+    y, _ = moe_mod.moe_forward(lp["moe"], cfg, rmsnorm(lp["ln2"], x),
+                               cap=x.shape[1] * cfg.moe.top_k)
+    return x + y, cl
+
+
+def _ssm_block_decode(lp, cfg, x, cl, rt):
+    y, conv, ssm = m2.mamba2_decode(lp["mixer"], cfg, rmsnorm(lp["ln"], x),
+                                    cl["conv"], cl["ssm"])
+    return x + y, {"conv": conv, "ssm": ssm}
+
+
+def _slice_attn_cache(cache, keys=("k", "v", "ckv")):
+    return {k: cache[k] for k in keys if k in cache}
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, *,
+                rt: Runtime = SMOKE_RT):
+    """One decode step for the whole batch.
+
+    tokens: (B, 1) int32 (or (B, 1, n_cb)).  Returns (logits, new_cache).
+    """
+    pos = cache["pos"]                                  # scalar, synchronized
+    x = _embed(params, cfg, tokens).astype(rt.dtype)
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        ac = _slice_attn_cache(cache)
+        nd = cfg.moe.first_dense_layers if (cfg.family == "moe" and
+                                            "dense0" in params) else 0
+        if nd:
+            ac0 = jax.tree_util.tree_map(lambda a: a[:nd], ac)
+            acr = jax.tree_util.tree_map(lambda a: a[nd:], ac)
+
+            def body0(h, inp):
+                lp, cl = inp
+                h, cl = _dense_block_decode(lp, cfg, h, cl, pos, rt)
+                return h, cl
+            x, ac0 = jax.lax.scan(body0, x, (params["dense0"], ac0))
+        else:
+            acr = ac
+
+        def body(h, inp):
+            lp, cl = inp
+            if cfg.family == "moe":
+                return _moe_block_decode(lp, cfg, h, cl, pos, rt)
+            return _dense_block_decode(lp, cfg, h, cl, pos, rt)
+        x, acr = jax.lax.scan(body, x, (params["layers"], acr))
+        if nd:
+            merged = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], 0), ac0, acr)
+        else:
+            merged = acr
+        new_cache.update(merged)
+
+    elif cfg.family == "ssm":
+        def body(h, inp):
+            lp, cl = inp
+            return _ssm_block_decode(lp, cfg, h, cl, rt)
+        x, sc = jax.lax.scan(
+            body, x, (params["layers"],
+                      {"conv": cache["conv"], "ssm": cache["ssm"]}))
+        new_cache.update(sc)
+
+    elif cfg.family == "hybrid":
+        per = cfg.hybrid_every
+        nseg = cfg.n_layers // per
+        seg_params = jax.tree_util.tree_map(
+            lambda a: a.reshape((nseg, per) + a.shape[1:]), params["layers"])
+        seg_ssm = jax.tree_util.tree_map(
+            lambda a: a.reshape((nseg, per) + a.shape[1:]),
+            {"conv": cache["conv"], "ssm": cache["ssm"]})
+        shared = params["shared_attn"]
+
+        def outer(h, inp):
+            sp, sc, kl, vl = inp
+
+            def inner(hh, ii):
+                lp, cl = ii
+                return _ssm_block_decode(lp, cfg, hh, cl, rt)
+            h, sc = jax.lax.scan(inner, h, (sp, sc))
+            h, acl = _dense_block_decode(shared, cfg, h, {"k": kl, "v": vl},
+                                         pos, rt)
+            return h, (sc, acl["k"], acl["v"])
+
+        x, (sc, ks, vs) = jax.lax.scan(
+            outer, x, (seg_params, seg_ssm, cache["k"], cache["v"]))
+        new_cache["conv"] = sc["conv"].reshape(cache["conv"].shape)
+        new_cache["ssm"] = sc["ssm"].reshape(cache["ssm"].shape)
+        new_cache["k"], new_cache["v"] = ks, vs
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["final_norm"], x)
+    new_cache["pos"] = pos + 1
+    return _unembed(params, cfg, x), new_cache

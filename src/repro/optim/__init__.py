@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (sgd, momentum, adamw, Optimizer,
+                                    apply_updates)
+
+__all__ = ["sgd", "momentum", "adamw", "Optimizer", "apply_updates"]

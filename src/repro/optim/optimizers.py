@@ -1,0 +1,90 @@
+"""Pure-JAX optimizers (no optax offline): SGD, SGD-momentum, AdamW.
+
+The paper's Step 5 is plain SGD with η[n] scaled ∝ √B (core.efficiency
+.lr_scale); momentum/AdamW are provided for the beyond-paper experiments.
+Each optimizer is (init_fn, update_fn) packaged in ``Optimizer``;
+``update(grads, state, params, lr)`` returns (updates, new_state) and
+``apply_updates`` adds them — the lr is a traced scalar so one compiled
+train step serves every period plan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable      # (grads, state, params, lr) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        return jax.tree_util.tree_map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9, state_dtype=jnp.float32) -> Optimizer:
+    """SGD+momentum; ``state_dtype=bfloat16`` halves optimizer-state
+    traffic/footprint (a §Perf hillclimb knob)."""
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, state_dtype), params)
+
+    def update(grads, state, params, lr):
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: (beta * m.astype(jnp.float32)
+                          + g.astype(jnp.float32)).astype(state_dtype),
+            state, grads)
+        upd = jax.tree_util.tree_map(
+            lambda m: -lr * m.astype(jnp.float32), new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(
+                g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)

@@ -1,0 +1,156 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + decode/forward
+consistency: every assigned family must produce correct shapes, no NaNs,
+and an autoregressive decode path identical to the full-sequence forward."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED
+from repro.models import init, forward, init_cache, decode_step
+from repro.models.layers import padded_vocab
+from repro.models.model import Runtime
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.key(0)
+
+
+def make_inputs(cfg, B, S, key):
+    if cfg.n_codebooks > 1:
+        toks = jax.random.randint(key, (B, S, cfg.n_codebooks), 0, cfg.vocab)
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    prefix = None
+    if cfg.vlm_prefix:
+        prefix = jnp.full((B, cfg.vlm_prefix, cfg.d_model), 0.01,
+                          jnp.float32)
+    return toks, prefix
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward_and_train_step(arch, key):
+    """One forward + one SGD step on the reduced config: shapes + no NaNs."""
+    cfg = ARCHS[arch].reduced()
+    params = init(cfg, key)
+    B, S = 2, 32
+    toks, prefix = make_inputs(cfg, B, S, key)
+    logits, aux = forward(cfg, params, toks, prefix_embeds=prefix)
+    pv = padded_vocab(cfg.vocab)
+    if cfg.n_codebooks > 1:
+        assert logits.shape == (B, S, cfg.n_codebooks, pv)
+    else:
+        assert logits.shape == (B, S, pv)
+    assert not jnp.isnan(logits).any()
+    assert jnp.isfinite(aux)
+
+    # one gradient step through the full model
+    def loss(p):
+        lg, a = forward(cfg, p, toks, prefix_embeds=prefix)
+        lab = toks % cfg.vocab
+        lp = jax.nn.log_softmax(lg[..., :cfg.vocab].astype(jnp.float32))
+        return -jnp.mean(jnp.take_along_axis(lp, lab[..., None], -1)) + a
+
+    l0, grads = jax.value_and_grad(loss)(params)
+    assert jnp.isfinite(l0)
+    gnorm = sum(jnp.sum(jnp.square(g)) for g in
+                jax.tree_util.tree_leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+    new = jax.tree_util.tree_map(lambda p, g: p - 1e-2 * g, params, grads)
+    l1 = loss(new)
+    assert jnp.isfinite(l1)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_decode(arch, key):
+    cfg = ARCHS[arch].reduced()
+    params = init(cfg, key)
+    B = 2
+    cache = init_cache(cfg, B, 16)
+    toks, _ = make_inputs(cfg, B, 1, key)
+    logits, cache2 = decode_step(cfg, params, cache, toks)
+    assert logits.shape[0] == B and logits.shape[1] == 1
+    assert not jnp.isnan(logits).any()
+    assert int(cache2["pos"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["granite-34b", "minicpm3-4b", "mamba2-2.7b",
+                                  "zamba2-7b", "musicgen-large",
+                                  "deepseek-v2-lite-16b"])
+def test_decode_matches_forward(arch, key):
+    """Autoregressive decode must reproduce the full-sequence forward."""
+    cfg = ARCHS[arch].reduced()
+    params = init(cfg, key)
+    B, S = 2, 12
+    toks, _ = make_inputs(cfg, B, S, key)
+    rt = Runtime(capacity_factor=64.0)      # drop-free MoE for the check
+    full, _ = forward(cfg, params, toks, rt=rt)
+    cache = init_cache(cfg, B, S, rt)
+    outs = []
+    for t in range(S):
+        lg, cache = decode_step(cfg, params, cache, toks[:, t:t + 1], rt=rt)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    fv = jax.nn.log_softmax(full[..., :cfg.vocab].astype(jnp.float32))
+    dv = jax.nn.log_softmax(dec[..., :cfg.vocab].astype(jnp.float32))
+    assert float(jnp.max(jnp.abs(fv - dv))) < 2e-3
+
+
+def test_sliding_window_matches_masked_forward(key):
+    """SWA forward == naive attention with a window mask."""
+    import dataclasses
+    cfg = dataclasses.replace(ARCHS["granite-34b"].reduced(), attn_window=8)
+    params = init(cfg, key)
+    toks = jax.random.randint(key, (1, 32), 0, cfg.vocab)
+    lg_win, _ = forward(cfg, params, toks)
+    # decode with ring buffer of size=window must agree
+    cache = init_cache(cfg, 1, 32)          # kv_ctx = min(32, window=8)
+    assert cache["k"].shape[2] == 8
+    outs = []
+    for t in range(32):
+        lg, cache = decode_step(cfg, params, cache, toks[:, t:t + 1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    fv = jax.nn.log_softmax(lg_win[..., :cfg.vocab].astype(jnp.float32))
+    dv = jax.nn.log_softmax(dec[..., :cfg.vocab].astype(jnp.float32))
+    assert float(jnp.max(jnp.abs(fv - dv))) < 2e-3
+
+
+def test_vlm_prefix_changes_output(key):
+    cfg = ARCHS["llava-next-mistral-7b"].reduced()
+    params = init(cfg, key)
+    toks = jax.random.randint(key, (1, 40), 0, cfg.vocab)
+    p1 = jnp.full((1, cfg.vlm_prefix, cfg.d_model), 0.01)
+    p2 = -p1
+    l1, _ = forward(cfg, params, toks, prefix_embeds=p1)
+    l2, _ = forward(cfg, params, toks, prefix_embeds=p2)
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-6
+
+
+def test_musicgen_codebook_shapes(key):
+    cfg = ARCHS["musicgen-large"].reduced()
+    assert cfg.n_codebooks == 4
+    params = init(cfg, key)
+    toks = jax.random.randint(key, (2, 16, 4), 0, cfg.vocab)
+    lg, _ = forward(cfg, params, toks)
+    assert lg.shape == (2, 16, 4, padded_vocab(cfg.vocab))
+
+
+def test_param_counts_full_configs():
+    """Full-config parameter counts are in the right ballpark."""
+    expect = {
+        "granite-34b": (30e9, 40e9),
+        "mistral-nemo-12b": (11e9, 14e9),
+        "qwen1.5-4b": (3e9, 5e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "arctic-480b": (380e9, 520e9),
+        "minicpm3-4b": (3.5e9, 5e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = ARCHS[name].param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params_below_total():
+    cfg = ARCHS["arctic-480b"]
+    assert cfg.active_param_count() < 0.2 * cfg.param_count()

@@ -1,0 +1,109 @@
+"""Sharding-rule unit tests (1-device mesh: rules must emit valid specs
+for every param/cache leaf of every assigned architecture)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, ASSIGNED
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_host_mesh, data_axes
+from repro.models.model import Runtime, cache_spec, param_spec
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+def test_data_axes(mesh):
+    assert data_axes(mesh) == ("data",)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_param_rules_cover_all_leaves(arch, mesh):
+    cfg = ARCHS[arch].reduced()
+    spec = param_spec(cfg)
+    sh = shd.params_shardings(mesh, spec)
+    for (path, leaf), (_, s) in zip(
+            jax.tree_util.tree_leaves_with_path(spec),
+            jax.tree_util.tree_leaves_with_path(sh)):
+        parts = tuple(s.spec)
+        assert len(parts) <= len(leaf.shape), (path, parts, leaf.shape)
+        # any sharded dim must exist and (on this 1-dev mesh) divide
+        for d, ax in enumerate(parts):
+            if ax is not None:
+                assert leaf.shape[d] >= 1
+
+
+def test_projection_rules_hit_expected_dims(mesh):
+    cfg = ARCHS["qwen1.5-4b"]
+    # wq: (L, d, H*hd) -> shard last
+    assert shd.param_spec_for("['layers']['attn']['wq']",
+                              (40, 2560, 2560), mesh) == P(None, None, "model")
+    # wo: (L, H*hd, d) -> shard -2
+    assert shd.param_spec_for("['layers']['attn']['wo']",
+                              (40, 2560, 2560), mesh) == P(None, "model", None)
+    # experts w_gate: (L, E, d, f) -> shard E
+    assert shd.param_spec_for("['layers']['moe']['experts']['w_gate']",
+                              (35, 128, 7168, 4864), mesh) == \
+        P(None, "model", None, None)
+    # norms replicate
+    assert shd.param_spec_for("['layers']['ln1']['scale']",
+                              (40, 2560), mesh) == P()
+    # embed table: (pv, d) -> shard vocab
+    assert shd.param_spec_for("['embed']['table']",
+                              (151936, 2560), mesh) == P("model", None)
+
+
+def test_cache_shardings_ctx_dim(mesh):
+    cfg = ARCHS["qwen1.5-4b"].reduced()
+    spec = cache_spec(cfg, 4, 64, Runtime())
+    sh = shd.cache_shardings(mesh, spec)
+    assert tuple(sh["k"].spec)[2] == "model"     # ctx (flash-decode style)
+    assert tuple(sh["pos"].spec) == ()
+
+
+def test_zero1_shards_opt_only(mesh):
+    from repro.fed.train_step import TrainState
+    from repro.optim import momentum
+    cfg = ARCHS["qwen1.5-4b"].reduced()
+    pspec = param_spec(cfg)
+    opt = momentum()
+    st = jax.eval_shape(lambda: TrainState(pspec, opt.init(pspec),
+                                           jnp.zeros((), jnp.int32)))
+    sh = shd.state_shardings_zero1(mesh, st)
+    # params unchanged vs base rules; opt leaves gain a 'data' axis
+    base = shd.state_shardings(mesh, st)
+    n_extra = 0
+    for (p1, a), (p2, b) in zip(jax.tree_util.tree_leaves_with_path(sh),
+                                jax.tree_util.tree_leaves_with_path(base)):
+        ka = jax.tree_util.keystr(p1)
+        if ka.startswith("[<flat index 1>]"):
+            if tuple(a.spec) != tuple(b.spec):
+                n_extra += 1
+                assert any(ax == "data" or (isinstance(ax, tuple)
+                                            and "data" in ax)
+                           for ax in a.spec if ax)
+        else:
+            assert tuple(a.spec) == tuple(b.spec), ka
+    assert n_extra > 0
+
+
+def test_logits_sharding_divisibility():
+    # divisibility logic needs axes > 1: emulate a 16x16 mesh shape check
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    import repro.launch.sharding as S
+
+    # batch 1 not divisible by 16 -> replicated; vocab 100 not divisible
+    orig = S.NamedSharding
+    S.NamedSharding = lambda mesh, spec: spec       # bypass device check
+    try:
+        s = S.logits_sharding(FakeMesh, 3, batch=1, vocab=100)
+        assert tuple(s) == (None, None, None)
+        s2 = S.logits_sharding(FakeMesh, 3, batch=32, vocab=128)
+        assert tuple(s2)[0] == "data" and tuple(s2)[-1] == "model"
+    finally:
+        S.NamedSharding = orig

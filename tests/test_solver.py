@@ -1,0 +1,191 @@
+"""Solver tests: Theorem 1/2 structure, Corollary bounds, Algorithm 1
+convergence, Lemma 2, and optimality over baseline policies — including
+hypothesis property tests over random device fleets / channels."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DeviceProfile, POLICIES, batch_closed_form,
+                        e_up_bounds, gradient_bits, solve_downlink,
+                        solve_period, solve_uplink, tau_closed_form)
+from repro.core.latency import uplink_latency
+
+FRAME = 0.010
+S_BITS = gradient_bits(1_000_000)
+
+
+def fleet_cpu(freqs):
+    return [DeviceProfile(kind="cpu", f_cpu=f) for f in freqs]
+
+
+def rates(k, lo=20e6, hi=200e6, seed=0):
+    return np.random.default_rng(seed).uniform(lo, hi, size=k)
+
+
+# ---------------------------------------------------------------------------
+# deterministic structure tests
+# ---------------------------------------------------------------------------
+
+
+class TestTheorem1:
+    def test_finish_time_equalization(self):
+        """Remark 3: every device finishes local+upload at the same time."""
+        devs = fleet_cpu([0.7e9, 1.4e9, 2.1e9, 1.0e9])
+        r = rates(4)
+        dl = 0.05 * np.sqrt(64)
+        sol = solve_uplink(devs, r, S_BITS, FRAME, 64, dl, 128)
+        t_local = np.array([d.local_grad_latency(b)
+                            for d, b in zip(devs, sol.batch)])
+        t_up = uplink_latency(S_BITS, sol.tau, FRAME, r)
+        finish = t_local + t_up
+        assert finish.std() / finish.mean() < 1e-6
+
+    def test_batch_scales_with_speed(self):
+        """Remark 2: batchsize increases with local training speed."""
+        devs = fleet_cpu([0.5e9, 1.0e9, 2.0e9, 4.0e9])
+        r = np.full(4, 100e6)
+        dl = 0.05 * np.sqrt(100)
+        sol = solve_uplink(devs, r, S_BITS, FRAME, 100, dl, 10_000)
+        assert np.all(np.diff(sol.batch) > 0)
+        # linear in V_k: ratios of unclipped batches track freq ratios
+        ratio = sol.batch[2] / sol.batch[1]
+        assert ratio == pytest.approx(2.0, rel=0.35)
+
+    def test_constraints_active(self):
+        devs = fleet_cpu([1e9] * 5)
+        r = rates(5, seed=3)
+        dl = 0.05 * np.sqrt(50)
+        sol = solve_uplink(devs, r, S_BITS, FRAME, 50, dl, 128)
+        assert sol.tau.sum() == pytest.approx(FRAME, rel=1e-6)
+        assert sol.batch.sum() == pytest.approx(50, rel=0.02)
+        assert np.all(sol.batch >= 1 - 1e-9)
+        assert np.all(sol.batch <= 128 + 1e-9)
+
+    def test_closed_form_matches_paper_form(self):
+        """Affine generalization reduces to the paper's Theorem 1 (a=0,
+        b=1/V_k, rho' = training-priority ratio)."""
+        devs = fleet_cpu([0.7e9, 1.4e9, 2.8e9])
+        r = np.array([50e6, 80e6, 120e6])
+        dl, e_up, mu, bmax = 0.4, 2.0, 1e-4, 512
+        got = batch_closed_form(e_up, mu, devs, r, S_BITS, FRAME, dl, bmax)
+        f = np.array([d.f_cpu for d in devs])
+        V = f / devs[0].cycles_per_sample
+        rho = f / f.sum()
+        want = np.clip(
+            (dl * e_up - np.sqrt(dl * S_BITS * FRAME * mu / (rho * r))) * V,
+            1, bmax)
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+    def test_tau_closed_form_nonneg(self):
+        devs = fleet_cpu([1e9, 2e9])
+        r = np.array([50e6, 100e6])
+        tau = tau_closed_form(5.0, 1e-6, devs, r, S_BITS, FRAME, 0.3, 128)
+        assert np.all(tau >= 0)
+
+
+class TestCorollary1:
+    def test_bounds_bracket_solution(self):
+        devs = fleet_cpu([0.7e9, 1.4e9, 2.1e9, 3.0e9])
+        r = rates(4, seed=7)
+        B = 80.0
+        dl = 0.05 * np.sqrt(B)
+        lo, hi = e_up_bounds(B, devs, r, S_BITS, FRAME, dl)
+        sol = solve_uplink(devs, r, S_BITS, FRAME, B, dl, 128)
+        assert lo <= sol.e_up * (1 + 1e-6)
+        assert sol.e_up <= hi * (1 + 1e-6)
+
+
+class TestTheorem2:
+    def test_downlink_fills_frame_and_equalizes(self):
+        devs = fleet_cpu([0.7e9, 1.4e9, 2.1e9])
+        r = rates(3, seed=5)
+        dl = 0.05 * np.sqrt(64)
+        sol = solve_downlink(devs, r, S_BITS, FRAME, dl)
+        assert sol.tau.sum() == pytest.approx(FRAME, rel=1e-6)
+        t_down = uplink_latency(S_BITS, sol.tau, FRAME, r)
+        t_upd = np.array([d.update_latency() for d in devs])
+        finish = t_down + t_upd
+        assert finish.std() / finish.mean() < 1e-6
+
+
+class TestGpuScenario:
+    def test_lemma2_compute_bound_region(self):
+        """Optimal batchsize lies in the compute-bound region."""
+        devs = [DeviceProfile(kind="gpu", gpu_t_low=0.02, gpu_slope=5e-4,
+                              gpu_b_th=16 + 4 * i) for i in range(4)]
+        r = rates(4, seed=11)
+        sol = solve_period(devs, r, r, S_BITS, FRAME, FRAME, xi=0.05,
+                           b_max=128)
+        lo = np.array([d.gpu_b_th for d in devs])
+        assert np.all(sol.batch >= lo - 1e-6)
+
+    def test_gpu_latency_function_shape(self):
+        d = DeviceProfile(kind="gpu", gpu_t_low=0.05, gpu_slope=1e-3,
+                          gpu_b_th=32)
+        b = np.arange(1, 129)
+        t = d.local_grad_latency(b)
+        assert np.all(t[:32] == 0.05)                 # data-bound: flat
+        assert np.all(np.diff(t[32:]) > 0)            # compute-bound: rising
+        assert t[31] == pytest.approx(0.05)           # continuous at B_th
+
+
+class TestOptimality:
+    def test_proposed_beats_baselines(self):
+        """Table II / Figs 4-5 core claim: learning efficiency of the
+        proposed policy dominates online/full/random."""
+        devs = fleet_cpu([0.7e9] * 2 + [1.4e9] * 2 + [2.1e9] * 2)
+        r_up, r_down = rates(6, seed=1), rates(6, seed=2)
+        xi = 0.05
+        effs = {}
+        for name, pol in POLICIES.items():
+            kw = {"rng": np.random.default_rng(0)}
+            if name == "proposed":
+                kw["xi"] = xi
+            res = pol(devs, r_up, r_down, S_BITS, FRAME, FRAME, 128, **kw)
+            effs[name] = xi * np.sqrt(res.global_batch) / res.latency
+        assert effs["proposed"] >= max(v for k, v in effs.items()
+                                       if k != "proposed") * 0.999
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    freqs=st.lists(st.floats(0.3e9, 5e9), min_size=2, max_size=8),
+    b=st.floats(10, 400),
+    seed=st.integers(0, 1000),
+)
+def test_uplink_properties(freqs, b, seed):
+    devs = fleet_cpu(freqs)
+    k = len(devs)
+    r = rates(k, seed=seed)
+    dl = 0.05 * np.sqrt(b)
+    b = min(max(b, k), 128 * k)
+    sol = solve_uplink(devs, r, S_BITS, FRAME, b, dl, 128)
+    assert np.all(sol.batch >= 1 - 1e-9)
+    assert np.all(sol.batch <= 128 + 1e-9)
+    assert np.all(sol.tau >= -1e-12)
+    assert sol.tau.sum() == pytest.approx(FRAME, rel=1e-5)
+    # feasibility: uplink efficiency bound satisfied by every device
+    t_local = np.array([d.local_grad_latency(x)
+                        for d, x in zip(devs, sol.batch)])
+    t_up = uplink_latency(S_BITS, sol.tau, FRAME, r)
+    assert np.all(t_local + t_up <= dl * sol.e_up * (1 + 1e-4))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_period_solution_feasible(seed):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(2, 7))
+    devs = fleet_cpu(rng.uniform(0.5e9, 3e9, size=k))
+    r_up = rng.uniform(10e6, 300e6, size=k)
+    r_down = rng.uniform(10e6, 300e6, size=k)
+    sol = solve_period(devs, r_up, r_down, S_BITS, FRAME, FRAME,
+                       xi=0.05, b_max=128)
+    assert k <= sol.global_batch <= 128 * k
+    assert sol.latency > 0 and np.isfinite(sol.latency)
+    assert sol.efficiency > 0

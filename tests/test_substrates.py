@@ -1,0 +1,263 @@
+"""Substrate tests: channels, compression, data pipeline, optimizers,
+checkpointing — unit + hypothesis property tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.channels.model import Cell, path_loss_db
+from repro.compression.sbc import compress_dense, compressed_bits, sbc_tensor
+from repro.data.pipeline import (ClassificationData, FederatedBatcher,
+                                 TokenData, partition_iid, partition_noniid)
+from repro.optim import adamw, apply_updates, momentum, sgd
+from repro import checkpoint
+
+
+# ---------------------------------------------------------------------------
+# channels
+# ---------------------------------------------------------------------------
+
+
+class TestChannel:
+    def test_path_loss_monotone(self):
+        d = np.array([0.01, 0.05, 0.1, 0.2])
+        pl = path_loss_db(d)
+        assert np.all(np.diff(pl) > 0)
+
+    def test_rate_decreases_with_distance(self):
+        cell = Cell.make(0)
+        r = cell.avg_rate(np.array([0.02, 0.05, 0.1, 0.2]))
+        assert np.all(np.diff(r) < 0)
+        assert np.all(r > 0)
+
+    def test_monte_carlo_expectation(self):
+        """eq (5): MC average close to numerically-integrated expectation."""
+        cell = Cell.make(1)
+        cell.cfg = cell.cfg.__class__(fading_samples=200_000)
+        d = np.array([0.1])
+        r = cell.avg_rate(d)[0]
+        # numeric integral over Exp(1) fading
+        pl = path_loss_db(d)[0]
+        snr = 10 ** ((cell.cfg.tx_power_dbm - pl
+                      - (cell.cfg.noise_dbm_per_hz
+                         + 10 * np.log10(cell.cfg.bandwidth_hz))) / 10)
+        h = np.random.default_rng(0).exponential(size=2_000_000)
+        want = cell.cfg.bandwidth_hz * np.mean(np.log2(1 + snr * h))
+        assert r == pytest.approx(want, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+
+class TestSBC:
+    def test_sparsity(self):
+        g = jnp.asarray(np.random.default_rng(0).normal(size=4000))
+        out = sbc_tensor(g, 0.01)
+        nnz = int(jnp.sum(out != 0))
+        assert nnz <= int(0.01 * 4000) + 1
+
+    def test_single_sign_binarization(self):
+        g = jnp.asarray(np.random.default_rng(1).normal(size=4000))
+        out = np.asarray(sbc_tensor(g, 0.01))
+        vals = np.unique(out[out != 0])
+        assert len(vals) == 1                   # one magnitude, one sign
+
+    def test_kept_entries_subset_of_topk(self):
+        g = jnp.asarray(np.random.default_rng(2).normal(size=1000))
+        out = np.asarray(sbc_tensor(g, 0.05))
+        k = 50
+        topk = set(np.argsort(-np.abs(np.asarray(g)))[:k])
+        assert set(np.nonzero(out)[0]).issubset(topk)
+
+    def test_error_feedback_reduces_bias(self):
+        """With residual accumulation, the long-run compressed average
+        tracks the true gradient much better than without (EF property)."""
+        rng = np.random.default_rng(3)
+        true = jnp.asarray(rng.normal(size=500))
+
+        def run(use_ef):
+            res = None
+            acc = jnp.zeros(500)
+            for _ in range(60):
+                approx, res = compress_dense(true, 0.02, res)
+                if not use_ef:
+                    res = None
+                acc = acc + approx
+            return float(jnp.linalg.norm(acc / 60 - true)
+                         / jnp.linalg.norm(true))
+
+        err_ef, err_plain = run(True), run(False)
+        assert err_ef < 0.7 * err_plain
+        assert err_ef < 0.6
+
+    def test_payload_model(self):
+        assert compressed_bits(1_000_000, 0.005, 64) == \
+            pytest.approx(0.005 * 64 * 1e6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(64, 3000), ratio=st.floats(0.005, 0.2),
+           seed=st.integers(0, 100))
+    def test_sbc_properties(self, n, ratio, seed):
+        g = jnp.asarray(np.random.default_rng(seed).normal(size=n))
+        out = np.asarray(sbc_tensor(g, ratio))
+        nnz = int((out != 0).sum())
+        assert nnz <= max(1, int(round(n * ratio))) + 1
+        if nnz:
+            signs = np.sign(out[out != 0])
+            assert len(np.unique(signs)) == 1
+            # kept positions preserve the original sign
+            orig = np.sign(np.asarray(g))[out != 0]
+            assert np.all(orig == signs)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+class TestData:
+    def test_partitions_disjoint_cover(self):
+        parts = partition_iid(1000, 7, 0)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == 1000
+        assert len(np.unique(allidx)) == 1000
+
+    def test_noniid_label_concentration(self):
+        data = ClassificationData.synthetic(n=2000, dim=8, seed=0)
+        parts = partition_noniid(data.y, 10, seed=0)
+        allidx = np.concatenate(parts)
+        assert len(np.unique(allidx)) == 2000
+        # pathological split: most devices see <= 3 classes (2 shards)
+        n_few = sum(len(np.unique(data.y[p])) <= 3 for p in parts)
+        assert n_few >= 7
+
+    def test_batcher_weights_match_plan(self):
+        parts = partition_iid(500, 4, 0)
+        b = FederatedBatcher(parts, slot=16, seed=0)
+        idx, w = b.sample(np.array([3, 16, 1, 8]))
+        assert idx.shape == (4, 16) and w.shape == (4, 16)
+        np.testing.assert_array_equal(w.sum(1), [3, 16, 1, 8])
+
+    def test_eq1_weighted_aggregation_equivalence(self):
+        """Masked weighted-mean gradient == eq. (1) Σ B_k·ḡ_k / Σ B_k."""
+        rng = np.random.default_rng(0)
+        K, slot, D = 3, 8, 5
+        x = rng.normal(size=(K, slot, D)).astype(np.float32)
+        y = rng.integers(0, 2, size=(K, slot)).astype(np.int32)
+        w = np.zeros((K, slot), np.float32)
+        bk = [2, 8, 5]
+        for k in range(K):
+            w[k, :bk[k]] = 1
+
+        wt = jnp.asarray(rng.normal(size=(D,)).astype(np.float32))
+
+        def loss(wt_, xf, yf, wf):
+            logit = xf @ wt_
+            nll = jnp.square(logit - yf)        # simple per-example loss
+            return jnp.sum(nll * wf) / jnp.sum(wf)
+
+        # flattened weighted loss gradient
+        g_flat = jax.grad(loss)(wt, jnp.asarray(x.reshape(-1, D)),
+                                jnp.asarray(y.reshape(-1)),
+                                jnp.asarray(w.reshape(-1)))
+        # per-device mean gradients combined per eq. (1)
+        gs = []
+        for k in range(K):
+            gk = jax.grad(loss)(wt, jnp.asarray(x[k]), jnp.asarray(y[k]),
+                                jnp.asarray(w[k]))
+            gs.append(np.asarray(gk) * bk[k])
+        g_eq1 = np.sum(gs, axis=0) / np.sum(bk)
+        np.testing.assert_allclose(np.asarray(g_flat), g_eq1, rtol=1e-5)
+
+    def test_token_data_learnable(self):
+        t = TokenData.synthetic(n=64, seq=32, vocab=128, seed=0)
+        assert t.tokens.shape == (64, 33)
+        assert t.tokens.min() >= 0 and t.tokens.max() < 128
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+class TestOptim:
+    def _params(self):
+        return {"w": jnp.asarray([1.0, 2.0]), "b": jnp.asarray(0.5)}
+
+    def test_sgd(self):
+        opt = sgd()
+        p = self._params()
+        g = jax.tree_util.tree_map(jnp.ones_like, p)
+        upd, _ = opt.update(g, opt.init(p), p, 0.1)
+        new = apply_updates(p, upd)
+        np.testing.assert_allclose(new["w"], [0.9, 1.9])
+
+    def test_momentum_accumulates(self):
+        opt = momentum(0.9)
+        p = self._params()
+        s = opt.init(p)
+        g = jax.tree_util.tree_map(jnp.ones_like, p)
+        upd1, s = opt.update(g, s, p, 0.1)
+        upd2, s = opt.update(g, s, p, 0.1)
+        np.testing.assert_allclose(np.asarray(upd2["w"]),
+                                   np.asarray(upd1["w"]) * 1.9)
+
+    def test_adamw_direction_and_decay(self):
+        opt = adamw(weight_decay=0.0)
+        p = self._params()
+        s = opt.init(p)
+        g = {"w": jnp.asarray([1.0, -1.0]), "b": jnp.asarray(0.0)}
+        upd, s = opt.update(g, s, p, 0.1)
+        assert upd["w"][0] < 0 < upd["w"][1]
+        # bias-corrected first step magnitude ~ lr
+        np.testing.assert_allclose(np.abs(np.asarray(upd["w"])), 0.1,
+                                   rtol=1e-3)
+
+    def test_quadratic_convergence(self):
+        opt = adamw()
+        p = {"x": jnp.asarray(5.0)}
+        s = opt.init(p)
+        for _ in range(300):
+            g = jax.grad(lambda q: jnp.square(q["x"]))(p)
+            upd, s = opt.update(g, s, p, 0.05)
+            p = apply_updates(p, upd)
+        assert abs(float(p["x"])) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+                "b": {"c": jnp.asarray([1, 2], jnp.int32)},
+                "d": [jnp.zeros(()), jnp.ones((4,), jnp.bfloat16)]}
+        path = os.path.join(tmp_path, "ckpt.msgpack")
+        checkpoint.save(path, tree)
+        out = checkpoint.restore(path, tree)
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            assert a.dtype == b.dtype
+
+    def test_state_roundtrip(self, tmp_path):
+        params = {"w": jnp.ones((3, 3))}
+        opt = {"m": {"w": jnp.zeros((3, 3))}, "t": jnp.asarray(7)}
+        path = os.path.join(tmp_path, "state.msgpack")
+        checkpoint.save_state(path, 42, params, opt)
+        step, p, o, _ = checkpoint.restore_state(path, params, opt)
+        assert step == 42
+        np.testing.assert_array_equal(np.asarray(o["t"]), 7)
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        path = os.path.join(tmp_path, "x.msgpack")
+        checkpoint.save(path, {"a": jnp.zeros((2,))})
+        with pytest.raises(ValueError):
+            checkpoint.restore(path, {"a": jnp.zeros((3,))})

@@ -1,0 +1,160 @@
+"""End-to-end system behaviour: the FEEL loop trains a model on non-IID
+federated data, the proposed policy wins on simulated wall-clock, and the
+big-model train step reproduces eq. (1) aggregation semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DeviceProfile
+from repro.data.pipeline import ClassificationData
+from repro.fed.trainer import FeelSimulation, run_scheme
+from repro.fed.train_step import TrainState, make_train_step
+from repro.models.model import Runtime, init
+from repro.configs import ARCHS
+from repro.optim import momentum, sgd
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    full = ClassificationData.synthetic(n=2200, dim=128, seed=0, spread=6.0)
+    return full.split(300)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return [DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+            for f in [0.7, 0.7, 1.4, 1.4, 2.1, 2.1]]
+
+
+class TestFeelLoop:
+    def test_noniid_convergence(self, dataset, fleet):
+        data, test = dataset
+        sim = FeelSimulation(fleet, data, test, partition="noniid",
+                             policy="proposed", b_max=64, base_lr=0.15)
+        res = sim.run(100, eval_every=25)
+        assert res.accs[-1] > 0.75
+        assert res.losses[-1] < res.losses[0]
+
+    def test_compression_does_not_break_training(self, dataset, fleet):
+        data, test = dataset
+        sim = FeelSimulation(fleet, data, test, partition="iid",
+                             policy="proposed", b_max=64, base_lr=0.15)
+        sim.compress = True
+        res = sim.run(80, eval_every=40)
+        assert res.accs[-1] > 0.6
+
+    def test_proposed_faster_than_fixed_policies(self, dataset, fleet):
+        """Figs. 4-5: time to reach target accuracy, proposed < baselines."""
+        data, test = dataset
+        times = {}
+        for pol in ["proposed", "online", "full"]:
+            sim = FeelSimulation(fleet, data, test, partition="iid",
+                                 policy=pol, b_max=64, base_lr=0.15,
+                                 seed=1)
+            res = sim.run(60, eval_every=15)
+            times[pol] = res.speed(0.60)
+        assert times["proposed"] < times["online"]
+        assert times["proposed"] < times["full"]
+
+    def test_multiple_local_updates(self, dataset, fleet):
+        """Paper §VII extension: tau>1 local steps per period still
+        converges and costs proportionally more simulated time."""
+        data, test = dataset
+        sim = FeelSimulation(fleet, data, test, partition="iid",
+                             policy="proposed", b_max=32, base_lr=0.1,
+                             local_steps=3)
+        res = sim.run(30, eval_every=15)
+        assert res.losses[-1] < res.losses[0]
+        sim1 = FeelSimulation(fleet, data, test, partition="iid",
+                              policy="proposed", b_max=32, base_lr=0.1,
+                              local_steps=1)
+        res1 = sim1.run(30, eval_every=15)
+        assert res.times[-1] > res1.times[-1]      # tau local-compute cost
+
+    def test_scheduler_xi_estimator_updates(self, dataset, fleet):
+        data, test = dataset
+        sim = FeelSimulation(fleet, data, test, partition="iid", b_max=32)
+        xi0 = sim.scheduler.xi_est.xi
+        sim.run(12, eval_every=6)
+        assert sim.scheduler.xi_est.xi != xi0
+
+
+class TestSchemes:
+    def test_gradient_fl_runs(self, dataset, fleet):
+        data, test = dataset
+        r = run_scheme("gradient_fl", fleet, data, test, "iid", 20,
+                       eval_every=10)
+        assert len(r.accs) >= 2 and np.isfinite(r.losses[-1])
+
+    def test_individual_vs_model_fl(self, dataset, fleet):
+        data, test = dataset
+        ri = run_scheme("individual", fleet, data, test, "noniid", 15,
+                        eval_every=15)
+        rm = run_scheme("model_fl", fleet, data, test, "noniid", 15,
+                        eval_every=15)
+        assert np.isfinite(ri.accs[-1]) and np.isfinite(rm.accs[-1])
+        # model FL pays for parameter upload: slower simulated clock
+        assert rm.times[-1] > ri.times[-1]
+
+
+class TestBigModelTrainStep:
+    def test_weighted_step_matches_eq1(self):
+        """train_step with masked weights == manual eq.(1) gradient combo."""
+        cfg = ARCHS["qwen1.5-4b"].reduced()
+        rt = Runtime()
+        params = init(cfg, jax.random.key(0))
+        opt = sgd()
+        step = make_train_step(cfg, rt, opt)
+        K, slot, S = 2, 2, 16
+        toks = jax.random.randint(jax.random.key(1), (K * slot, S + 1), 0,
+                                  cfg.vocab)
+        w = np.zeros((K, slot), np.float32)
+        w[0, :1] = 1.0                        # B_0 = 1
+        w[1, :2] = 1.0                        # B_1 = 2
+        batch = {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+            "weights": jnp.broadcast_to(
+                jnp.asarray(w.reshape(-1))[:, None],
+                (K * slot, S)).astype(jnp.float32),
+        }
+        state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+        new_state, metrics = step(state, batch, 0.1)
+        assert np.isfinite(float(metrics["loss"]))
+
+        # manual per-device grads, combined by B_k (eq. 1)
+        from repro.fed.train_step import make_loss_fn
+        loss_fn = make_loss_fn(cfg, rt)
+
+        def dev_grad(sl):
+            b = {k: v[sl] for k, v in batch.items()}
+            return jax.grad(lambda p: loss_fn(p, b)[0])(params)
+
+        g0 = dev_grad(slice(0, slot))
+        g1 = dev_grad(slice(slot, 2 * slot))
+        combo = jax.tree_util.tree_map(
+            lambda a, b_: (1 * a + 2 * b_) / 3.0, g0, g1)
+        # reconstruct applied gradient: sgd => g = (old - new)/lr
+        got = jax.tree_util.tree_map(
+            lambda new, old: (old - new) / 0.1, new_state.params,
+            state.params)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(combo)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5, rtol=5e-3)
+
+    def test_compress_uplink_step_runs(self):
+        cfg = ARCHS["mamba2-2.7b"].reduced()
+        rt = Runtime()
+        params = init(cfg, jax.random.key(0))
+        opt = momentum()
+        step = jax.jit(make_train_step(cfg, rt, opt, compress_uplink=True,
+                                       compress_ratio=0.01))
+        toks = jax.random.randint(jax.random.key(1), (2, 17), 0, cfg.vocab)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+                 "weights": jnp.ones((2, 16))}
+        state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+        state, metrics = step(state, batch, 0.05)
+        assert np.isfinite(float(metrics["loss"]))
+        assert float(metrics["grad_norm"]) > 0
