@@ -10,7 +10,7 @@ def main() -> None:
     from benchmarks import (ablation_compression, fig2_gpu_training_function,
                             fig3_generalization, fig45_batchsize_policies,
                             loss_decay_fit, roofline, solver_scaling,
-                            table2_schemes)
+                            sweep_speed, table2_schemes)
     modules = [
         ("fig2_gpu_training_function", fig2_gpu_training_function),
         ("solver_scaling", solver_scaling),
@@ -19,6 +19,7 @@ def main() -> None:
         ("fig3_generalization", fig3_generalization),
         ("fig45_batchsize_policies", fig45_batchsize_policies),
         ("ablation_compression", ablation_compression),
+        ("sweep_speed", sweep_speed),
         ("roofline", roofline),
     ]
     print("name,us_per_call,derived")

@@ -1,0 +1,97 @@
+"""Engine wall-clock benchmark (ISSUE 1 acceptance): a 50-period, 8-seed
+feel/proposed sweep, device-resident ``vmap(lax.scan)`` engine vs the seed
+implementation.
+
+The baseline below reproduces the seed's ``FeelSimulation.run`` faithfully:
+one Python iteration per period, scalar Algorithm-1 ``scheduler.plan()``
+per period, eager exact-top_k SBC, ``float()`` host syncs each step, seeds
+run sequentially.  The engine path is the production configuration:
+lockstep-vectorized horizon planning + one compiled ``vmap(lax.scan)``
+advancing all seeds.  Acceptance bar: >=5x."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.sbc import compress_dense
+from repro.core import DeviceProfile
+from repro.data.pipeline import ClassificationData
+from repro.fed import feel_model
+from repro.fed.sweep import run_seed_batch
+from repro.fed.trainer import FeelSimulation
+
+PERIODS, SEEDS = 50, range(8)
+
+
+def _fleet():
+    return [DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+            for f in [0.7, 0.7, 1.4, 1.4, 2.1, 2.1]]
+
+
+def _sims(data, test, seeds):
+    return [FeelSimulation(_fleet(), data, test, partition="noniid",
+                           policy="proposed", b_max=64, base_lr=0.15,
+                           seed=s) for s in seeds]
+
+
+def _seed_style_run(sim: FeelSimulation, periods: int, eval_every: int = 10):
+    """The seed's per-period loop, verbatim semantics: plan -> sample ->
+    grad -> eager SBC (exact top_k) -> aggregate -> float() syncs."""
+    t = 0.0
+    for p in range(periods):
+        plan = sim.scheduler.plan()
+        idx, w = sim.batcher.sample(plan.batch)
+        x = jnp.asarray(sim.data.x[idx])
+        y = jnp.asarray(sim.data.y[idx])
+        wj = jnp.asarray(w)
+        loss_before = float(sim._loss_fn(sim.params,
+                                         x.reshape(-1, x.shape[-1]),
+                                         y.reshape(-1), wj.reshape(-1)))
+        grads = sim._grad_fn(sim.params, x, y, wj)
+        grads, sim.residuals = compress_dense(
+            grads, sim.scheduler.compression, sim.residuals, exact=True)
+        bk = jnp.asarray(plan.batch, jnp.float32)
+        wk = bk / jnp.sum(bk)
+        agg = jax.tree_util.tree_map(
+            lambda g: jnp.tensordot(wk, g, axes=1), grads)
+        sim.params = jax.tree_util.tree_map(
+            lambda pr, g: pr - plan.lr * g, sim.params, agg)
+        loss = float(sim._loss_fn(sim.params, x.reshape(-1, x.shape[-1]),
+                                  y.reshape(-1), wj.reshape(-1)))
+        sim.scheduler.observe(loss_before - loss, plan.global_batch)
+        t += plan.predicted_latency
+        if p % eval_every == 0 or p == periods - 1:
+            float(sim._acc_fn(sim.params, jnp.asarray(sim.test.x),
+                              jnp.asarray(sim.test.y)))
+
+
+def main(fast: bool = True):
+    full = ClassificationData.synthetic(n=2200, dim=128, seed=0, spread=6.0)
+    data, test = full.split(300)
+
+    # warm both paths (same shapes) so jit compile is excluded
+    run_seed_batch(_sims(data, test, SEEDS), PERIODS)
+    _seed_style_run(_sims(data, test, [99])[0], 3)
+
+    t0 = time.time()
+    run_seed_batch(_sims(data, test, SEEDS), PERIODS)
+    t_scan = time.time() - t0
+
+    t0 = time.time()
+    for sim in _sims(data, test, SEEDS):
+        _seed_style_run(sim, PERIODS)
+    t_seed = time.time() - t0
+
+    speedup = t_seed / t_scan
+    return [("sweep_speed/engine_8seed_50p", t_scan * 1e6,
+             f"wall={t_scan:.2f}s"),
+            ("sweep_speed/seed_loop_8seed_50p", t_seed * 1e6,
+             f"wall={t_seed:.2f}s;speedup={speedup:.1f}x")]
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

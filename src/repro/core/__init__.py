@@ -11,7 +11,7 @@ from repro.core.solver import (solve_uplink, solve_downlink, solve_period,
                                UplinkSolution, DownlinkSolution,
                                PeriodSolution)
 from repro.core.baselines import POLICIES, PolicyResult
-from repro.core.scheduler import FeelScheduler, PeriodPlan
+from repro.core.scheduler import FeelScheduler, PeriodPlan, PlanHorizon
 
 __all__ = [
     "DeviceProfile", "gradient_bits", "period_latency", "uplink_latency",
@@ -19,5 +19,5 @@ __all__ = [
     "XiEstimator", "solve_uplink", "solve_downlink", "solve_period",
     "batch_closed_form", "tau_closed_form", "e_up_bounds", "mu_bounds",
     "UplinkSolution", "DownlinkSolution", "PeriodSolution", "POLICIES",
-    "PolicyResult", "FeelScheduler", "PeriodPlan",
+    "PolicyResult", "FeelScheduler", "PeriodPlan", "PlanHorizon",
 ]

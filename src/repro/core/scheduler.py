@@ -32,6 +32,23 @@ class PeriodPlan:
     rates_down: np.ndarray
 
 
+@dataclass(frozen=True)
+class PlanHorizon:
+    """``periods`` stacked :class:`PeriodPlan` arrays — the scheduler's
+    output in the form the device-resident engine consumes (one array per
+    field, leading period axis, zero per-period Python objects)."""
+    batch: np.ndarray            # (P, K) int
+    tau_up: np.ndarray           # (P, K)
+    tau_down: np.ndarray         # (P, K)
+    lr: np.ndarray               # (P,) float
+    latency: np.ndarray          # (P,) predicted seconds per period
+    global_batch: np.ndarray     # (P,) int
+
+    @property
+    def periods(self) -> int:
+        return self.batch.shape[0]
+
+
 @dataclass
 class FeelScheduler:
     devices: Sequence[DeviceProfile]
@@ -67,6 +84,87 @@ class FeelScheduler:
     def observe(self, loss_decay: float, global_batch: float):
         """Feed back the realized ΔL to the ξ estimator."""
         self.xi_est.update(loss_decay, global_batch)
+
+    def observe_series(self, loss_decays: Sequence[float],
+                       global_batches: Sequence[float]):
+        """Post-hoc ξ feedback for a whole trajectory at once.
+
+        The scan engine runs the trajectory open-loop (ξ held at its value
+        when the horizon was planned — the paper's known-constant treatment)
+        and feeds every realized decay back here afterwards, so ξ still
+        adapts across successive ``run``/``plan_horizon`` calls.
+        """
+        for d, g in zip(loss_decays, global_batches):
+            self.xi_est.update(float(d), float(g))
+
+    def plan_horizon(self, periods: int) -> PlanHorizon:
+        """Plan ``periods`` consecutive periods open-loop and stack them.
+
+        Channel fading is re-drawn per period (same rng stream as repeated
+        ``plan()`` calls); ξ is frozen at its current estimate for the whole
+        horizon instead of drifting with realized decays — the paper treats
+        ξ as a known constant, and this is what makes the trajectory
+        pre-plannable and therefore scan/vmap-compilable.
+
+        The proposed policy routes through the lockstep-vectorized solver
+        (one batched bisection for the whole horizon instead of P scalar
+        Algorithm-1 runs); the fixed-batch baselines stay on the cheap
+        per-period closed forms.
+        """
+        if self.policy == "proposed":
+            return self._plan_horizon_proposed(periods)
+        plans = [self.plan() for _ in range(periods)]
+        return PlanHorizon(
+            batch=np.stack([p.batch for p in plans]),
+            tau_up=np.stack([p.tau_up for p in plans]),
+            tau_down=np.stack([p.tau_down for p in plans]),
+            lr=np.array([p.lr for p in plans], np.float64),
+            latency=np.array([p.predicted_latency for p in plans],
+                             np.float64),
+            global_batch=np.array([p.global_batch for p in plans], np.int64))
+
+    def _plan_horizon_proposed(self, periods: int) -> PlanHorizon:
+        from repro.core.solver import optimize_batch_rows, solve_period_rows
+        c = self.cell.cfg
+        K = len(self.devices)
+        rates_up = np.empty((periods, K))
+        rates_down = np.empty((periods, K))
+        for p in range(periods):                 # same rng stream as plan()
+            rates_up[p] = self.cell.avg_rate(self._dist_km)
+            rates_down[p] = self.cell.avg_rate(self._dist_km)
+        xi = self.xi_est.xi
+        # B* re-optimized on the reopt cadence; rows are independent given
+        # their rates, so every reopt period solves in one batched call
+        reopt = np.array([(self._period + p) % self.reopt_every == 0
+                          or (p == 0 and self._b_cache is None)
+                          for p in range(periods)])
+        B = np.empty(periods)
+        carry = self._b_cache
+        if reopt.any():
+            b_star = optimize_batch_rows(
+                self.devices, rates_up[reopt], rates_down[reopt],
+                self.payload_bits, c.frame_up_s, c.frame_down_s, xi,
+                self.b_max)
+            j = 0
+            for p in range(periods):
+                if reopt[p]:
+                    carry = float(b_star[j])
+                    j += 1
+                B[p] = carry
+        else:
+            B[:] = carry
+        sol = solve_period_rows(self.devices, rates_up, rates_down,
+                                self.payload_bits, c.frame_up_s,
+                                c.frame_down_s, xi, B, self.b_max)
+        self._b_cache = float(B[-1])
+        self._period += periods
+        batch = np.maximum(np.round(sol["batch"]).astype(int), 1)
+        gb = batch.sum(1)
+        return PlanHorizon(
+            batch=batch, tau_up=sol["tau_up"], tau_down=sol["tau_down"],
+            lr=np.array([lr_scale(self.base_lr, g, self.ref_batch)
+                         for g in gb], np.float64),
+            latency=sol["latency"], global_batch=gb.astype(np.int64))
 
     def plan(self) -> PeriodPlan:
         c = self.cell.cfg

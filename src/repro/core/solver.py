@@ -223,6 +223,174 @@ def solve_downlink(devices: Sequence[DeviceProfile], rates: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Lockstep-vectorized solver over M independent periods ("rows")
+#
+# The scan-compiled trainer pre-plans whole horizons (scheduler.plan_horizon)
+# and sweeps pre-plan many seeds; the per-period scalar bisections above then
+# dominate wall-clock.  These _rows variants run the SAME Algorithm 1 /
+# Theorem 2 bisections for M (rates, B) rows simultaneously as numpy array
+# ops with fixed iteration counts — one period per row, no cross-row
+# coupling, identical math up to bisection tolerance.
+# ---------------------------------------------------------------------------
+
+
+def _local_latency_rows(devices, batch_rows: np.ndarray) -> np.ndarray:
+    """(M, K) local-gradient latencies via DeviceProfile.local_grad_latency
+    (which vectorizes over the batch axis)."""
+    return np.stack([d.local_grad_latency(batch_rows[:, k])
+                     for k, d in enumerate(devices)], axis=1)
+
+
+def solve_uplink_rows(devices: Sequence[DeviceProfile], rates: np.ndarray,
+                      s_bits: float, frame: float, B: np.ndarray,
+                      dl: np.ndarray, b_max: int, *, inner_iters: int = 42,
+                      outer_iters: int = 42, expand_iters: int = 14):
+    """Subproblem 𝒫₂ for M rows at once.  rates: (M,K); B, dl: (M,).
+
+    Returns (batch (M,K), tau (M,K), e_up (M,), mu (M,)).
+    """
+    rates = np.asarray(rates, float)
+    B = np.asarray(B, float)
+    dl = np.asarray(dl, float)
+    a, b = _affine(devices)
+    rho = _rho_prime(b)
+    lo_k = np.array([d.batch_lo() for d in devices], float)
+    M, K = rates.shape
+    dle = dl[:, None]
+
+    def batches(e, mu):
+        raw = (dle * e[:, None] - a
+               - np.sqrt(dle * s_bits * frame * mu[:, None]
+                         / (rho * rates))) / b
+        return np.clip(raw, lo_k, b_max)
+
+    def mu_for(e):
+        # Corollary 2 bounds, then bisect ΣB_k(μ) = B (decreasing in μ)
+        up = dle * e[:, None] - a - b * lo_k
+        dn = dle * e[:, None] - a - b * b_max
+        scale = rho * rates / (dle * s_bits * frame)
+        m_hi = (np.maximum(up, 0.0) ** 2 * scale).max(1)
+        m_lo = (np.maximum(dn, 0.0) ** 2 * scale).min(1)
+        m_lo = np.maximum(m_lo * 0.5, 0.0)
+        m_hi = np.maximum(m_hi * 2.0, 1e-30)
+        for _ in range(inner_iters):
+            m = 0.5 * (m_lo + m_hi)
+            over = batches(e, m).sum(1) > B
+            m_lo = np.where(over, m, m_lo)
+            m_hi = np.where(over, m_hi, m)
+        return 0.5 * (m_lo + m_hi)
+
+    def tau_sum(e):
+        mu = mu_for(e)
+        bt = batches(e, mu)
+        denom = dle * e[:, None] - a - b * bt
+        tau = np.where(denom > 1e-30,
+                       s_bits / rates / np.maximum(denom, 1e-30) * frame,
+                       np.inf)
+        return tau.sum(1), mu, bt, tau
+
+    # Corollary 1 bounds + bracket expansion
+    t_comp = B / (1.0 / b).sum() + float(np.dot(rho, a))
+    t_comm = s_bits * (np.sqrt(rho / rates).sum(1)) ** 2
+    e_lo = np.maximum((t_comp + t_comm) / dl, 1e-12)
+    hi = (a + b * (B[:, None] / K) + K * s_bits / rates).max(1) / dl
+    e_hi = np.maximum(hi * 1.0000001, e_lo * 1.001)
+    for _ in range(expand_iters):
+        grow = tau_sum(e_hi)[0] > frame
+        if not grow.any():
+            break
+        e_hi = np.where(grow, e_hi * 2.0, e_hi)
+    # Στ(E) decreasing: find E with Στ = T_f
+    for _ in range(outer_iters):
+        e_m = 0.5 * (e_lo + e_hi)
+        geq = tau_sum(e_m)[0] >= frame
+        e_lo = np.where(geq, e_m, e_lo)
+        e_hi = np.where(geq, e_hi, e_m)
+    e_star = e_hi
+    _, mu, bt, tau = tau_sum(e_star)
+    tsum = tau.sum(1, keepdims=True)
+    ok = np.isfinite(tau).all(1, keepdims=True) & (tsum > 0)
+    tau = np.where(ok, tau * (frame / np.where(tsum > 0, tsum, 1.0)), tau)
+    return bt, tau, e_star, mu
+
+
+def solve_downlink_rows(devices: Sequence[DeviceProfile], rates: np.ndarray,
+                        s_bits: float, frame: float, dl: np.ndarray, *,
+                        iters: int = 42, expand_iters: int = 14):
+    """Theorem 2 for M rows at once.  Returns (tau (M,K), e_down (M,))."""
+    rates = np.asarray(rates, float)
+    dl = np.asarray(dl, float)
+    t_upd = np.array([d.update_latency() for d in devices])
+    K = rates.shape[1]
+
+    def tau_of(e):
+        denom = dl[:, None] * e[:, None] - t_upd
+        return np.where(denom > 1e-30,
+                        s_bits / rates / np.maximum(denom, 1e-30) * frame,
+                        np.inf)
+
+    e_lo = t_upd.max() / dl * (1 + 1e-12)
+    e_hi = (t_upd + K * s_bits / rates).max(1) / dl + 1e-12
+    for _ in range(expand_iters):
+        grow = tau_of(e_hi).sum(1) > frame
+        if not grow.any():
+            break
+        e_hi = np.where(grow, e_hi * 2.0, e_hi)
+    for _ in range(iters):
+        e_m = 0.5 * (e_lo + e_hi)
+        geq = tau_of(e_m).sum(1) >= frame
+        e_lo = np.where(geq, e_m, e_lo)
+        e_hi = np.where(geq, e_hi, e_m)
+    tau = tau_of(e_hi)
+    tsum = tau.sum(1, keepdims=True)
+    ok = np.isfinite(tau).all(1, keepdims=True) & (tsum > 0)
+    tau = np.where(ok, tau * (frame / np.where(tsum > 0, tsum, 1.0)), tau)
+    return tau, e_hi
+
+
+def solve_period_rows(devices: Sequence[DeviceProfile],
+                      rates_up: np.ndarray, rates_down: np.ndarray,
+                      s_bits: float, frame_up: float, frame_down: float,
+                      xi: float, B: np.ndarray, b_max: int) -> dict:
+    """Vectorized 𝒫₁ inner evaluation: uplink + downlink solutions and the
+    predicted eq. (14) latency for M independent periods with given B."""
+    B = np.asarray(B, float)
+    dl = xi * np.sqrt(B)
+    bt, tau_u, e_up, _ = solve_uplink_rows(devices, rates_up, s_bits,
+                                           frame_up, B, dl, b_max)
+    tau_d, e_down = solve_downlink_rows(devices, rates_down, s_bits,
+                                        frame_down, dl)
+    t_local = _local_latency_rows(devices, bt)
+    t_up = s_bits * frame_up / (np.maximum(tau_u, 1e-30) * rates_up)
+    t_down = s_bits * frame_down / (np.maximum(tau_d, 1e-30) * rates_down)
+    t_upd = np.array([d.update_latency() for d in devices])
+    latency = (t_local + t_up).max(1) + (t_down + t_upd).max(1)
+    return {"batch": bt, "tau_up": tau_u, "tau_down": tau_d,
+            "latency": latency, "e_total": e_up + e_down}
+
+
+def optimize_batch_rows(devices: Sequence[DeviceProfile],
+                        rates_up: np.ndarray, rates_down: np.ndarray,
+                        s_bits: float, frame_up: float, frame_down: float,
+                        xi: float, b_max: int,
+                        n_candidates: int = 97) -> np.ndarray:
+    """Outer 𝒫₁ for M rows at once: integer-grid argmin of E^U*+E^D* over B
+    (the golden-section's job, but every row and every candidate evaluated
+    in one lockstep solve; B is rounded to an integer downstream anyway)."""
+    K = len(devices)
+    lo = float(sum(d.batch_lo() for d in devices))
+    hi = float(K * b_max)
+    cand = np.unique(np.round(np.linspace(lo, hi, n_candidates)))
+    M, C = rates_up.shape[0], len(cand)
+    sol = solve_period_rows(
+        devices, np.repeat(rates_up, C, axis=0),
+        np.repeat(rates_down, C, axis=0), s_bits, frame_up, frame_down,
+        xi, np.tile(cand, M), b_max)
+    best = np.argmin(sol["e_total"].reshape(M, C), axis=1)
+    return cand[best]
+
+
+# ---------------------------------------------------------------------------
 # Outer problem: optimize the global batchsize B (𝒫₁)
 # ---------------------------------------------------------------------------
 

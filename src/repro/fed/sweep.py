@@ -1,0 +1,119 @@
+"""Batched FEEL scenario sweeps: policies × partitions × device fleets,
+vmapped over seeds.
+
+Every grid cell (one policy on one partition of one fleet) becomes a single
+compiled program: per-seed schedules are pre-generated on the host, initial
+params/residuals are stacked along a leading seed axis, and
+``engine.run_trajectory_batch`` advances all seeds in one
+``vmap(lax.scan)`` call.  Adding a scenario is a config entry, not a new
+Python loop.
+
+    fleets = {"cpu6": [DeviceProfile(kind="cpu", f_cpu=f*1e9) for f in ...]}
+    results = run_sweep(fleets, data, test,
+                        policies=("proposed", "online", "full"),
+                        partitions=("iid", "noniid"), seeds=range(8),
+                        periods=100)
+    results["cpu6/iid/proposed"].speed(0.6)   # (n_seeds,) time-to-accuracy
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DeviceProfile
+from repro.data.pipeline import ClassificationData
+from repro.fed import engine
+from repro.fed.trainer import FeelSimulation, RunResult, _eval_points
+
+
+@dataclass(frozen=True)
+class SweepCell:
+    """Full per-seed trajectories of one (fleet, partition, policy) cell."""
+    name: str                  # "<fleet>/<partition>/<policy>"
+    fleet: str
+    partition: str
+    policy: str
+    seeds: Sequence[int]
+    losses: np.ndarray         # (n_seeds, periods)
+    accs: np.ndarray           # (n_seeds, periods)
+    times: np.ndarray          # (n_seeds, periods) cumulative sim seconds
+    global_batch: np.ndarray   # (n_seeds, periods)
+
+    def speed(self, target_acc: float) -> np.ndarray:
+        """(n_seeds,) simulated time to reach target accuracy (inf never)."""
+        t = np.where(self.accs >= target_acc, self.times, np.inf)
+        return t.min(axis=1)
+
+    @property
+    def final_acc(self) -> np.ndarray:
+        return self.accs[:, -1]
+
+    def run_result(self, seed_i: int = 0, eval_every: int = 10) -> RunResult:
+        """Down-convert one seed to the legacy RunResult shape."""
+        periods = self.losses.shape[1]
+        res = RunResult(scheme=f"feel/{self.policy}")
+        for p in _eval_points(periods, eval_every):
+            res.losses.append(float(self.losses[seed_i, p]))
+            res.accs.append(float(self.accs[seed_i, p]))
+            res.times.append(float(self.times[seed_i, p]))
+            res.global_batches.append(int(self.global_batch[seed_i, p]))
+        return res
+
+
+def run_seed_batch(sims: Sequence[FeelSimulation], periods: int):
+    """vmap one compiled trajectory over a batch of same-shape simulations.
+
+    All sims must share fleet size, ``b_max``, ``local_steps``,
+    ``compress`` and data — exactly what varying only the seed gives you.
+    Returns (losses, accs, times, global_batch) arrays, seed axis leading.
+    """
+    schedules = [sim.plan_run(periods) for sim in sims]
+    params0 = jax.tree_util.tree_map(
+        lambda *a: jnp.stack(a), *[sim.params for sim in sims])
+    residual0 = jax.tree_util.tree_map(
+        lambda *a: jnp.stack(a), *[sim.initial_residual() for sim in sims])
+    s0 = sims[0]
+    params, residuals, (losses, accs, decays) = engine.run_trajectory_batch(
+        params0, residual0, schedules, s0.data, s0.test,
+        local_steps=s0.local_steps, compress=s0.compress,
+        ratio=s0.scheduler.compression)
+    decays = np.asarray(decays)
+    for i, sim in enumerate(sims):
+        sim.params = jax.tree_util.tree_map(lambda a, i=i: a[i], params)
+        sim.residuals = jax.tree_util.tree_map(
+            lambda a, i=i: a[i], residuals)
+        sim.scheduler.observe_series(decays[i], schedules[i].global_batch)
+    times = np.stack([s.times for s in schedules])
+    gb = np.stack([s.global_batch for s in schedules])
+    return np.asarray(losses), np.asarray(accs), times, gb
+
+
+def run_sweep(fleets: Mapping[str, Sequence[DeviceProfile]],
+              data: ClassificationData, test: ClassificationData,
+              policies: Sequence[str] = ("proposed",),
+              partitions: Sequence[str] = ("noniid",),
+              seeds: Sequence[int] = (0,), periods: int = 100,
+              b_max: int = 128, base_lr: float = 0.05,
+              compress: bool = True,
+              local_steps: int = 1) -> Dict[str, SweepCell]:
+    """Grid driver: one vmapped scan per (fleet, partition, policy) cell."""
+    results: Dict[str, SweepCell] = {}
+    seeds = list(seeds)
+    for fleet_name, devices in fleets.items():
+        for partition in partitions:
+            for policy in policies:
+                sims = [FeelSimulation(
+                    devices, data, test, partition=partition, policy=policy,
+                    compress=compress, b_max=b_max, base_lr=base_lr,
+                    seed=s, local_steps=local_steps) for s in seeds]
+                losses, accs, times, gb = run_seed_batch(sims, periods)
+                name = f"{fleet_name}/{partition}/{policy}"
+                results[name] = SweepCell(
+                    name=name, fleet=fleet_name, partition=partition,
+                    policy=policy, seeds=tuple(seeds), losses=losses,
+                    accs=accs, times=times, global_batch=gb)
+    return results

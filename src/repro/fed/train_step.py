@@ -73,7 +73,7 @@ def make_train_step(cfg: ArchConfig, rt: Runtime, opt: Optimizer,
         if compress_uplink:
             # Step 2: per-device SBC before the (implicit) all-reduce.
             grads = jax.tree_util.tree_map(
-                lambda g: sbc_tensor(g, compress_ratio), grads)
+                lambda g: sbc_tensor(g, compress_ratio, exact=False), grads)
         updates, new_opt = opt.update(grads, state.opt, state.params, lr)
         new_params = apply_updates(state.params, updates)
         gnorm = jnp.sqrt(sum(
@@ -83,6 +83,30 @@ def make_train_step(cfg: ArchConfig, rt: Runtime, opt: Optimizer,
         return TrainState(new_params, new_opt, state.step + 1), metrics
 
     return train_step
+
+
+def make_multi_train_step(cfg: ArchConfig, rt: Runtime, opt: Optimizer,
+                          compress_uplink: bool = False,
+                          compress_ratio: float = 0.005):
+    """Device-resident multi-period trainer: ``lax.scan`` of ``train_step``
+    over stacked batches + per-period learning rates (the scheduler plan's
+    η series), so T periods compile to one program with no host sync
+    inside the loop — the big-model counterpart of ``fed.engine``.
+
+    Call as ``many(state, batches, lrs)`` where every leaf of ``batches``
+    has a leading T axis and ``lrs`` is (T,).  Returns the final state and
+    per-period stacked metrics.
+    """
+    step = make_train_step(cfg, rt, opt, compress_uplink, compress_ratio)
+
+    def many(state: TrainState, batches, lrs):
+        def body(s, xs):
+            b, lr = xs
+            return step(s, b, lr)
+
+        return jax.lax.scan(body, state, (batches, lrs))
+
+    return many
 
 
 def make_prefill_step(cfg: ArchConfig, rt: Runtime):

@@ -10,11 +10,24 @@ Schemes:
   model_fl    — FedAvg [19]: one local epoch, parameter upload
                 (uncompressed payload d·p).
   individual  — no collaboration; models averaged once at the end.
+
+Execution engines (``FeelSimulation.engine``):
+  scan   — device-resident (default): the whole trajectory is pre-planned
+           into an ``engine.Schedule`` and compiled to a single jitted
+           ``jax.lax.scan`` with zero per-period host transfers.
+  python — the seed's one-Python-iteration-per-period reference loop with
+           ``float()`` syncs; consumes the SAME pre-generated schedule, so
+           scan-vs-python is a pure numerics regression check (test-covered)
+           and the speed baseline for ``benchmarks/sweep_speed.py``.
+
+Both engines are open-loop in ξ within a run (the paper's known-constant
+treatment); realized decays feed the ξ estimator post-hoc so it still
+adapts across successive ``run`` calls.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +38,8 @@ from repro.core import DeviceProfile, FeelScheduler
 from repro.core.latency import period_latency, uplink_latency
 from repro.data.pipeline import (ClassificationData, FederatedBatcher,
                                  partition_iid, partition_noniid)
-from repro.fed import feel_model
+from repro.fed import engine, feel_model
+from repro.fed.engine import Schedule, build_schedule
 
 
 @dataclass
@@ -42,6 +56,11 @@ class RunResult:
             if a >= target_acc:
                 return t
         return float("inf")
+
+
+def _eval_points(periods: int, eval_every: int) -> List[int]:
+    return [p for p in range(periods)
+            if p % eval_every == 0 or p == periods - 1]
 
 
 @dataclass
@@ -61,6 +80,7 @@ class FeelSimulation:
                                          # local updates per period (tau>1
                                          # FedAvg-style); latency scales the
                                          # local-compute term accordingly
+    engine: str = "scan"                 # scan | python (reference loop)
 
     def __post_init__(self):
         k = len(self.devices)
@@ -83,10 +103,61 @@ class FeelSimulation:
         self._loss_fn = jax.jit(feel_model.loss_fn)
         self._acc_fn = jax.jit(feel_model.accuracy)
 
-    # ---- one FEEL period (Steps 1-5) -------------------------------------
-    def run_period(self):
-        plan = self.scheduler.plan()
-        idx, w = self.batcher.sample(plan.batch)
+    # ---- schedule + initial carry (shared by both engines and sweep) -----
+    def plan_run(self, periods: int) -> Schedule:
+        return build_schedule(self.scheduler, self.batcher, self.devices,
+                              periods, self.local_steps)
+
+    def initial_residual(self):
+        if self.residuals is not None:
+            return self.residuals
+        return engine.zero_residual(self.params, self.batcher.k)
+
+    def run(self, periods: int, eval_every: int = 10) -> RunResult:
+        sched = self.plan_run(periods)
+        evals = _eval_points(periods, eval_every)
+        if self.engine == "python":
+            losses, accs, decays = self._run_python(sched, evals)
+        else:
+            self.params, self.residuals, (losses, accs, decays) = \
+                engine.run_trajectory(
+                    self.params, self.initial_residual(), sched,
+                    self.data, self.test, local_steps=self.local_steps,
+                    compress=self.compress,
+                    ratio=self.scheduler.compression)
+            losses = np.asarray(losses)
+            accs = np.asarray(accs)
+            decays = np.asarray(decays)
+        self.scheduler.observe_series(decays, sched.global_batch)
+        res = RunResult(scheme=f"feel/{self.policy}")
+        for p in evals:
+            res.losses.append(float(losses[p]))
+            res.accs.append(float(accs[p]))
+            res.times.append(float(sched.times[p]))
+            res.global_batches.append(int(sched.global_batch[p]))
+        return res
+
+    # ---- seed reference path: one FEEL period (Steps 1-5) per Python
+    # iteration, float() host syncs each step --------------------------------
+    def _run_python(self, sched: Schedule, evals: Sequence[int]):
+        periods = sched.periods
+        losses = np.zeros(periods)
+        accs = np.full(periods, np.nan)
+        decays = np.zeros(periods)
+        evals = set(evals)
+        for p in range(periods):
+            loss_before, loss_after = self._python_period(
+                sched.idx[p], sched.weight[p], sched.batch[p],
+                float(sched.lr[p]))
+            losses[p] = loss_after
+            decays[p] = loss_before - loss_after
+            if p in evals:
+                accs[p] = float(self._acc_fn(self.params,
+                                             jnp.asarray(self.test.x),
+                                             jnp.asarray(self.test.y)))
+        return losses, accs, decays
+
+    def _python_period(self, idx, w, bk, lr):
         x = jnp.asarray(self.data.x[idx])            # (K, slot, D)
         y = jnp.asarray(self.data.y[idx])
         wj = jnp.asarray(w)
@@ -98,8 +169,6 @@ class FeelSimulation:
         if self.local_steps == 1:
             grads = self._grad_fn(self.params, x, y, wj)  # leading K axis
         else:
-            # tau>1: per-device local SGD; upload the cumulative update
-            # (parameter delta) as the "gradient" (paper §VII extension)
             dev_params = jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a, (self.batcher.k,) + a.shape),
                 self.params)
@@ -107,46 +176,25 @@ class FeelSimulation:
                 g = jax.vmap(jax.grad(feel_model.loss_fn))(
                     dev_params, x, y, wj)
                 dev_params = jax.tree_util.tree_map(
-                    lambda p, gg: p - plan.lr * gg, dev_params, g)
+                    lambda p, gg: p - lr * gg, dev_params, g)
             grads = jax.tree_util.tree_map(
-                lambda p0, pk: (p0[None] - pk) / plan.lr,
+                lambda p0, pk: (p0[None] - pk) / lr,
                 self.params, dev_params)
         if self.compress:
             grads, self.residuals = compress_dense(
                 grads, self.scheduler.compression, self.residuals)
         # eq. (1): weighted average by B_k
-        bk = jnp.asarray(plan.batch, jnp.float32)
-        wk = bk / jnp.sum(bk)
+        bkj = jnp.asarray(bk, jnp.float32)
+        wk = bkj / jnp.sum(bkj)
         agg = jax.tree_util.tree_map(
             lambda g: jnp.tensordot(wk, g, axes=1), grads)
         self.params = jax.tree_util.tree_map(
-            lambda p, g: p - plan.lr * g, self.params, agg)
+            lambda p_, g: p_ - lr * g, self.params, agg)
 
         loss_after = float(self._loss_fn(
             self.params, x.reshape(-1, x.shape[-1]), y.reshape(-1),
             wj.reshape(-1)))
-        self.scheduler.observe(loss_before - loss_after, plan.global_batch)
-        return plan, loss_after
-
-    def run(self, periods: int, eval_every: int = 10) -> RunResult:
-        res = RunResult(scheme=f"feel/{self.policy}")
-        t = 0.0
-        for p in range(periods):
-            plan, loss = self.run_period()
-            # tau local steps multiply the local-compute subperiod
-            extra = (self.local_steps - 1) * max(
-                d.local_grad_latency(b) for d, b
-                in zip(self.devices, plan.batch))
-            t += plan.predicted_latency + extra
-            if p % eval_every == 0 or p == periods - 1:
-                acc = float(self._acc_fn(self.params,
-                                         jnp.asarray(self.test.x),
-                                         jnp.asarray(self.test.y)))
-                res.losses.append(loss)
-                res.accs.append(acc)
-                res.times.append(t)
-                res.global_batches.append(plan.global_batch)
-        return res
+        return loss_before, loss_after
 
 
 # ---------------------------------------------------------------------------
@@ -189,7 +237,9 @@ def run_scheme(scheme: str, devices, data: ClassificationData,
         r.scheme = "gradient_fl"
         return r
 
-    # individual / model_fl need per-device parameter copies
+    # individual / model_fl: per-device parameter copies, scan-compiled.
+    # Host side pre-generates indices + the latency ledger (same rng order
+    # as the seed's interleaved loop), device side is one lax.scan.
     k = len(devices)
     parts = (partition_iid(len(data.y), k, seed) if partition == "iid"
              else partition_noniid(data.y, k, seed=seed))
@@ -204,44 +254,34 @@ def run_scheme(scheme: str, devices, data: ClassificationData,
     dist = cell.drop_users(k)
     rng = np.random.default_rng(seed)
     batch = min(b_max, 64)
-
-    @jax.jit
-    def local_step(params, x, y, lr):
-        g = jax.vmap(jax.grad(feel_model.loss_fn))(params, x, y)
-        return jax.tree_util.tree_map(lambda p_, g_: p_ - lr * g_, params, g)
-
-    res = RunResult(scheme=scheme)
-    t = 0.0
     # payload: parameters, uncompressed (model-based FL uploads the model)
     s_bits = 32.0 * n_params
+
+    idx = np.empty((periods, k, batch), np.int64)
+    times = np.empty(periods)
+    t = 0.0
     for period in range(periods):
-        idx = np.stack([rng.choice(p, size=batch, replace=len(p) < batch)
-                        for p in parts])
-        x = jnp.asarray(data.x[idx])
-        y = jnp.asarray(data.y[idx])
-        dev_params = local_step(dev_params, x, y, base_lr)
+        idx[period] = np.stack(
+            [rng.choice(p, size=batch, replace=len(p) < batch)
+             for p in parts])
         rates_up = cell.avg_rate(dist)
         rates_down = cell.avg_rate(dist)
-        if scheme == "model_fl":
-            # FedAvg: average parameters every period (1 local epoch ≈
-            # len(part)/batch mini-steps folded into the latency model)
-            dev_params = jax.tree_util.tree_map(
-                lambda a: jnp.broadcast_to(a.mean(0), a.shape), dev_params)
-            t += _epoch_latency(devices, parts, batch, rates_up, rates_down,
-                                s_bits, cell.cfg.frame_up_s,
-                                cell.cfg.frame_down_s, upload=True)
-        else:
-            t += _epoch_latency(devices, parts, batch, rates_up, rates_down,
-                                s_bits, cell.cfg.frame_up_s,
-                                cell.cfg.frame_down_s, upload=False)
-        if period % eval_every == 0 or period == periods - 1:
-            avg = jax.tree_util.tree_map(lambda a: a.mean(0), dev_params)
-            acc = float(feel_model.accuracy(avg, jnp.asarray(test.x),
-                                            jnp.asarray(test.y)))
-            loss = float(feel_model.loss_fn(avg, jnp.asarray(test.x),
-                                            jnp.asarray(test.y)))
-            res.losses.append(loss)
-            res.accs.append(acc)
-            res.times.append(t)
-            res.global_batches.append(batch * k)
+        t += _epoch_latency(devices, parts, batch, rates_up, rates_down,
+                            s_bits, cell.cfg.frame_up_s,
+                            cell.cfg.frame_down_s,
+                            upload=(scheme == "model_fl"))
+        times[period] = t
+
+    _, (losses, accs) = engine.run_dev_trajectory(
+        dev_params, idx, base_lr, data, test,
+        average=(scheme == "model_fl"))
+    losses = np.asarray(losses)
+    accs = np.asarray(accs)
+
+    res = RunResult(scheme=scheme)
+    for period in _eval_points(periods, eval_every):
+        res.losses.append(float(losses[period]))
+        res.accs.append(float(accs[period]))
+        res.times.append(float(times[period]))
+        res.global_batches.append(batch * k)
     return res

@@ -83,7 +83,7 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True,
         _flash_kernel, scale=scale, causal=causal, window=window,
         block_q=block_q, block_k=block_k, nk=nk)
 
-    from jax.experimental.pallas import tpu as pltpu
+    from repro.kernels import pallas_compat as pc
 
     return pl.pallas_call(
         kernel,
@@ -96,11 +96,11 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True,
         out_specs=pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
-            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
-            pltpu.VMEM((block_q, 1), jnp.float32),    # running denom l
+            pc.VMEM((block_q, hd), jnp.float32),   # acc
+            pc.VMEM((block_q, 1), jnp.float32),    # running max m
+            pc.VMEM((block_q, 1), jnp.float32),    # running denom l
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -1,0 +1,17 @@
+"""Version-compat aliases for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUMemorySpace`` -> ``pltpu.MemorySpace`` and
+``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` across releases.
+The kernels import the names from here so both API generations work.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+MemorySpace = getattr(pltpu, "MemorySpace", None) \
+    or getattr(pltpu, "TPUMemorySpace")
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+SMEM = MemorySpace.SMEM
+ANY = MemorySpace.ANY
+VMEM = pltpu.VMEM

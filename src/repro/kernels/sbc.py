@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat as pc
 
 
 def _stats_kernel(x_ref, thr_ref, o_ref, acc_ref, *, nb: int):
@@ -55,12 +56,12 @@ def sbc_stats(x_flat, thr, *, block: int = 65536, interpret: bool = False):
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((block,), lambda b: (b,)),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=pc.SMEM),
         ],
         out_specs=pl.BlockSpec((1, 4), lambda b: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 4), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((1, 4), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[pc.VMEM((1, 4), jnp.float32)],
+        compiler_params=pc.CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x_flat, thr)
@@ -87,11 +88,11 @@ def sbc_apply(x_flat, scalars, *, block: int = 65536,
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((block,), lambda b: (b,)),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=pc.SMEM),
         ],
         out_specs=pl.BlockSpec((block,), lambda b: (b,)),
         out_shape=jax.ShapeDtypeStruct((n,), x_flat.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pc.CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x_flat, scalars)

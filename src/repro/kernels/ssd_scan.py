@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pallas_compat as pc
 
 
 def _segsum(a):
@@ -95,8 +96,8 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = False):
         ],
         out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
-        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[pc.VMEM((P, N), jnp.float32)],
+        compiler_params=pc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, Bm, Cm)

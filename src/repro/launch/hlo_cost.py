@@ -147,13 +147,16 @@ def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
 def _dot_flops(ins: Instr, comp: Computation) -> float:
     res = _dims_of(ins.shape)
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
-    pos = ins.line.find(f" {ins.op}(")
-    om = re.search(r"\(([^)]*)\)", ins.line[pos:]) if pos >= 0 else None
-    if not om:
-        return 0.0
-    operands = [o.strip() for o in om.group(1).split(",")]
+    operands = _operands(ins)
     lhs = operands[0] if operands else None
     lhs_shape = comp.shapes.get(lhs, "")
+    if not lhs_shape:
+        # older dumps inline the operand shape: dot(f32[M,K]{..} %a, ...);
+        # _dims_of picks the first (lhs) shape in the operand text
+        pos = ins.line.find(f" {ins.op}(")
+        om = re.search(r"\(([^)]*)\)", ins.line[pos:]) if pos >= 0 else None
+        if om:
+            lhs_shape = om.group(1)
     lhs_dims = _dims_of(lhs_shape)
     k = 1
     if m and m.group(1):
@@ -168,10 +171,19 @@ def _dot_flops(ins: Instr, comp: Computation) -> float:
 
 
 def _operands(ins: Instr):
+    """Operand names of an instruction.
+
+    Handles both HLO text generations: ``op(%a, %b)`` and the older dumps
+    that inline operand shapes — ``op(f32[8,16]{1,0} %a, ...)`` — by
+    keeping only the trailing ``%name`` token of each operand.
+    """
     pos = ins.line.find(f" {ins.op}(")
     om = re.search(r"\(([^)]*)\)", ins.line[pos:]) if pos >= 0 else None
     if not om:
         return []
+    names = re.findall(r"%[\w\.\-]+", om.group(1))
+    if names:
+        return names
     return [o.strip() for o in om.group(1).split(",") if o.strip()]
 
 
@@ -300,6 +312,10 @@ def analyze(text: str) -> CostTotals:
             if not fused and base in _BYTE_ANCHORS:
                 b = _instr_bytes(ins, comp, comps)
                 tot.bytes += b
+            elif not fused and base in _ARITH:
+                # backends that don't fuse (CPU dumps): a top-level
+                # elementwise op is its own fusion root — count the write
+                tot.bytes += shape_bytes(ins.shape)
             # recursion
             if base == "fusion":
                 fm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
@@ -320,7 +336,8 @@ def analyze(text: str) -> CostTotals:
                     tot.add(sub.scaled(trips))
             elif base in ("call", "conditional", "async-start"):
                 for fm in re.finditer(
-                        r"(?:calls|branch_computations)=\{?%?([\w\.\-, %]+)",
+                        r"(?:calls|to_apply|branch_computations)="
+                        r"\{?%?([\w\.\-, %]+)",
                         ins.line):
                     for cn in re.findall(r"[\w\.\-]+", fm.group(1)):
                         sub = visit(cn, fused, stack | {name})

@@ -1,0 +1,151 @@
+"""Device-resident engine regression tests: the single jitted ``lax.scan``
+trajectory must reproduce the seed's per-period Python loop (loss/acc/time
+series), the vmap-over-seeds sweep must batch cleanly, and the big-model
+multi-step scan must match sequential ``train_step`` calls."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DeviceProfile
+from repro.data.pipeline import ClassificationData
+from repro.fed import engine
+from repro.fed.sweep import run_seed_batch, run_sweep
+from repro.fed.trainer import FeelSimulation, run_scheme
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    full = ClassificationData.synthetic(n=700, dim=48, seed=0, spread=6.0)
+    return full.split(120)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return [DeviceProfile(kind="cpu", f_cpu=f * 1e9) for f in [0.7, 1.4, 2.1]]
+
+
+def _pair(dataset, fleet, policy, **kw):
+    data, test = dataset
+    mk = lambda eng: FeelSimulation(  # noqa: E731
+        fleet, data, test, partition="noniid", policy=policy, b_max=32,
+        base_lr=0.15, seed=5, engine=eng, **kw)
+    return mk("scan"), mk("python")
+
+
+@pytest.mark.parametrize("policy", ["proposed", "full"])
+def test_scan_matches_python_loop(dataset, fleet, policy):
+    """feel/proposed and gradient_fl (policy=full): identical schedules,
+    loss/acc/time series equal to float tolerance."""
+    sim_s, sim_p = _pair(dataset, fleet, policy)
+    rs = sim_s.run(12, eval_every=4)
+    rp = sim_p.run(12, eval_every=4)
+    np.testing.assert_allclose(rs.times, rp.times, rtol=0, atol=0)
+    assert rs.global_batches == rp.global_batches
+    np.testing.assert_allclose(rs.losses, rp.losses, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(rs.accs, rp.accs, atol=1e-5, rtol=1e-5)
+    # final params agree too (same trajectory, not just same metrics)
+    for a, b in zip(jax.tree_util.tree_leaves(sim_s.params),
+                    jax.tree_util.tree_leaves(sim_p.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_scan_matches_python_loop_local_steps(dataset, fleet):
+    """tau>1 local updates go through the same scan port."""
+    sim_s, sim_p = _pair(dataset, fleet, "proposed", local_steps=2)
+    rs = sim_s.run(6, eval_every=3)
+    rp = sim_p.run(6, eval_every=3)
+    np.testing.assert_allclose(rs.losses, rp.losses, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(rs.times, rp.times, rtol=0, atol=0)
+
+
+def test_xi_feedback_applied_post_hoc(dataset, fleet):
+    sim, _ = _pair(dataset, fleet, "proposed")
+    xi0 = sim.scheduler.xi_est.xi
+    sim.run(8, eval_every=4)
+    assert sim.scheduler.xi_est.xi != xi0
+
+
+def test_vmap_over_seeds_shapes(dataset, fleet):
+    """run_seed_batch: one compiled program, (n_seeds, periods) series."""
+    data, test = dataset
+    seeds, periods = [0, 1, 2, 3], 5
+    sims = [FeelSimulation(fleet, data, test, partition="iid",
+                           policy="full", b_max=32, base_lr=0.15, seed=s)
+            for s in seeds]
+    losses, accs, times, gb = run_seed_batch(sims, periods)
+    assert losses.shape == accs.shape == times.shape == gb.shape \
+        == (len(seeds), periods)
+    assert np.all(np.isfinite(losses)) and np.all(np.diff(times, axis=1) > 0)
+    # distinct seeds => distinct trajectories
+    assert not np.allclose(losses[0], losses[1])
+    # batched run must equal the per-seed scan run
+    solo = FeelSimulation(fleet, data, test, partition="iid", policy="full",
+                          b_max=32, base_lr=0.15, seed=seeds[2])
+    r = solo.run(periods, eval_every=2)
+    np.testing.assert_allclose(r.losses,
+                               losses[2][[0, 2, 4]], atol=1e-5, rtol=1e-5)
+
+
+def test_run_sweep_grid(dataset, fleet):
+    data, test = dataset
+    res = run_sweep({"cpu3": fleet}, data, test,
+                    policies=("proposed", "online"), partitions=("iid",),
+                    seeds=(0, 1), periods=4, b_max=32, base_lr=0.15)
+    assert set(res) == {"cpu3/iid/proposed", "cpu3/iid/online"}
+    cell = res["cpu3/iid/proposed"]
+    assert cell.accs.shape == (2, 4)
+    assert cell.speed(2.0).shape == (2,)          # unreachable => inf
+    assert np.all(np.isinf(cell.speed(2.0)))
+    rr = cell.run_result(seed_i=1, eval_every=2)
+    assert len(rr.accs) == 3                       # periods 0, 2, 3
+
+
+def test_dev_trajectory_schemes(dataset, fleet):
+    """individual / model_fl ride the scan engine and stay finite."""
+    data, test = dataset
+    ri = run_scheme("individual", fleet, data, test, "noniid", 6,
+                    eval_every=3)
+    rm = run_scheme("model_fl", fleet, data, test, "noniid", 6,
+                    eval_every=3)
+    assert np.isfinite(ri.accs[-1]) and np.isfinite(rm.accs[-1])
+    assert rm.times[-1] > ri.times[-1]
+
+
+def test_multi_train_step_matches_sequential():
+    """Big-model path: lax.scan of train_step == per-step Python loop."""
+    from repro.configs import ARCHS
+    from repro.fed.train_step import (TrainState, make_multi_train_step,
+                                      make_train_step)
+    from repro.models.model import Runtime, init
+    from repro.optim import sgd
+
+    cfg = ARCHS["qwen1.5-4b"].reduced()
+    rt = Runtime()
+    params = init(cfg, jax.random.key(0))
+    opt = sgd()
+    T, B, S = 3, 2, 8
+    toks = jax.random.randint(jax.random.key(1), (T, B, S + 1), 0, cfg.vocab)
+    batches = {"tokens": toks[..., :-1], "labels": toks[..., 1:],
+               "weights": jnp.ones((T, B, S))}
+    lrs = jnp.array([0.1, 0.05, 0.02], jnp.float32)
+
+    state0 = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    many = jax.jit(make_multi_train_step(cfg, rt, opt))
+    state_scan, metrics = many(state0, batches, lrs)
+    assert metrics["loss"].shape == (T,)
+
+    step = make_train_step(cfg, rt, opt)
+    state_seq = state0
+    seq_losses = []
+    for t in range(T):
+        b = {k: v[t] for k, v in batches.items()}
+        state_seq, m = step(state_seq, b, lrs[t])
+        seq_losses.append(float(m["loss"]))
+    np.testing.assert_allclose(np.asarray(metrics["loss"]), seq_losses,
+                               atol=1e-5, rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(state_scan.params),
+                    jax.tree_util.tree_leaves(state_seq.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-4, rtol=1e-3)

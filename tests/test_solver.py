@@ -3,7 +3,10 @@ convergence, Lemma 2, and optimality over baseline policies — including
 hypothesis property tests over random device fleets / channels."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (DeviceProfile, POLICIES, batch_closed_form,
                         e_up_bounds, gradient_bits, solve_downlink,

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.channels.model import Cell, path_loss_db
 from repro.compression.sbc import compress_dense, compressed_bits, sbc_tensor
