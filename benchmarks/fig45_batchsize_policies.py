@@ -1,36 +1,39 @@
 """Figs. 4-5 — GPU scenario: proposed joint policy vs online (B=1),
 full (B=Bmax), random batchsize, on loss/accuracy vs simulated time,
-IID and non-IID — driven by the batched sweep API (one vmapped
-``lax.scan`` per policy×partition cell, seeds batched on device)."""
+IID and non-IID — on the declarative API: all 8 (policy × partition)
+cells are shape-compatible, so the whole figure is ONE compiled program
+with the (cell × seed) grid flattened along the batch axis."""
 from __future__ import annotations
 
 import numpy as np
 
+from repro.api import Experiment, ScenarioSpec
 from repro.core import DeviceProfile
 from repro.data.pipeline import ClassificationData
-from repro.fed.sweep import run_sweep
+
+POLICIES = ["proposed", "online", "full", "random"]
 
 
 def gpu_fleet(k=6):
-    return [DeviceProfile(kind="gpu", gpu_t_low=0.02 + 0.005 * (i % 3),
-                          gpu_slope=4e-4, gpu_b_th=16) for i in range(k)]
+    return tuple(DeviceProfile(kind="gpu", gpu_t_low=0.02 + 0.005 * (i % 3),
+                               gpu_slope=4e-4, gpu_b_th=16) for i in range(k))
 
 
 def main(fast: bool = True):
     periods = 60 if fast else 1500
-    seeds = range(2, 4) if fast else range(2, 10)
+    seeds = tuple(range(2, 4)) if fast else tuple(range(2, 10))
     full = ClassificationData.synthetic(n=2200, dim=128, seed=0, spread=6.0)
     data, test = full.split(300)
-    results = run_sweep(
-        {"gpu6": gpu_fleet()}, data, test,
-        policies=("proposed", "online", "full", "random"),
-        partitions=("iid", "noniid"), seeds=seeds, periods=periods,
-        b_max=128, base_lr=0.15)
+    specs = [ScenarioSpec(fleet=gpu_fleet(), name="gpu6", partition=part,
+                          policy=pol, b_max=128, base_lr=0.15, seeds=seeds)
+             for part in ["iid", "noniid"] for pol in POLICIES]
+    res = Experiment(data, test, specs).run(periods)
+    assert res.n_buckets == 1                     # the whole figure: 1 program
     rows = []
     for part in ["iid", "noniid"]:
         t60 = {}
-        for pol in ["proposed", "online", "full", "random"]:
-            cell = results[f"gpu6/{part}/{pol}"]
+        for pol in POLICIES:
+            cell = res.sel(partition=part, policy=pol)
             t60[pol] = float(np.median(cell.speed(0.6)))
             rows.append((f"fig45/{part}/{pol}",
                          float(cell.times[:, -1].mean()) * 1e6,

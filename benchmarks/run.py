@@ -9,12 +9,13 @@ import time
 def main() -> None:
     from benchmarks import (ablation_compression, fig2_gpu_training_function,
                             fig3_generalization, fig45_batchsize_policies,
-                            loss_decay_fit, roofline, solver_scaling,
-                            sweep_speed, table2_schemes)
+                            loss_decay_fit, roofline, smoke_experiment,
+                            solver_scaling, sweep_speed, table2_schemes)
     modules = [
         ("fig2_gpu_training_function", fig2_gpu_training_function),
         ("solver_scaling", solver_scaling),
         ("loss_decay_fit", loss_decay_fit),
+        ("smoke_experiment", smoke_experiment),
         ("table2_schemes", table2_schemes),
         ("fig3_generalization", fig3_generalization),
         ("fig45_batchsize_policies", fig45_batchsize_policies),

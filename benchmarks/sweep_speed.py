@@ -1,40 +1,70 @@
-"""Engine wall-clock benchmark (ISSUE 1 acceptance): a 50-period, 8-seed
-feel/proposed sweep, device-resident ``vmap(lax.scan)`` engine vs the seed
-implementation.
+"""Sweep engine wall-clock: 3-way comparison on an 8-cell × 8-seed grid
+(ISSUE 2 acceptance: ≥ 4 cells × 8 seeds), emitting ``BENCH_sweep.json``.
 
-The baseline below reproduces the seed's ``FeelSimulation.run`` faithfully:
-one Python iteration per period, scalar Algorithm-1 ``scheduler.plan()``
-per period, eager exact-top_k SBC, ``float()`` host syncs each step, seeds
-run sequentially.  The engine path is the production configuration:
-lockstep-vectorized horizon planning + one compiled ``vmap(lax.scan)``
-advancing all seeds.  Acceptance bar: >=5x."""
+The grid is a scenario *family* — 2 CPU fleets × {iid, noniid} × 2 base
+learning rates, all under the proposed Algorithm-1 policy — i.e. the
+workload the declarative API exists for.  Rungs (same grid; schedules are
+bit-identical across rungs, so this measures pure implementation
+overhead):
+
+  python_loop   — the seed's per-period reference loop: scalar
+                  ``scheduler.plan()`` per period, eager exact-top_k SBC,
+                  ``float()`` host syncs each step, seeds sequential.
+                  Measured on a seed subset and extrapolated (labeled in
+                  the JSON) in fast mode; full grid otherwise.
+  percell_vmap  — PR 1's ``run_sweep`` grid driver, frozen verbatim below:
+                  per cell, simulations constructed and horizons planned
+                  sequentially (per-period channel draws, per-scenario
+                  Algorithm-1 rows), then one vmap(lax.scan) per cell.
+                  Every cell re-plans from scratch — the per-cell driver
+                  cannot see that cells share planning work.
+  bucket_vmap   — the declarative API: one ``Experiment`` lowering the
+                  whole grid to ONE compiled program — batched channel
+                  draws, shared-fleet Algorithm-1 rows fused across
+                  scenarios, horizons deduplicated across rows that are
+                  scheduler-identical modulo partition/base_lr (exact, not
+                  approximate), vmapped init, flattened (cell × seed) axis.
+
+Acceptance bar: bucket_vmap >= 2x over PR 1's per-cell loop.
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Experiment, ScenarioSpec
 from repro.compression.sbc import compress_dense
-from repro.core import DeviceProfile
+from repro.core import DeviceProfile, FeelScheduler
 from repro.data.pipeline import ClassificationData
-from repro.fed import feel_model
-from repro.fed.sweep import run_seed_batch
+from repro.fed import engine
 from repro.fed.trainer import FeelSimulation
 
-PERIODS, SEEDS = 50, range(8)
+PERIODS, SEEDS = 50, tuple(range(8))
+BMAX, HIDDEN = 24, 96
+CELLS = [(fl, part, lr) for fl in ("cpu6-slow", "cpu6-fast")
+         for part in ("iid", "noniid") for lr in (0.1, 0.15)]
 
 
-def _fleet():
-    return [DeviceProfile(kind="cpu", f_cpu=f * 1e9)
-            for f in [0.7, 0.7, 1.4, 1.4, 2.1, 2.1]]
+def _fleet(tag):
+    tiers = ([0.7, 0.7, 1.4, 1.4, 2.1, 2.1] if tag == "cpu6-slow"
+             else [1.0, 1.0, 1.8, 1.8, 2.6, 2.6])
+    return tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9) for f in tiers)
 
 
-def _sims(data, test, seeds):
-    return [FeelSimulation(_fleet(), data, test, partition="noniid",
-                           policy="proposed", b_max=64, base_lr=0.15,
-                           seed=s) for s in seeds]
+def _sims(data, test, cell, seeds):
+    fl, part, lr = cell
+    return [FeelSimulation(list(_fleet(fl)), data, test, partition=part,
+                           policy="proposed", b_max=BMAX, base_lr=lr,
+                           hidden=HIDDEN, seed=s) for s in seeds]
+
+
+# ---------------------------------------------------------------------------
+# rung 1: the seed's python loop (frozen verbatim from PR 1's baseline)
+# ---------------------------------------------------------------------------
 
 
 def _seed_style_run(sim: FeelSimulation, periods: int, eval_every: int = 10):
@@ -68,28 +98,153 @@ def _seed_style_run(sim: FeelSimulation, periods: int, eval_every: int = 10):
                               jnp.asarray(sim.test.y)))
 
 
+# ---------------------------------------------------------------------------
+# rung 2: PR 1's per-cell grid driver, frozen verbatim (per-period channel
+# draws, per-scenario planning, one vmap(lax.scan) invocation per cell)
+# ---------------------------------------------------------------------------
+
+
+def _pr1_plan_horizon_proposed(sched: FeelScheduler, periods: int):
+    """PR 1's ``_plan_horizon_proposed`` body: per-period Monte-Carlo rate
+    draws, per-scenario Algorithm-1 rows."""
+    from repro.core.solver import optimize_batch_rows, solve_period_rows
+    c = sched.cell.cfg
+    K = len(sched.devices)
+    rates_up = np.empty((periods, K))
+    rates_down = np.empty((periods, K))
+    for p in range(periods):
+        rates_up[p] = sched.cell.avg_rate(sched._dist_km)
+        rates_down[p] = sched.cell.avg_rate(sched._dist_km)
+    xi = sched.xi_est.xi
+    reopt = np.array([(sched._period + p) % sched.reopt_every == 0
+                      or (p == 0 and sched._b_cache is None)
+                      for p in range(periods)])
+    B = np.empty(periods)
+    carry = sched._b_cache
+    if reopt.any():
+        b_star = optimize_batch_rows(
+            sched.devices, rates_up[reopt], rates_down[reopt],
+            sched.payload_bits, c.frame_up_s, c.frame_down_s, xi,
+            sched.b_max)
+        j = 0
+        for p in range(periods):
+            if reopt[p]:
+                carry = float(b_star[j])
+                j += 1
+            B[p] = carry
+    else:
+        B[:] = carry
+    sol = solve_period_rows(sched.devices, rates_up, rates_down,
+                            sched.payload_bits, c.frame_up_s,
+                            c.frame_down_s, xi, B, sched.b_max)
+    batch = np.maximum(np.round(sol["batch"]).astype(int), 1)
+    return batch, sol, B
+
+
+def _pr1_run_cell(data, test, cell, seeds, periods):
+    """PR 1's run_sweep body for one cell: sequential sim construction and
+    planning, then one batched trajectory."""
+    from repro.core.efficiency import lr_scale
+    from repro.core.scheduler import PlanHorizon
+    sims = _sims(data, test, cell, seeds)
+    schedules = []
+    for sim in sims:
+        sched = sim.scheduler
+        batch, sol, B = _pr1_plan_horizon_proposed(sched, periods)
+        gb = batch.sum(1)
+        horizon = PlanHorizon(
+            batch=batch, tau_up=sol["tau_up"], tau_down=sol["tau_down"],
+            lr=np.array([lr_scale(sched.base_lr, g, sched.ref_batch)
+                         for g in gb], np.float64),
+            latency=sol["latency"], global_batch=gb.astype(np.int64))
+        schedules.append(engine.build_schedule(
+            sched, sim.batcher, sim.devices, periods, horizon=horizon))
+    params0 = jax.tree_util.tree_map(
+        lambda *a: jnp.stack(a), *[sim.params for sim in sims])
+    residual0 = jax.tree_util.tree_map(
+        lambda *a: jnp.stack(a), *[sim.initial_residual() for sim in sims])
+    s0 = sims[0]
+    _, _, (losses, accs, _) = engine.run_trajectory_batch(
+        params0, residual0, schedules, s0.data, s0.test,
+        local_steps=s0.local_steps, compress=s0.compress,
+        ratio=s0.scheduler.compression)
+    return np.asarray(losses), np.asarray(accs)
+
+
+def _pr1_run_grid(data, test, periods):
+    return {cell: _pr1_run_cell(data, test, cell, SEEDS, periods)
+            for cell in CELLS}
+
+
+# ---------------------------------------------------------------------------
+# rung 3: the declarative bucket lowering
+# ---------------------------------------------------------------------------
+
+
+def _bucket_specs():
+    return [ScenarioSpec(fleet=_fleet(fl), name=fl, partition=part,
+                         policy="proposed", b_max=BMAX, base_lr=lr,
+                         hidden=HIDDEN, seeds=SEEDS)
+            for fl, part, lr in CELLS]
+
+
 def main(fast: bool = True):
-    full = ClassificationData.synthetic(n=2200, dim=128, seed=0, spread=6.0)
-    data, test = full.split(300)
+    full = ClassificationData.synthetic(n=900, dim=48, seed=0, spread=6.0)
+    data, test = full.split(150)
+    n_cells = len(CELLS)
+    n_runs = n_cells * len(SEEDS)
 
-    # warm both paths (same shapes) so jit compile is excluded
-    run_seed_batch(_sims(data, test, SEEDS), PERIODS)
-    _seed_style_run(_sims(data, test, [99])[0], 3)
+    # warm all paths (same shapes) so jit compile is excluded
+    Experiment(data, test, _bucket_specs()).run(PERIODS)
+    _pr1_run_cell(data, test, CELLS[0], SEEDS, PERIODS)
+    _seed_style_run(_sims(data, test, CELLS[0], [99])[0], 3)
 
     t0 = time.time()
-    run_seed_batch(_sims(data, test, SEEDS), PERIODS)
-    t_scan = time.time() - t0
+    res = Experiment(data, test, _bucket_specs()).run(PERIODS)
+    t_bucket = time.time() - t0
+    assert res.n_buckets == 1
 
     t0 = time.time()
-    for sim in _sims(data, test, SEEDS):
-        _seed_style_run(sim, PERIODS)
-    t_seed = time.time() - t0
+    _pr1_run_grid(data, test, PERIODS)
+    t_percell = time.time() - t0
 
-    speedup = t_seed / t_scan
-    return [("sweep_speed/engine_8seed_50p", t_scan * 1e6,
-             f"wall={t_scan:.2f}s"),
-            ("sweep_speed/seed_loop_8seed_50p", t_seed * 1e6,
-             f"wall={t_seed:.2f}s;speedup={speedup:.1f}x")]
+    python_runs = 2 if fast else n_runs
+    t0 = time.time()
+    done = 0
+    for cell in CELLS:
+        if done == python_runs:
+            break
+        for sim in _sims(data, test, cell, SEEDS):
+            if done == python_runs:
+                break
+            _seed_style_run(sim, PERIODS)
+            done += 1
+    t_python = (time.time() - t0) * (n_runs / python_runs)
+
+    report = {
+        "grid": {"cells": ["/".join(map(str, c)) for c in CELLS],
+                 "n_cells": n_cells, "n_seeds": len(SEEDS),
+                 "periods": PERIODS, "b_max": BMAX, "hidden": HIDDEN},
+        "python_loop_s": t_python,
+        "python_loop_extrapolated_from_runs": python_runs,
+        "percell_vmap_s": t_percell,
+        "bucket_vmap_s": t_bucket,
+        "speedup_bucket_vs_percell": t_percell / t_bucket,
+        "speedup_bucket_vs_python": t_python / t_bucket,
+        "n_buckets": res.n_buckets,
+    }
+    with open("BENCH_sweep.json", "w") as f:
+        json.dump(report, f, indent=2)
+
+    tag = f"{n_cells}cell_8seed_50p"
+    return [(f"sweep_speed/bucket_vmap_{tag}", t_bucket * 1e6,
+             f"wall={t_bucket:.2f}s;buckets={res.n_buckets}"),
+            (f"sweep_speed/percell_vmap_{tag}", t_percell * 1e6,
+             f"wall={t_percell:.2f}s;"
+             f"speedup_bucket={t_percell / t_bucket:.2f}x"),
+            (f"sweep_speed/python_loop_{tag}", t_python * 1e6,
+             f"wall={t_python:.2f}s(extrap from {python_runs} runs);"
+             f"speedup_bucket={t_python / t_bucket:.2f}x")]
 
 
 if __name__ == "__main__":

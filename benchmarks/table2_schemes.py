@@ -2,76 +2,66 @@
 IID and non-IID (synthetic data stand-in; scheme ORDERING is the
 reproduction target, DESIGN.md §9).
 
-feel/gradient_fl run on the device-resident scan engine via the seed-batched
-sweep path; individual/model_fl use the scan-compiled per-device-parameter
-trajectory (``run_scheme``)."""
+Declarative-API driver: the whole (K × partition × scheme) grid is ONE
+``Experiment`` — feel/gradient_fl lower to a bucketed FEEL scan per fleet
+size, individual/model_fl to the per-device-parameter scan, all seeds and
+cells batched along the flattened (scenario × seed) axis."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
+from repro.api import Experiment, ScenarioSpec
 from repro.core import DeviceProfile
 from repro.data.pipeline import ClassificationData
-from repro.fed.sweep import run_seed_batch
-from repro.fed.trainer import FeelSimulation, run_scheme
+
+SCHEMES = ["individual", "model_fl", "gradient_fl", "feel"]
 
 
 def fleet(k):
     tiers = [0.7e9, 1.4e9, 2.1e9]
-    return [DeviceProfile(kind="cpu", f_cpu=tiers[i % 3]) for i in range(k)]
-
-
-def _feel_speed(devices, data, test, part, policy, periods, seeds,
-                target=0.6):
-    """Median time-to-target + final acc over a vmapped seed batch."""
-    sims = [FeelSimulation(devices, data, test, partition=part,
-                           policy=policy, b_max=128, base_lr=0.05, seed=s)
-            for s in seeds]
-    losses, accs, times, _ = run_seed_batch(sims, periods)
-    reach = np.where(accs >= target, times, np.inf).min(axis=1)
-    return float(np.median(reach)), float(accs[:, -1].mean()), \
-        float(times[:, -1].mean())
+    return tuple(DeviceProfile(kind="cpu", f_cpu=tiers[i % 3])
+                 for i in range(k))
 
 
 def main(fast: bool = True):
     periods = 60 if fast else 400
     n = 2200 if fast else 12000
-    seeds = range(2) if fast else range(8)
+    seeds = tuple(range(2)) if fast else tuple(range(8))
     target = 0.6
-    rows = []
+    full = ClassificationData.synthetic(n=n, dim=128, seed=0, spread=6.0)
+    data, test = full.split(max(200, n // 10))
+
+    specs = [
+        ScenarioSpec(fleet=fleet(k), name=f"K{k}", scheme=scheme,
+                     partition=part, policy="proposed", b_max=128,
+                     base_lr=0.05, seeds=seeds)
+        for k in ([6] if fast else [6, 12])
+        for part in ["iid", "noniid"]
+        for scheme in SCHEMES]
+
+    t0 = time.time()
+    res = Experiment(data, test, specs).run(periods)
+    wall = time.time() - t0
+
+    rows = [("table2/_experiment", wall * 1e6,
+             f"rows={res.rows};buckets={res.n_buckets}")]
     for k in ([6] if fast else [6, 12]):
         for part in ["iid", "noniid"]:
-            full = ClassificationData.synthetic(n=n, dim=128, seed=0,
-                                                spread=6.0)
-            data, test = full.split(max(200, n // 10))
             base = None
-            for scheme in ["individual", "model_fl", "gradient_fl", "feel"]:
-                t0 = time.time()
-                if scheme in ("feel", "gradient_fl"):
-                    policy = "proposed" if scheme == "feel" else "full"
-                    t_reach, acc, sim_t = _feel_speed(
-                        fleet(k), data, test, part, policy, periods, seeds,
-                        target)
-                else:
-                    # same seed set as the feel schemes so the speedup
-                    # ratio compares matched medians
-                    runs = [run_scheme(scheme, fleet(k), data, test, part,
-                                       periods, seed=s,
-                                       eval_every=max(1, periods // 6))
-                            for s in seeds]
-                    t_reach = float(np.median([r.speed(target)
-                                               for r in runs]))
-                    acc = float(np.mean([r.accs[-1] for r in runs]))
-                    sim_t = float(np.mean([r.times[-1] for r in runs]))
+            for scheme in SCHEMES:
+                cell = res.sel(fleet=f"K{k}", partition=part, scheme=scheme)
+                t_reach = float(np.median(cell.speed(target)))
+                acc = float(cell.final_acc.mean())
+                sim_t = float(cell.times[:, -1].mean())
                 # training speedup vs individual = inverse ratio of
                 # simulated time to a common accuracy target
                 if scheme == "individual":
                     base = t_reach
                 speedup = (base / t_reach) if (base and np.isfinite(t_reach)
                                                and np.isfinite(base)) else 0.0
-                rows.append((f"table2/K{k}/{part}/{scheme}",
-                             (time.time() - t0) * 1e6,
+                rows.append((f"table2/K{k}/{part}/{scheme}", 0.0,
                              f"acc={acc:.4f};simT={sim_t:.1f}s;"
                              f"speedup={speedup:.2f}x"))
     return rows

@@ -1,10 +1,10 @@
 """Train a classifier with the full FEEL loop (5 steps per period) under
 the proposed scheduler and the paper's baseline schemes, on pathological
-non-IID data — a laptop-scale Table II, on the device-resident engine.
+non-IID data — a laptop-scale Table II on the declarative API.
 
-Every scheme's trajectory is one compiled ``lax.scan``; with ``--seeds``
-the feel row additionally reports a vmapped multi-seed spread via the
-sweep API.
+One ``Experiment`` declares all four Table-II schemes (× seeds); the
+lowering batches every shape-compatible (scheme, seed) row into the same
+compiled ``vmap(lax.scan)`` program.
 
 Run:  PYTHONPATH=src python examples/feel_vs_baselines.py [--periods N]
 """
@@ -12,46 +12,48 @@ import argparse
 
 import numpy as np
 
+from repro.api import Experiment, ScenarioSpec
 from repro.core import DeviceProfile
 from repro.data.pipeline import ClassificationData
-from repro.fed.sweep import run_sweep
-from repro.fed.trainer import run_scheme
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--periods", type=int, default=80)
 ap.add_argument("--k", type=int, default=6)
 ap.add_argument("--seeds", type=int, default=1,
-                help="extra seeds for the proposed-scheme sweep row")
+                help="seeds per scheme (vmapped on device)")
 args = ap.parse_args()
 
 tiers = [0.7e9, 1.4e9, 2.1e9]
-devices = [DeviceProfile(kind="cpu", f_cpu=tiers[i % 3])
-           for i in range(args.k)]
+devices = tuple(DeviceProfile(kind="cpu", f_cpu=tiers[i % 3])
+                for i in range(args.k))
 full = ClassificationData.synthetic(n=2600, dim=128, seed=0, spread=6.0)
 data, test = full.split(400)
 
-print(f"{'scheme':<14}{'final acc':>10}{'sim time':>10}{'t@60%':>9}")
-rows = {}
-for scheme in ["individual", "model_fl", "gradient_fl", "feel"]:
-    r = run_scheme(scheme, devices, data, test, "noniid", args.periods,
-                   eval_every=max(1, args.periods // 8))
-    rows[scheme] = r
-    t60 = r.speed(0.60)
-    print(f"{scheme:<14}{r.accs[-1]:>10.4f}{r.times[-1]:>9.1f}s"
-          f"{t60 if np.isfinite(t60) else float('nan'):>9.1f}")
+seeds = tuple(range(args.seeds))
+specs = [ScenarioSpec(fleet=devices, name=f"K{args.k}", scheme=scheme,
+                      partition="noniid", b_max=128, base_lr=0.05,
+                      seeds=seeds)
+         for scheme in ["individual", "model_fl", "gradient_fl", "feel"]]
+res = Experiment(data, test, specs).run(args.periods)
+print(f"{len(specs)} schemes x {len(seeds)} seeds -> "
+      f"{res.n_buckets} compiled programs\n")
 
-base = rows["individual"].speed(0.60)
-feel = rows["feel"].speed(0.60)
-if np.isfinite(base) and np.isfinite(feel):
+print(f"{'scheme':<14}{'final acc':>10}{'sim time':>10}{'t@60%':>9}")
+t60 = {}
+for labels, cell in res.cells():
+    scheme = labels["scheme"]
+    t60[scheme] = float(np.median(cell.speed(0.60)))
+    print(f"{scheme:<14}{cell.final_acc.mean():>10.4f}"
+          f"{cell.times[:, -1].mean():>9.1f}s"
+          f"{t60[scheme] if np.isfinite(t60[scheme]) else float('nan'):>9.1f}")
+
+if np.isfinite(t60["individual"]) and np.isfinite(t60["feel"]):
     print(f"\nproposed scheme speedup vs individual learning: "
-          f"{base/feel:.2f}x (paper Table II reports 1.03-1.26x)")
+          f"{t60['individual'] / t60['feel']:.2f}x "
+          f"(paper Table II reports 1.03-1.26x)")
 
 if args.seeds > 1:
-    cell = run_sweep({"fleet": devices}, data, test,
-                     policies=("proposed",), partitions=("noniid",),
-                     seeds=range(args.seeds), periods=args.periods
-                     )["fleet/noniid/proposed"]
-    t60 = cell.speed(0.60)
+    cell = res.sel(scheme="feel")
     print(f"proposed over {args.seeds} vmapped seeds: "
           f"acc={cell.final_acc.mean():.4f}±{cell.final_acc.std():.4f}, "
-          f"median t@60%={np.median(t60):.1f}s")
+          f"median t@60%={np.median(cell.speed(0.60)):.1f}s")

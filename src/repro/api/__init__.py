@@ -1,0 +1,29 @@
+"""Declarative experiment API: ScenarioSpec → bucketed lowering → Results.
+
+The paper's contribution is a *family* of scenarios — CPU vs GPU fleets,
+IID vs non-IID partitions, the four Table-II schemes, batchsize policies —
+and this package is the experiment surface that serves that family at
+hardware speed:
+
+* :class:`ScenarioSpec` (``spec.py``) — one frozen, hashable cell of the
+  scenario grid: fleet, wireless ``CellConfig``, partition, policy,
+  scheme, compression, ``b_max``, ``base_lr``, ``local_steps``, seeds.
+* :class:`Experiment` (``experiment.py``) — groups specs into
+  shape-compatible buckets (the rule lives on
+  ``ScenarioSpec.bucket_key`` — see ``spec.py``'s docstring) and lowers
+  each bucket to ONE jitted ``vmap(lax.scan)`` program whose leading axis
+  flattens the (scenario × seed) grid, optionally sharded across a device
+  mesh (``launch.mesh.make_batch_mesh``).
+* :class:`Results` (``results.py``) — named (fleet, partition, policy,
+  scheme, seed, period) axes with ``sel``/``speed``/``final_acc``
+  reductions and explicit NaN handling for not-evaluated periods.
+
+The legacy entry points ``fed.sweep.run_sweep`` and
+``fed.trainer.run_scheme`` remain as thin deprecation shims on top of
+this package.
+"""
+from repro.api.experiment import Experiment
+from repro.api.results import Results, time_to_target
+from repro.api.spec import ScenarioSpec
+
+__all__ = ["Experiment", "Results", "ScenarioSpec", "time_to_target"]

@@ -1,0 +1,220 @@
+"""ScenarioSpec → compiled-program lowering.
+
+``lower(...)`` groups the flattened (spec × seed) rows of an experiment
+into shape-compatible buckets (``ScenarioSpec.bucket_key``) and executes
+each bucket as ONE jitted program:
+
+* host side, vectorized across the whole bucket: initial parameters come
+  from a single ``vmap(init)`` over the stacked per-row PRNG keys
+  (bit-identical to per-row init — counter-based PRNG), FEEL horizons from
+  ``core.scheduler.plan_horizons_batch`` (shared-fleet Algorithm-1 rows
+  fused into one lockstep solve), dev-scheme ledgers from
+  ``core.scheduler.DevScheduler``;
+* device side: ``engine.run_trajectory_batch`` /
+  ``engine.run_dev_trajectory_batch`` — a ``vmap(lax.scan)`` over the
+  flattened (scenario × seed) batch axis, optionally sharded across a
+  1-D device mesh (``launch.mesh.make_batch_mesh``), padded to the mesh
+  size by wrapping the leading rows and sliced back afterwards.
+
+Per-row rng streams (partitioner, batcher, scheduler channel draws) are
+consumed in exactly the order the per-simulation path uses, so lowering a
+grid produces bit-identical schedules to running each cell alone.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.spec import ScenarioSpec
+from repro.channels.model import Cell
+from repro.core.scheduler import (DevScheduler, FeelScheduler,
+                                  plan_horizons_batch)
+from repro.data.pipeline import (FederatedBatcher, partition_iid,
+                                 partition_noniid)
+from repro.fed import engine, feel_model
+from repro.launch.mesh import pad_batch
+
+tree_map = jax.tree_util.tree_map
+
+
+@dataclass(frozen=True)
+class Row:
+    """One realized (spec, seed) pair — one entry of a bucket's batch axis."""
+    spec: ScenarioSpec
+    seed: int
+    index: int                  # row position in the experiment's output
+
+
+@dataclass
+class Bucket:
+    """All rows sharing one ``bucket_key`` → one compiled program."""
+    key: tuple
+    rows: List[Row]
+
+    @property
+    def kind(self) -> str:
+        return self.key[0]      # "feel" | "dev"
+
+
+def group_rows(specs: Sequence[ScenarioSpec]) -> List[Bucket]:
+    """Flatten specs × seeds into rows, grouped into first-seen-order
+    buckets by shape compatibility."""
+    buckets: Dict[tuple, Bucket] = {}
+    index = 0
+    for spec in specs:
+        key = spec.bucket_key()
+        for seed in spec.seeds:
+            buckets.setdefault(key, Bucket(key=key, rows=[])) \
+                .rows.append(Row(spec=spec, seed=seed, index=index))
+            index += 1
+    return list(buckets.values())
+
+
+def _partition(spec: ScenarioSpec, data, seed: int):
+    if spec.partition == "iid":
+        return partition_iid(len(data.y), spec.k, seed)
+    return partition_noniid(data.y, spec.k, seed=seed)
+
+
+def _n_params(spec: ScenarioSpec, input_dim: int, classes: int = 10) -> int:
+    dims = [input_dim] + [spec.hidden] * (spec.depth - 1) + [classes]
+    return sum(i * o + o for i, o in zip(dims[:-1], dims[1:]))
+
+
+def _init_params_batch(rows: Sequence[Row], input_dim: int):
+    """One vmapped init over the stacked per-row keys (bit-identical to
+    per-row ``feel_model.init`` — threefry is counter-based)."""
+    spec = rows[0].spec
+    keys = jnp.stack([jax.random.key(r.seed) for r in rows])
+    return jax.vmap(lambda k: feel_model.init(
+        k, spec.hidden, depth=spec.depth, input_dim=input_dim))(keys)
+
+
+def _pad_rows(trees, n: int, pad: int):
+    """Cyclically repeat rows along every leading axis so a bucket divides
+    the mesh — valid even when the mesh is larger than the bucket
+    (pad > n); callers slice outputs back to ``n``."""
+    if pad == 0:
+        return trees
+    wrap = np.arange(n + pad) % n
+    return tree_map(
+        lambda a: a[wrap] if hasattr(a, "ndim") else a, trees)
+
+
+def _plan_key(r: Row) -> tuple:
+    """Scheduler identity modulo ``base_lr``: two rows with equal keys
+    consume identical rng streams and produce identical horizons (the
+    partition only affects the *batcher*, and base_lr only rescales the
+    lr row — rebuilt per row below), so the whole-grid lowering plans each
+    unique key ONCE.  This is a structural win a per-cell driver cannot
+    have: it never sees that its cells share planning work."""
+    s = r.spec
+    return (s.fleet, s.effective_policy, s.b_max, s.compression, s.cell,
+            s.hidden, s.depth, r.seed)
+
+
+def _rescale_lr(horizon, base_lr: float, ref_batch: float):
+    """Per-row lr row for a shared horizon: η = η₀·√(B/B_ref), identical
+    to what a scheduler constructed with this base_lr would emit."""
+    return replace(horizon, lr=base_lr * np.sqrt(
+        horizon.global_batch / ref_batch))
+
+
+def run_feel_bucket(bucket: Bucket, data, test, periods: int, mesh=None):
+    """Lower + execute one FEEL-family bucket; returns (N, P) series."""
+    rows = bucket.rows
+    spec0 = rows[0].spec
+    input_dim = data.x.shape[1]
+    n_params = _n_params(spec0, input_dim)
+
+    # one scheduler (and one planned horizon) per unique plan key
+    plan_keys = [_plan_key(r) for r in rows]
+    unique: Dict[tuple, int] = {}
+    schedulers = []
+    for r, key in zip(rows, plan_keys):
+        if key in unique:
+            continue
+        unique[key] = len(schedulers)
+        schedulers.append(FeelScheduler(
+            devices=r.spec.fleet, n_params=n_params,
+            policy=r.spec.effective_policy, b_max=r.spec.b_max,
+            base_lr=r.spec.base_lr, compression=r.spec.compression,
+            cell_cfg=r.spec.cell, seed=r.seed))
+    planned = plan_horizons_batch(schedulers, periods)
+
+    schedules = []
+    for r, key in zip(rows, plan_keys):
+        parts = _partition(r.spec, data, r.seed)
+        batcher = FederatedBatcher(parts, r.spec.b_max, r.seed)
+        sched = schedulers[unique[key]]
+        horizon = planned[unique[key]]
+        if r.spec.base_lr != sched.base_lr:
+            horizon = _rescale_lr(horizon, r.spec.base_lr, sched.ref_batch)
+        schedules.append(engine.build_schedule(
+            sched, batcher, r.spec.fleet, periods, r.spec.local_steps,
+            horizon=horizon))
+
+    params0 = _init_params_batch(rows, input_dim)
+    residual0 = tree_map(
+        lambda p: jnp.zeros((p.shape[0], spec0.k) + p.shape[1:], p.dtype),
+        params0)
+
+    n = len(rows)
+    pad = 0 if mesh is None else pad_batch(n, mesh)
+    if pad:
+        params0, residual0 = _pad_rows((params0, residual0), n, pad)
+        schedules = [schedules[i % n] for i in range(n + pad)]
+    _, _, (losses, accs, _) = engine.run_trajectory_batch(
+        params0, residual0, schedules, data, test,
+        local_steps=spec0.local_steps, compress=spec0.compress,
+        ratio=spec0.compression, mesh=mesh)
+    losses = np.asarray(losses)[:n]
+    accs = np.asarray(accs)[:n]
+    times = np.stack([s.times for s in schedules[:n]])
+    gb = np.stack([s.global_batch for s in schedules[:n]])
+    return losses, accs, times, gb
+
+
+def run_dev_bucket(bucket: Bucket, data, test, periods: int, mesh=None):
+    """Lower + execute one individual/model_fl bucket (N, P) series."""
+    rows = bucket.rows
+    spec0 = rows[0].spec
+    input_dim = data.x.shape[1]
+    n_params = _n_params(spec0, input_dim)
+    batch = spec0.dev_epoch_batch
+
+    horizons = []
+    for r in rows:
+        parts = _partition(r.spec, data, r.seed)
+        sched = DevScheduler(
+            devices=r.spec.fleet, parts=parts, batch=batch,
+            # model-based FL uploads the raw parameters: d·p bits
+            payload_bits=32.0 * n_params,
+            upload=(r.spec.scheme == "model_fl"),
+            seed=r.seed, cell=Cell.make(r.seed, r.spec.cell))
+        horizons.append(sched.plan_horizon(periods))
+
+    p0 = _init_params_batch(rows, input_dim)
+    dev_params0 = tree_map(
+        lambda a: jnp.broadcast_to(
+            a[:, None], (a.shape[0], spec0.k) + a.shape[1:]), p0)
+    idx = np.stack([h.idx for h in horizons])
+    lr = np.array([r.spec.base_lr for r in rows], np.float32)
+
+    n = len(rows)
+    pad = 0 if mesh is None else pad_batch(n, mesh)
+    if pad:
+        dev_params0, idx, lr = _pad_rows((dev_params0, idx, lr), n, pad)
+    _, (losses, accs) = engine.run_dev_trajectory_batch(
+        dev_params0, idx, lr, data, test,
+        average=(spec0.scheme == "model_fl"), mesh=mesh)
+    losses = np.asarray(losses)[:n]
+    accs = np.asarray(accs)[:n]
+    times = np.stack([h.times for h in horizons])
+    gb = np.broadcast_to(batch * spec0.k,
+                         (n, periods)).astype(np.int64).copy()
+    return losses, accs, times, gb

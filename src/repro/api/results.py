@@ -1,0 +1,110 @@
+"""Structured sweep results with named scenario axes.
+
+A :class:`Results` is a flat table: one row per realized (scenario, seed)
+pair, one column block per trajectory series (period-major).  Row
+coordinates — ``fleet``, ``partition``, ``policy``, ``scheme``, ``seed`` —
+are first-class, so reductions and selections are label-driven instead of
+string-key parsing:
+
+    res = Experiment(data, test, specs).run(periods=100)
+    res.sel(policy="proposed", partition="noniid").speed(0.6)
+    res.sel(scheme="model_fl").final_acc.mean()
+
+The label coordinates are conveniences and need not be unique: two specs
+differing only in, say, ``base_lr`` or ``b_max`` share every label.  The
+``spec`` coordinate is the precise one — it holds the originating
+:class:`ScenarioSpec` itself, so ``res.sel(spec=my_spec)`` always
+isolates exactly one scenario's seed rows, and :meth:`Results.cells`
+groups by it (never merging distinct scenarios, whatever their labels).
+
+NaN accuracies mean "not evaluated at this period" (the python reference
+engine only scores at eval points); :func:`time_to_target` masks them
+explicitly before comparing, so an unevaluated period never counts as a
+miss *or* a hit and no invalid-compare warnings leak.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Mapping, Tuple
+
+import numpy as np
+
+COORD_NAMES = ("fleet", "partition", "policy", "scheme", "seed", "spec")
+
+
+def time_to_target(accs, times, target_acc: float):
+    """Simulated seconds until accuracy first reaches ``target_acc``.
+
+    ``accs``/``times``: (..., periods).  NaN accuracies are masked out
+    before the comparison (explicitly "not evaluated", never "failed"),
+    and rows that never reach the target return ``inf``.
+    """
+    accs = np.asarray(accs, float)
+    times = np.asarray(times, float)
+    hit = np.where(np.isnan(accs), False, accs >= target_acc)
+    return np.where(hit, times, np.inf).min(axis=-1)
+
+
+@dataclass(frozen=True)
+class Results:
+    """Named-axis sweep output: (row, period) series + per-row coords."""
+    coords: Mapping[str, np.ndarray]   # each (rows,): COORD_NAMES keys
+    losses: np.ndarray                 # (rows, periods)
+    accs: np.ndarray                   # (rows, periods)
+    times: np.ndarray                  # (rows, periods) cumulative seconds
+    global_batch: np.ndarray           # (rows, periods)
+    n_buckets: int = 1                 # compiled programs this run lowered to
+
+    @property
+    def rows(self) -> int:
+        return self.losses.shape[0]
+
+    @property
+    def periods(self) -> int:
+        return self.losses.shape[1]
+
+    @property
+    def final_acc(self) -> np.ndarray:
+        return self.accs[:, -1]
+
+    @property
+    def final_loss(self) -> np.ndarray:
+        return self.losses[:, -1]
+
+    def speed(self, target_acc: float) -> np.ndarray:
+        """(rows,) simulated time to reach ``target_acc`` (inf if never)."""
+        return time_to_target(self.accs, self.times, target_acc)
+
+    def sel(self, **coords) -> "Results":
+        """Filter rows by coordinate value(s): scalars or collections.
+
+        ``res.sel(policy="proposed", seed=(0, 1))``
+        """
+        mask = np.ones(self.rows, bool)
+        for name, want in coords.items():
+            if name not in self.coords:
+                raise KeyError(f"unknown coordinate {name!r}; "
+                               f"have {tuple(self.coords)}")
+            col = self.coords[name]
+            if isinstance(want, (list, tuple, set, frozenset, np.ndarray)):
+                mask &= np.array([c in want for c in col], bool)
+            else:
+                mask &= np.asarray(col == want, bool)
+        return Results(
+            coords={k: v[mask] for k, v in self.coords.items()},
+            losses=self.losses[mask], accs=self.accs[mask],
+            times=self.times[mask], global_batch=self.global_batch[mask],
+            n_buckets=self.n_buckets)
+
+    def cells(self) -> Iterator[Tuple[Dict[str, object], "Results"]]:
+        """Iterate unique (fleet, partition, policy, scheme) cells in row
+        order, yielding (labels, seed-rows Results)."""
+        seen = []
+        keys = list(zip(*(self.coords[n].tolist()
+                          for n in COORD_NAMES if n != "seed")))
+        for key in keys:
+            if key in seen:
+                continue
+            seen.append(key)
+            labels = dict(zip((n for n in COORD_NAMES if n != "seed"), key))
+            yield labels, self.sel(**labels)

@@ -1,0 +1,119 @@
+"""Declarative scenario specification.
+
+A :class:`ScenarioSpec` is everything that defines one experimental cell of
+the paper's scenario family — device fleet, wireless cell, data partition,
+batchsize policy, Table-II training scheme, compression, learning-rate
+base, local-step count, and the seed set — as one frozen, hashable value.
+Specs carry no arrays and no rng state: they are *static* configuration,
+registered with jax as a static pytree node so they can ride through jit
+boundaries untouched.
+
+The bucketing rule (what makes two specs shape-compatible)
+----------------------------------------------------------
+``Experiment`` lowers each group of shape-compatible specs to ONE compiled
+program; :meth:`ScenarioSpec.bucket_key` is that grouping rule.  Two specs
+share a bucket iff every quantity that is *structural* for the compiled
+trajectory matches:
+
+* scheme family — ``feel``/``gradient_fl`` run the masked-slot FEEL scan;
+  ``individual``/``model_fl`` run the per-device-parameter scan (and the
+  FedAvg averaging flag is compiled in, so those two never merge);
+* fleet size K and slot width (``b_max``, or the dev schemes' fixed epoch
+  batch) — array shapes;
+* ``local_steps``, ``compress`` and ``compression`` — scan-body structure
+  (static python branching / top-k fraction inside the jitted step);
+* model architecture (``hidden``, ``depth``) — parameter pytree shapes.
+
+Everything else — partition, policy, cell geometry, base_lr, seeds — only
+changes *values* fed to the program (schedules, initial params), so specs
+differing in those still share one bucket and one trace.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+
+from repro.channels.model import CellConfig
+from repro.core.baselines import POLICIES
+from repro.core.latency import DeviceProfile
+
+SCHEMES = ("feel", "gradient_fl", "model_fl", "individual")
+# The dev-family schemes train full local epochs with a fixed per-device
+# batch; PR-1 capped it at 64 — kept as the lowering rule.
+DEV_EPOCH_BATCH_CAP = 64
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """One cell of the scenario family (all four Table-II schemes)."""
+    fleet: Tuple[DeviceProfile, ...]
+    name: str = ""                       # fleet/cell label for Results axes
+    scheme: str = "feel"                 # feel|gradient_fl|model_fl|individual
+    partition: str = "noniid"            # iid | noniid
+    policy: str = "proposed"             # core.baselines key (feel only)
+    cell: CellConfig = field(default_factory=CellConfig)
+    compress: bool = True
+    compression: float = 0.005           # SBC ratio r
+    b_max: int = 128
+    base_lr: float = 0.05
+    local_steps: int = 1
+    seeds: Tuple[int, ...] = (0,)
+    hidden: int = 256
+    depth: int = 3
+
+    def __post_init__(self):
+        object.__setattr__(self, "fleet", tuple(self.fleet))
+        object.__setattr__(self, "seeds", tuple(self.seeds))
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"scheme {self.scheme!r} not in {SCHEMES}")
+        if self.partition not in ("iid", "noniid"):
+            raise ValueError(f"partition {self.partition!r}")
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"policy {self.policy!r} not in {tuple(POLICIES)}")
+        if not self.seeds:
+            raise ValueError("seeds must be non-empty")
+
+    # ---- derived lowering attributes -------------------------------------
+    @property
+    def k(self) -> int:
+        return len(self.fleet)
+
+    @property
+    def is_dev_scheme(self) -> bool:
+        """True for the per-device-parameter schemes (no gradient fusion)."""
+        return self.scheme in ("individual", "model_fl")
+
+    @property
+    def effective_policy(self) -> str:
+        """The batchsize policy the lowering actually applies.
+
+        gradient_fl [40] is the full-batch policy on the FEEL engine; the
+        per-device-parameter schemes have no batchsize policy at all —
+        they report ``"none"`` so ``Results.sel(policy=...)`` never mixes
+        them into FEEL-policy selections."""
+        if self.is_dev_scheme:
+            return "none"
+        return "full" if self.scheme == "gradient_fl" else self.policy
+
+    @property
+    def dev_epoch_batch(self) -> int:
+        return min(self.b_max, DEV_EPOCH_BATCH_CAP)
+
+    @property
+    def label(self) -> str:
+        base = self.name or f"K{self.k}"
+        return f"{base}/{self.partition}/{self.scheme}/{self.effective_policy}"
+
+    def bucket_key(self) -> tuple:
+        """Shape-compatibility class (see module docstring)."""
+        if self.is_dev_scheme:
+            return ("dev", self.scheme, self.k, self.dev_epoch_batch,
+                    self.hidden, self.depth)
+        return ("feel", self.k, self.b_max, self.local_steps,
+                self.compress, self.compression, self.hidden, self.depth)
+
+
+jax.tree_util.register_static(ScenarioSpec)

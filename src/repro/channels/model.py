@@ -54,6 +54,26 @@ class Cell:
                                         axis=0)
         return rate                                          # bits/s
 
+    def avg_rate_updown_rows(self, dist_km: np.ndarray, periods: int):
+        """``periods`` consecutive (uplink, downlink) rate draws in ONE rng
+        consumption.
+
+        Bit-identical to the per-period loop ``for p: up = avg_rate(d);
+        down = avg_rate(d)`` because ``Generator`` fills arrays variate by
+        variate in C order, so one ``(P, 2, S, K)`` draw consumes the stream
+        exactly like 2·P sequential ``(S, K)`` draws (test-covered).
+        Returns (rates_up (P, K), rates_down (P, K))."""
+        c = self.cfg
+        pl = path_loss_db(dist_km)
+        p_rx_dbm = c.tx_power_dbm - pl
+        noise_dbm = c.noise_dbm_per_hz + 10 * np.log10(c.bandwidth_hz)
+        snr_lin = 10 ** ((p_rx_dbm - noise_dbm) / 10)        # (K,)
+        h2 = self.rng.exponential(
+            size=(periods, 2, c.fading_samples, len(dist_km)))
+        rate = c.bandwidth_hz * np.mean(
+            np.log2(1 + snr_lin[None, None, None, :] * h2), axis=2)
+        return rate[:, 0], rate[:, 1]                        # bits/s
+
     def sample_rates(self, k: int):
         """Drop K users, return (dist_km, uplink rates, downlink rates)."""
         d = self.drop_users(k)

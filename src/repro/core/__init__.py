@@ -7,17 +7,21 @@ from repro.core.efficiency import (loss_decay, learning_efficiency, lr_scale,
                                    XiEstimator)
 from repro.core.solver import (solve_uplink, solve_downlink, solve_period,
                                batch_closed_form, tau_closed_form,
-                               e_up_bounds, mu_bounds,
+                               e_up_bounds, mu_bounds, fixed_slot_rows,
                                UplinkSolution, DownlinkSolution,
                                PeriodSolution)
 from repro.core.baselines import POLICIES, PolicyResult
-from repro.core.scheduler import FeelScheduler, PeriodPlan, PlanHorizon
+from repro.core.scheduler import (DevHorizon, DevScheduler, FeelScheduler,
+                                  PeriodPlan, PlanHorizon,
+                                  plan_horizons_batch)
 
 __all__ = [
     "DeviceProfile", "gradient_bits", "period_latency", "uplink_latency",
     "downlink_latency", "loss_decay", "learning_efficiency", "lr_scale",
     "XiEstimator", "solve_uplink", "solve_downlink", "solve_period",
     "batch_closed_form", "tau_closed_form", "e_up_bounds", "mu_bounds",
-    "UplinkSolution", "DownlinkSolution", "PeriodSolution", "POLICIES",
-    "PolicyResult", "FeelScheduler", "PeriodPlan", "PlanHorizon",
+    "fixed_slot_rows", "UplinkSolution", "DownlinkSolution",
+    "PeriodSolution", "POLICIES", "PolicyResult", "DevHorizon",
+    "DevScheduler", "FeelScheduler", "PeriodPlan", "PlanHorizon",
+    "plan_horizons_batch",
 ]

@@ -8,6 +8,7 @@ are drop-in replacements via ``policy=``.
 """
 from __future__ import annotations
 
+from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
@@ -16,7 +17,8 @@ import numpy as np
 from repro.channels.model import Cell, CellConfig
 from repro.core.baselines import POLICIES
 from repro.core.efficiency import XiEstimator, lr_scale
-from repro.core.latency import DeviceProfile, gradient_bits
+from repro.core.latency import (DeviceProfile, downlink_latency,
+                                gradient_bits, uplink_latency)
 
 
 @dataclass(frozen=True)
@@ -113,6 +115,8 @@ class FeelScheduler:
         """
         if self.policy == "proposed":
             return self._plan_horizon_proposed(periods)
+        if self.policy in ("online", "full", "random"):
+            return self._plan_horizon_fixed(periods)
         plans = [self.plan() for _ in range(periods)]
         return PlanHorizon(
             batch=np.stack([p.batch for p in plans]),
@@ -123,15 +127,46 @@ class FeelScheduler:
                              np.float64),
             global_batch=np.array([p.global_batch for p in plans], np.int64))
 
+    def _plan_horizon_fixed(self, periods: int) -> PlanHorizon:
+        """Fixed-batch baselines, whole horizon in one lockstep evaluation.
+
+        Bit-identical to ``periods`` successive ``plan()`` calls: the
+        channel draws come from one batched interleaved (up, down) pull of
+        the same rng stream, the random policy pulls one (P, K) integer
+        block (≡ P sequential (K,) pulls), and the equal-slot latency math
+        is ``solver.fixed_slot_rows`` — the rows analog of
+        ``baselines._fixed_batch_policy``.
+        """
+        from repro.core.solver import fixed_slot_rows
+        c = self.cell.cfg
+        K = len(self.devices)
+        rates_up, rates_down = self.cell.avg_rate_updown_rows(
+            self._dist_km, periods)
+        if self.policy == "online":
+            batch = np.ones((periods, K))
+        elif self.policy == "full":
+            batch = np.full((periods, K), float(self.b_max))
+        else:                                    # random
+            batch = self.rng.integers(
+                1, self.b_max + 1, size=(periods, K)).astype(float)
+        tau_up, tau_down, latency = fixed_slot_rows(
+            self.devices, batch, rates_up, rates_down, self.payload_bits,
+            c.frame_up_s, c.frame_down_s)
+        ib = np.maximum(np.round(batch).astype(int), 1)
+        gb = ib.sum(1)
+        self._period += periods
+        return PlanHorizon(
+            batch=ib, tau_up=tau_up, tau_down=tau_down,
+            lr=self.base_lr * np.sqrt(gb / self.ref_batch),
+            latency=latency, global_batch=gb.astype(np.int64))
+
     def _plan_horizon_proposed(self, periods: int) -> PlanHorizon:
         from repro.core.solver import optimize_batch_rows, solve_period_rows
         c = self.cell.cfg
         K = len(self.devices)
-        rates_up = np.empty((periods, K))
-        rates_down = np.empty((periods, K))
-        for p in range(periods):                 # same rng stream as plan()
-            rates_up[p] = self.cell.avg_rate(self._dist_km)
-            rates_down[p] = self.cell.avg_rate(self._dist_km)
+        # one batched interleaved draw — same rng stream order as plan()
+        rates_up, rates_down = self.cell.avg_rate_updown_rows(
+            self._dist_km, periods)
         xi = self.xi_est.xi
         # B* re-optimized on the reopt cadence; rows are independent given
         # their rates, so every reopt period solves in one batched call
@@ -190,3 +225,173 @@ class FeelScheduler:
             rates_up=rates_up, rates_down=rates_down)
         self._period += 1
         return plan
+
+
+# ---------------------------------------------------------------------------
+# Cross-scenario lockstep planning (the api.Experiment lowering path)
+# ---------------------------------------------------------------------------
+
+
+def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
+                        periods: int) -> List[PlanHorizon]:
+    """Plan many schedulers' horizons with shared-fleet proposed rows fused.
+
+    Bit-identical to ``[s.plan_horizon(periods) for s in schedulers]``:
+    each scheduler's own rng streams are consumed in exactly the per-call
+    order, but Algorithm-1 / Theorem-2 bisections for every proposed-policy
+    scheduler that shares (fleet, payload, frames, b_max) run as ONE
+    lockstep rows solve over the flattened (scenario × period) axis — the
+    rows are independent given their rates, so fusing them changes nothing
+    but wall-clock.  Scheduler state (ξ cache, ``_b_cache``, ``_period``)
+    is advanced exactly as the per-call path would.
+    """
+    from repro.core.solver import optimize_batch_rows, solve_period_rows
+    out: List[Optional[PlanHorizon]] = [None] * len(schedulers)
+    groups = defaultdict(list)
+    for i, s in enumerate(schedulers):
+        if s.policy != "proposed":
+            out[i] = s.plan_horizon(periods)
+        else:
+            key = (tuple(s.devices), s.payload_bits, s.cell.cfg.frame_up_s,
+                   s.cell.cfg.frame_down_s, s.b_max, s.reopt_every)
+            groups[key].append(i)
+    for key, idxs in groups.items():
+        if len(idxs) == 1:
+            i = idxs[0]
+            out[i] = schedulers[i].plan_horizon(periods)
+            continue
+        scheds = [schedulers[i] for i in idxs]
+        s0 = scheds[0]
+        c = s0.cell.cfg
+        M, P, K = len(scheds), periods, len(s0.devices)
+        rates_up = np.empty((M, P, K))
+        rates_down = np.empty((M, P, K))
+        for m, s in enumerate(scheds):           # per-scheduler rng streams
+            rates_up[m], rates_down[m] = s.cell.avg_rate_updown_rows(
+                s._dist_km, P)
+        xi = np.array([s.xi_est.xi for s in scheds])
+        reopt = np.array([[(s._period + p) % s.reopt_every == 0
+                           or (p == 0 and s._b_cache is None)
+                           for p in range(P)] for s in scheds])
+        flat_up = rates_up.reshape(M * P, K)
+        flat_down = rates_down.reshape(M * P, K)
+        xi_rows = np.repeat(xi, P)
+        B = np.empty((M, P))
+        if reopt.any():
+            rf = reopt.reshape(M * P)
+            b_star = optimize_batch_rows(
+                s0.devices, flat_up[rf], flat_down[rf], s0.payload_bits,
+                c.frame_up_s, c.frame_down_s, xi_rows[rf], s0.b_max)
+            j = 0
+            for m, s in enumerate(scheds):
+                carry = s._b_cache
+                for p in range(P):
+                    if reopt[m, p]:
+                        carry = float(b_star[j])
+                        j += 1
+                    B[m, p] = carry
+        else:
+            for m, s in enumerate(scheds):
+                B[m, :] = s._b_cache
+        sol = solve_period_rows(s0.devices, flat_up, flat_down,
+                                s0.payload_bits, c.frame_up_s, c.frame_down_s,
+                                xi_rows, B.reshape(M * P), s0.b_max)
+        batch = np.maximum(np.round(sol["batch"]).astype(int), 1)
+        batch = batch.reshape(M, P, K)
+        gb = batch.sum(2)
+        for m, (i, s) in enumerate(zip(idxs, scheds)):
+            s._b_cache = float(B[m, -1])
+            s._period += P
+            out[i] = PlanHorizon(
+                batch=batch[m],
+                tau_up=sol["tau_up"].reshape(M, P, K)[m],
+                tau_down=sol["tau_down"].reshape(M, P, K)[m],
+                lr=np.array([lr_scale(s.base_lr, g, s.ref_batch)
+                             for g in gb[m]], np.float64),
+                latency=sol["latency"].reshape(M, P)[m],
+                global_batch=gb[m].astype(np.int64))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-device-parameter schemes (individual / model_fl): the latency ledger
+# as a planner, not a hand-rolled Python loop in the trainer
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DevHorizon:
+    """Pre-planned horizon for the per-device-parameter schemes — the same
+    role :class:`PlanHorizon` plays for the FEEL schemes: everything the
+    scan engine consumes, one array per field, leading period axis."""
+    idx: np.ndarray              # (P, K, batch) int64 sample indices
+    times: np.ndarray            # (P,) cumulative simulated seconds
+    tau_up: np.ndarray           # (P, K) equal TDMA slots (scheme-defined)
+    tau_down: np.ndarray         # (P, K)
+    rates_up: np.ndarray         # (P, K)
+    rates_down: np.ndarray       # (P, K)
+
+    @property
+    def periods(self) -> int:
+        return self.idx.shape[0]
+
+
+@dataclass
+class DevScheduler:
+    """Vectorized horizon planner for ``individual`` / ``model_fl``.
+
+    Replaces the trainer's hand-rolled per-period ``_epoch_latency`` Python
+    ledger: channel rates come from the same batched interleaved (up, down)
+    draw the FEEL scheduler uses, and — fixing the PR-1 bug — the downlink
+    subperiod is routed through the planner's ``tau_down``/``rates_down``
+    path via ``latency.downlink_latency`` (eq. (11)) instead of a second
+    ad-hoc ``uplink_latency`` call, so formula and rng stream match the
+    FEEL scheme's planner.  eqs. (10) and (11) coincide numerically, so the
+    fix is stream/formula hygiene: ledgers stay bit-identical to PR 1
+    (test-covered).
+    """
+    devices: Sequence[DeviceProfile]
+    parts: Sequence[np.ndarray]          # per-device index sets
+    batch: int                           # fixed per-device batchsize
+    payload_bits: float                  # model upload: d·p, uncompressed
+    upload: bool                         # model_fl syncs; individual doesn't
+    seed: int = 0
+    cell: Optional[Cell] = None
+    cell_cfg: CellConfig = field(default_factory=CellConfig)
+
+    def __post_init__(self):
+        if self.cell is None:
+            self.cell = Cell.make(self.seed, self.cell_cfg)
+        self.rng = np.random.default_rng(self.seed)
+        self._dist_km = self.cell.drop_users(len(self.parts))
+
+    def plan_horizon(self, periods: int) -> DevHorizon:
+        K = len(self.parts)
+        c = self.cell.cfg
+        idx = np.empty((periods, K, self.batch), np.int64)
+        for p in range(periods):         # same rng order as the PR-1 loop
+            idx[p] = np.stack(
+                [self.rng.choice(part, size=self.batch,
+                                 replace=len(part) < self.batch)
+                 for part in self.parts])
+        rates_up, rates_down = self.cell.avg_rate_updown_rows(
+            self._dist_km, periods)
+        # one local epoch per period: ⌈|D_k|/B⌉ minibatch steps
+        t_local = np.array([
+            d.local_grad_latency(self.batch) * max(1, len(part) // self.batch)
+            for d, part in zip(self.devices, self.parts)])
+        tau_u = np.full((periods, K), c.frame_up_s / K)
+        tau_d = np.full((periods, K), c.frame_down_s / K)
+        if self.upload:
+            t_up = uplink_latency(self.payload_bits, tau_u, c.frame_up_s,
+                                  rates_up)
+            t_down = downlink_latency(self.payload_bits, tau_d,
+                                      c.frame_down_s, rates_down)
+            t_upd = np.array([d.update_latency() for d in self.devices])
+            per_period = ((t_local + t_up).max(1)
+                          + (t_down + t_upd).max(1))
+        else:
+            per_period = np.full(periods, t_local.max())
+        return DevHorizon(idx=idx, times=np.cumsum(per_period),
+                          tau_up=tau_u, tau_down=tau_d,
+                          rates_up=rates_up, rates_down=rates_down)

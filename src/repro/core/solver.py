@@ -348,14 +348,42 @@ def solve_downlink_rows(devices: Sequence[DeviceProfile], rates: np.ndarray,
     return tau, e_hi
 
 
+def fixed_slot_rows(devices: Sequence[DeviceProfile], batch_rows: np.ndarray,
+                    rates_up: np.ndarray, rates_down: np.ndarray,
+                    s_bits: float, frame_up: float, frame_down: float):
+    """Vectorized equal-TDMA-slot policy evaluation for M rows at once.
+
+    The allocation-unaware baselines (online / full / random batchsize) all
+    share τ_k = T_f/K; this evaluates their per-period latency ledger for a
+    whole horizon in one shot — the rows analog of
+    ``baselines._fixed_batch_policy``, bit-identical per row.
+    Returns (tau_up (M,K), tau_down (M,K), latency (M,)).
+    """
+    from repro.core.latency import downlink_latency, uplink_latency
+    K = len(devices)
+    batch_rows = np.asarray(batch_rows, float)
+    t_local = _local_latency_rows(devices, batch_rows)
+    tau_u = np.full_like(t_local, frame_up / K)
+    tau_d = np.full_like(t_local, frame_down / K)
+    t_up = uplink_latency(s_bits, tau_u, frame_up, rates_up)
+    t_down = downlink_latency(s_bits, tau_d, frame_down, rates_down)
+    t_upd = np.array([d.update_latency() for d in devices])
+    latency = (t_local + t_up).max(1) + (t_down + t_upd).max(1)
+    return tau_u, tau_d, latency
+
+
 def solve_period_rows(devices: Sequence[DeviceProfile],
                       rates_up: np.ndarray, rates_down: np.ndarray,
                       s_bits: float, frame_up: float, frame_down: float,
-                      xi: float, B: np.ndarray, b_max: int) -> dict:
+                      xi, B: np.ndarray, b_max: int) -> dict:
     """Vectorized 𝒫₁ inner evaluation: uplink + downlink solutions and the
-    predicted eq. (14) latency for M independent periods with given B."""
+    predicted eq. (14) latency for M independent periods with given B.
+
+    ``xi`` may be a scalar or an (M,) array (per-row ξ — one row per
+    scenario × period when horizons for many scenarios are planned in one
+    lockstep call)."""
     B = np.asarray(B, float)
-    dl = xi * np.sqrt(B)
+    dl = np.asarray(xi, float) * np.sqrt(B)
     bt, tau_u, e_up, _ = solve_uplink_rows(devices, rates_up, s_bits,
                                            frame_up, B, dl, b_max)
     tau_d, e_down = solve_downlink_rows(devices, rates_down, s_bits,
@@ -372,20 +400,23 @@ def solve_period_rows(devices: Sequence[DeviceProfile],
 def optimize_batch_rows(devices: Sequence[DeviceProfile],
                         rates_up: np.ndarray, rates_down: np.ndarray,
                         s_bits: float, frame_up: float, frame_down: float,
-                        xi: float, b_max: int,
+                        xi, b_max: int,
                         n_candidates: int = 97) -> np.ndarray:
     """Outer 𝒫₁ for M rows at once: integer-grid argmin of E^U*+E^D* over B
     (the golden-section's job, but every row and every candidate evaluated
-    in one lockstep solve; B is rounded to an integer downstream anyway)."""
+    in one lockstep solve; B is rounded to an integer downstream anyway).
+
+    ``xi``: scalar or (M,) per-row ξ (see :func:`solve_period_rows`)."""
     K = len(devices)
     lo = float(sum(d.batch_lo() for d in devices))
     hi = float(K * b_max)
     cand = np.unique(np.round(np.linspace(lo, hi, n_candidates)))
     M, C = rates_up.shape[0], len(cand)
+    xi_rows = np.broadcast_to(np.asarray(xi, float), (M,))
     sol = solve_period_rows(
         devices, np.repeat(rates_up, C, axis=0),
         np.repeat(rates_down, C, axis=0), s_bits, frame_up, frame_down,
-        xi, np.tile(cand, M), b_max)
+        np.repeat(xi_rows, C), np.tile(cand, M), b_max)
     best = np.argmin(sol["e_total"].reshape(M, C), axis=1)
     return cand[best]
 

@@ -35,6 +35,27 @@ from repro.fed import feel_model
 
 tree_map = jax.tree_util.tree_map
 
+# Incremented inside the traced bodies below, i.e. exactly once per jit
+# trace.  ``api.Experiment`` buckets assert on this: a whole grid of
+# shape-compatible scenarios must cost ONE trace, not one per cell.
+_TRACES = {"n": 0}
+
+
+def trace_count() -> int:
+    """Total number of trajectory-program traces so far in this process."""
+    return _TRACES["n"]
+
+
+def _shard_batch_args(mesh, batched_args, replicated_args):
+    """Lay a bucket out on a device mesh: leading (scenario × seed) batch
+    axis sharded, datasets replicated.  Single-device meshes degenerate to
+    plain device placement, so this is safe as a CPU fallback."""
+    from repro.launch.mesh import batch_sharding, replicated_sharding
+    batched_args = jax.device_put(batched_args, batch_sharding(mesh))
+    replicated_args = jax.device_put(replicated_args,
+                                     replicated_sharding(mesh))
+    return batched_args, replicated_args
+
 
 @dataclass(frozen=True)
 class Schedule:
@@ -61,14 +82,17 @@ class Schedule:
 
 
 def build_schedule(scheduler, batcher, devices, periods: int,
-                   local_steps: int = 1) -> Schedule:
+                   local_steps: int = 1, horizon=None) -> Schedule:
     """Pre-generate one run's plans, sample indices and time axis.
 
     Consumes the scheduler/batcher rng streams in the same per-period order
     as the seed's interleaved loop (the two streams are independent), so a
     fresh simulation reproduces the seed's sampling sequence exactly.
+    ``horizon`` short-circuits planning when the caller already planned it
+    (e.g. ``core.scheduler.plan_horizons_batch`` across a whole bucket).
     """
-    horizon = scheduler.plan_horizon(periods)
+    if horizon is None:
+        horizon = scheduler.plan_horizon(periods)
     idx = np.empty((periods, batcher.k, batcher.slot), np.int32)
     w = np.empty((periods, batcher.k, batcher.slot), np.float32)
     for p in range(periods):
@@ -139,6 +163,7 @@ def _period_step(data_x, data_y, test_x, test_y, local_steps, compress,
 def _trajectory_fn(local_steps: int, compress: bool, ratio: float,
                    batched: bool):
     def run(params0, residual0, xs, data_x, data_y, test_x, test_y):
+        _TRACES["n"] += 1                        # host side effect: traces
         step = partial(_period_step, data_x, data_y, test_x, test_y,
                        local_steps, compress, ratio)
         (params, residual), series = jax.lax.scan(
@@ -164,22 +189,36 @@ def run_trajectory(params0, residual0, schedule: Schedule, data, test, *,
               jnp.asarray(test.x), jnp.asarray(test.y))
 
 
+def stack_schedules(schedules: Sequence[Schedule]):
+    """Stack per-scenario schedules along a leading batch axis → scan xs."""
+    per_seed = [s.stacked_xs() for s in schedules]
+    return {k: jnp.stack([p[k] for p in per_seed])
+            for k in ("idx", "weight", "batch", "lr")}
+
+
 def run_trajectory_batch(params0, residual0, schedules: Sequence[Schedule],
                          data, test, *, local_steps: int = 1,
-                         compress: bool = True, ratio: float = 0.005):
-    """vmap-over-seeds sweep: one compiled program advances every seed.
+                         compress: bool = True, ratio: float = 0.005,
+                         mesh=None):
+    """Batched sweep: one compiled program advances every (scenario, seed).
 
-    ``params0``/``residual0`` carry a leading seed axis (stack pytrees with
-    ``jax.tree_util.tree_map(lambda *a: jnp.stack(a), *per_seed)``);
-    ``schedules`` is one pre-generated :class:`Schedule` per seed.
+    ``params0``/``residual0`` carry a leading batch axis (stack pytrees with
+    ``jax.tree_util.tree_map(lambda *a: jnp.stack(a), *per_entry)``);
+    ``schedules`` is one pre-generated :class:`Schedule` per batch entry —
+    the axis may flatten an arbitrary (scenario × seed) grid, not just
+    seeds.  With ``mesh`` (a 1-D "batch" mesh from
+    ``launch.mesh.make_batch_mesh``) the batch axis is sharded across its
+    devices (batch size must divide evenly; pad upstream) and the datasets
+    are replicated; ``mesh=None`` keeps the single-device layout.
     """
-    per_seed = [s.stacked_xs() for s in schedules]
-    xs = {k: jnp.stack([p[k] for p in per_seed])
-          for k in ("idx", "weight", "batch", "lr")}
+    xs = stack_schedules(schedules)
+    data_args = (jnp.asarray(data.x), jnp.asarray(data.y),
+                 jnp.asarray(test.x), jnp.asarray(test.y))
+    if mesh is not None:
+        (params0, residual0, xs), data_args = _shard_batch_args(
+            mesh, (params0, residual0, xs), data_args)
     fn = _trajectory_fn(local_steps, compress, float(ratio), True)
-    return fn(params0, residual0, xs,
-              jnp.asarray(data.x), jnp.asarray(data.y),
-              jnp.asarray(test.x), jnp.asarray(test.y))
+    return fn(params0, residual0, xs, *data_args)
 
 
 # ---------------------------------------------------------------------------
@@ -203,12 +242,15 @@ def _dev_step(data_x, data_y, test_x, test_y, lr, average, dev_params, idx):
 
 
 @lru_cache(maxsize=None)
-def _dev_trajectory_fn(average: bool):
+def _dev_trajectory_fn(average: bool, batched: bool = False):
     def run(dev_params0, idx, lr, data_x, data_y, test_x, test_y):
+        _TRACES["n"] += 1
         step = partial(_dev_step, data_x, data_y, test_x, test_y, lr,
                        average)
         return jax.lax.scan(step, dev_params0, idx)
 
+    if batched:
+        run = jax.vmap(run, in_axes=(0, 0, 0, None, None, None, None))
     return jax.jit(run)
 
 
@@ -223,3 +265,21 @@ def run_dev_trajectory(dev_params0, idx: np.ndarray, lr: float, data, test,
     return fn(dev_params0, jnp.asarray(idx, jnp.int32),
               jnp.float32(lr), jnp.asarray(data.x), jnp.asarray(data.y),
               jnp.asarray(test.x), jnp.asarray(test.y))
+
+
+def run_dev_trajectory_batch(dev_params0, idx: np.ndarray, lr: np.ndarray,
+                             data, test, *, average: bool, mesh=None):
+    """Batched individual / model_fl: one program for a whole bucket.
+
+    ``dev_params0`` leaves are (N, K, ...), ``idx`` is (N, P, K, batch),
+    ``lr`` is (N,) — N the flattened (scenario × seed) axis.  ``mesh``
+    shards N across devices as in :func:`run_trajectory_batch`.
+    """
+    batched = (dev_params0, jnp.asarray(idx, jnp.int32),
+               jnp.asarray(lr, jnp.float32))
+    data_args = (jnp.asarray(data.x), jnp.asarray(data.y),
+                 jnp.asarray(test.x), jnp.asarray(test.y))
+    if mesh is not None:
+        batched, data_args = _shard_batch_args(mesh, batched, data_args)
+    fn = _dev_trajectory_fn(bool(average), batched=True)
+    return fn(*batched, *data_args)

@@ -1,15 +1,15 @@
-"""Batched FEEL scenario sweeps: policies × partitions × device fleets,
-vmapped over seeds.
+"""Legacy sweep surface: ``SweepCell`` containers, the vmap-over-seeds
+``run_seed_batch`` building block, and the DEPRECATED ``run_sweep`` grid
+driver (now a thin shim over ``repro.api.Experiment`` with unchanged
+return values).
 
-Every grid cell (one policy on one partition of one fleet) becomes a single
-compiled program: per-seed schedules are pre-generated on the host, initial
-params/residuals are stacked along a leading seed axis, and
-``engine.run_trajectory_batch`` advances all seeds in one
-``vmap(lax.scan)`` call.  Adding a scenario is a config entry, not a new
-Python loop.
+New code should declare ``ScenarioSpec`` values and run an
+``Experiment`` — the declarative path lowers the WHOLE grid into one
+compiled program per shape bucket and shards the flattened
+(cell × seed) axis across devices; see the README migration table.
 
     fleets = {"cpu6": [DeviceProfile(kind="cpu", f_cpu=f*1e9) for f in ...]}
-    results = run_sweep(fleets, data, test,
+    results = run_sweep(fleets, data, test,            # deprecated shim
                         policies=("proposed", "online", "full"),
                         partitions=("iid", "noniid"), seeds=range(8),
                         periods=100)
@@ -17,6 +17,7 @@ Python loop.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Mapping, Sequence
 
@@ -24,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.results import time_to_target
 from repro.core import DeviceProfile
 from repro.data.pipeline import ClassificationData
 from repro.fed import engine
@@ -44,9 +46,12 @@ class SweepCell:
     global_batch: np.ndarray   # (n_seeds, periods)
 
     def speed(self, target_acc: float) -> np.ndarray:
-        """(n_seeds,) simulated time to reach target accuracy (inf never)."""
-        t = np.where(self.accs >= target_acc, self.times, np.inf)
-        return t.min(axis=1)
+        """(n_seeds,) simulated time to reach target accuracy (inf never).
+
+        NaN accuracies ("not evaluated this period" — the python engine
+        leaves them at non-eval periods) are masked out explicitly before
+        the compare, never silently treated as below-target values."""
+        return time_to_target(self.accs, self.times, target_acc)
 
     @property
     def final_acc(self) -> np.ndarray:
@@ -100,20 +105,36 @@ def run_sweep(fleets: Mapping[str, Sequence[DeviceProfile]],
               b_max: int = 128, base_lr: float = 0.05,
               compress: bool = True,
               local_steps: int = 1) -> Dict[str, SweepCell]:
-    """Grid driver: one vmapped scan per (fleet, partition, policy) cell."""
+    """DEPRECATED grid driver — thin shim over ``repro.api.Experiment``.
+
+    Prefer building ``ScenarioSpec`` values and running an ``Experiment``:
+    the declarative path lowers the WHOLE grid into one compiled program
+    per shape bucket (this shim's grid is always a single bucket) instead
+    of one program invocation per cell.  Returns the same
+    ``{"fleet/partition/policy": SweepCell}`` mapping as PR 1.
+    """
+    warnings.warn(
+        "run_sweep is deprecated; use repro.api.Experiment with "
+        "ScenarioSpec values (see README migration table)",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import Experiment, ScenarioSpec
+    seeds = tuple(seeds)
+    specs = [
+        ScenarioSpec(fleet=tuple(devices), name=fleet_name, scheme="feel",
+                     partition=partition, policy=policy, compress=compress,
+                     b_max=b_max, base_lr=base_lr, local_steps=local_steps,
+                     seeds=seeds)
+        for fleet_name, devices in fleets.items()
+        for partition in partitions
+        for policy in policies]
+    res = Experiment(data, test, specs).run(periods)
     results: Dict[str, SweepCell] = {}
-    seeds = list(seeds)
-    for fleet_name, devices in fleets.items():
-        for partition in partitions:
-            for policy in policies:
-                sims = [FeelSimulation(
-                    devices, data, test, partition=partition, policy=policy,
-                    compress=compress, b_max=b_max, base_lr=base_lr,
-                    seed=s, local_steps=local_steps) for s in seeds]
-                losses, accs, times, gb = run_seed_batch(sims, periods)
-                name = f"{fleet_name}/{partition}/{policy}"
-                results[name] = SweepCell(
-                    name=name, fleet=fleet_name, partition=partition,
-                    policy=policy, seeds=tuple(seeds), losses=losses,
-                    accs=accs, times=times, global_batch=gb)
+    for spec in specs:
+        cell = res.sel(fleet=spec.name, partition=spec.partition,
+                       policy=spec.effective_policy)
+        name = f"{spec.name}/{spec.partition}/{spec.policy}"
+        results[name] = SweepCell(
+            name=name, fleet=spec.name, partition=spec.partition,
+            policy=spec.policy, seeds=seeds, losses=cell.losses,
+            accs=cell.accs, times=cell.times, global_batch=cell.global_batch)
     return results

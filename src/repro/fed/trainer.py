@@ -26,6 +26,8 @@ adapts across successive ``run`` calls.
 """
 from __future__ import annotations
 
+import math
+import warnings
 from dataclasses import dataclass, field
 from typing import List, Sequence
 
@@ -33,9 +35,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.channels.model import Cell, CellConfig
 from repro.compression.sbc import compress_dense
 from repro.core import DeviceProfile, FeelScheduler
-from repro.core.latency import period_latency, uplink_latency
+from repro.core.scheduler import DevScheduler
 from repro.data.pipeline import (ClassificationData, FederatedBatcher,
                                  partition_iid, partition_noniid)
 from repro.fed import engine, feel_model
@@ -51,9 +54,13 @@ class RunResult:
     global_batches: List[int] = field(default_factory=list)
 
     def speed(self, target_acc: float) -> float:
-        """Time to reach target accuracy (inf if never)."""
+        """Time to reach target accuracy (inf if never).
+
+        NaN accuracies mean "not evaluated at this point" (the python
+        engine's non-eval periods) and are skipped explicitly — they can
+        neither reach the target nor count against it."""
         for a, t in zip(self.accs, self.times):
-            if a >= target_acc:
+            if not math.isnan(a) and a >= target_acc:
                 return t
         return float("inf")
 
@@ -81,6 +88,7 @@ class FeelSimulation:
                                          # FedAvg-style); latency scales the
                                          # local-compute term accordingly
     engine: str = "scan"                 # scan | python (reference loop)
+    cell_cfg: CellConfig = field(default_factory=CellConfig)
 
     def __post_init__(self):
         k = len(self.devices)
@@ -96,7 +104,8 @@ class FeelSimulation:
                             for l in jax.tree_util.tree_leaves(self.params))
         self.scheduler = FeelScheduler(
             devices=self.devices, n_params=self.n_params, policy=self.policy,
-            b_max=self.b_max, base_lr=self.base_lr, seed=self.seed)
+            b_max=self.b_max, base_lr=self.base_lr, seed=self.seed,
+            cell_cfg=self.cell_cfg)
         self.residuals = None
         self._grad_fn = jax.jit(jax.vmap(
             jax.grad(feel_model.loss_fn), in_axes=(None, 0, 0, 0)))
@@ -198,32 +207,27 @@ class FeelSimulation:
 
 
 # ---------------------------------------------------------------------------
-# Table-II scheme comparison
+# Table-II scheme comparison (DEPRECATED shim — prefer repro.api.Experiment)
 # ---------------------------------------------------------------------------
-
-
-def _epoch_latency(devices, parts, batch, rates_up, rates_down, s_bits,
-                   frame_up, frame_down, upload: bool) -> float:
-    """Latency of one local epoch (+ optional sync upload/download)."""
-    t_local = np.array([
-        d.local_grad_latency(batch) * max(1, len(p) // batch)
-        for d, p in zip(devices, parts)])
-    if not upload:
-        return float(np.max(t_local))
-    K = len(devices)
-    tau_u = np.full(K, frame_up / K)
-    tau_d = np.full(K, frame_down / K)
-    t_up = uplink_latency(s_bits, tau_u, frame_up, rates_up)
-    t_down = uplink_latency(s_bits, tau_d, frame_down, rates_down)
-    t_upd = np.array([d.update_latency() for d in devices])
-    return period_latency(t_local, t_up, t_down, t_upd)
 
 
 def run_scheme(scheme: str, devices, data: ClassificationData,
                test: ClassificationData, partition: str, periods: int,
                seed: int = 0, b_max: int = 128, base_lr: float = 0.05,
                eval_every: int = 10) -> RunResult:
-    """Run one Table-II scheme end-to-end and return its trajectory."""
+    """DEPRECATED: run one Table-II scheme and return its trajectory.
+
+    Thin shim kept for existing callers — ``repro.api.Experiment`` runs
+    whole scheme grids as bucketed compiled programs.  Return values are
+    unchanged from PR 1: the ``individual``/``model_fl`` ledger now comes
+    from ``core.scheduler.DevScheduler`` (vectorized, downlink routed
+    through the planner's ``rates_down``/``tau_down`` path) which is
+    bit-identical to the old hand-rolled per-period loop (test-covered).
+    """
+    warnings.warn(
+        "run_scheme is deprecated; use repro.api.Experiment with "
+        "ScenarioSpec(scheme=...) (see README migration table)",
+        DeprecationWarning, stacklevel=2)
     if scheme in ("feel", "proposed"):
         sim = FeelSimulation(devices, data, test, partition=partition,
                              policy="proposed", compress=True, b_max=b_max,
@@ -237,9 +241,9 @@ def run_scheme(scheme: str, devices, data: ClassificationData,
         r.scheme = "gradient_fl"
         return r
 
-    # individual / model_fl: per-device parameter copies, scan-compiled.
-    # Host side pre-generates indices + the latency ledger (same rng order
-    # as the seed's interleaved loop), device side is one lax.scan.
+    # individual / model_fl: per-device parameter copies.  The planner
+    # pre-generates indices + the latency ledger (same rng order as the
+    # seed's interleaved loop), device side is one lax.scan.
     k = len(devices)
     parts = (partition_iid(len(data.y), k, seed) if partition == "iid"
              else partition_noniid(data.y, k, seed=seed))
@@ -249,31 +253,16 @@ def run_scheme(scheme: str, devices, data: ClassificationData,
         lambda a: jnp.broadcast_to(a, (k,) + a.shape).copy(), p0)
     n_params = sum(int(np.prod(np.shape(l)))
                    for l in jax.tree_util.tree_leaves(p0))
-    from repro.channels.model import Cell
-    cell = Cell.make(seed)
-    dist = cell.drop_users(k)
-    rng = np.random.default_rng(seed)
     batch = min(b_max, 64)
-    # payload: parameters, uncompressed (model-based FL uploads the model)
-    s_bits = 32.0 * n_params
-
-    idx = np.empty((periods, k, batch), np.int64)
-    times = np.empty(periods)
-    t = 0.0
-    for period in range(periods):
-        idx[period] = np.stack(
-            [rng.choice(p, size=batch, replace=len(p) < batch)
-             for p in parts])
-        rates_up = cell.avg_rate(dist)
-        rates_down = cell.avg_rate(dist)
-        t += _epoch_latency(devices, parts, batch, rates_up, rates_down,
-                            s_bits, cell.cfg.frame_up_s,
-                            cell.cfg.frame_down_s,
-                            upload=(scheme == "model_fl"))
-        times[period] = t
+    sched = DevScheduler(
+        devices=devices, parts=parts, batch=batch,
+        # payload: parameters, uncompressed (model-based FL uploads the model)
+        payload_bits=32.0 * n_params, upload=(scheme == "model_fl"),
+        seed=seed, cell=Cell.make(seed))
+    horizon = sched.plan_horizon(periods)
 
     _, (losses, accs) = engine.run_dev_trajectory(
-        dev_params, idx, base_lr, data, test,
+        dev_params, horizon.idx, base_lr, data, test,
         average=(scheme == "model_fl"))
     losses = np.asarray(losses)
     accs = np.asarray(accs)
@@ -282,6 +271,6 @@ def run_scheme(scheme: str, devices, data: ClassificationData,
     for period in _eval_points(periods, eval_every):
         res.losses.append(float(losses[period]))
         res.accs.append(float(accs[period]))
-        res.times.append(float(times[period]))
+        res.times.append(float(horizon.times[period]))
         res.global_batches.append(batch * k)
     return res

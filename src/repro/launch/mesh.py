@@ -3,6 +3,8 @@ module never touches jax device state)."""
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,3 +29,33 @@ def data_size(mesh) -> int:
     for n in data_axes(mesh):
         out *= mesh.shape[n]
     return out
+
+
+# ---------------------------------------------------------------------------
+# sweep-batch mesh: a flat "batch" axis over every available accelerator,
+# used by api.Experiment to shard the flattened (scenario × seed) axis of a
+# bucket.  One device (CPU CI) degenerates to plain placement — the same
+# code path is the single-device fallback.
+# ---------------------------------------------------------------------------
+
+
+def make_batch_mesh(max_devices: int | None = None) -> Mesh:
+    """1-D mesh over (up to ``max_devices``) available devices."""
+    devs = jax.devices()
+    if max_devices is not None:
+        devs = devs[:max_devices]
+    return Mesh(np.array(devs), ("batch",))
+
+
+def batch_sharding(mesh) -> NamedSharding:
+    """Leading axis split over "batch", remaining dims replicated."""
+    return NamedSharding(mesh, P("batch"))
+
+
+def replicated_sharding(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def pad_batch(n: int, mesh) -> int:
+    """Rows to append so a length-``n`` batch axis divides the mesh."""
+    return (-n) % mesh.devices.size
