@@ -1,21 +1,28 @@
 """Beyond-paper ablation: the compression ratio r drives the payload
 s = r·d·p and therefore the whole communication/learning tradeoff of 𝒫₁.
-Sweeps r and reports the solver's optimal (B*, T, E) — showing where the
-system flips from communication-bound to compute-bound, plus the tau>1
-multiple-local-updates extension (paper §VII future work)."""
+
+Part 1 sweeps r through the solver alone and reports the optimal
+(B*, T, E) — showing where the system flips from communication-bound to
+compute-bound.  Part 2 is the *trained* ablation on the declarative API:
+one ``grid(base, compression=[...], compress=[True, False])`` study —
+compression-on cells split buckets (the top-k fraction is compiled in),
+the whole compression-off column shares ONE bucket (ratio only moves the
+planned payload there) — run under ``AsyncExecutor`` so bucket planning
+overlaps device execution.  Part 3 is the tau>1 multiple-local-updates
+extension (paper §VII future work) as a ``local_steps`` grid axis."""
 from __future__ import annotations
 
 import numpy as np
 
+from repro.api import AsyncExecutor, Experiment, ScenarioSpec, grid
 from repro.channels.model import Cell
 from repro.core import DeviceProfile, gradient_bits, solve_period
 from repro.data.pipeline import ClassificationData
-from repro.fed.trainer import FeelSimulation
 
 
 def main(fast: bool = True):
-    devs = [DeviceProfile(kind="cpu", f_cpu=f * 1e9)
-            for f in [0.7, 0.7, 1.4, 1.4, 2.1, 2.1]]
+    devs = tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                 for f in [0.7, 0.7, 1.4, 1.4, 2.1, 2.1])
     cell = Cell.make(0)
     _, up, down = cell.sample_rates(6)
     rows = []
@@ -27,15 +34,35 @@ def main(fast: bool = True):
                      f"B={sol.global_batch:.0f};T={sol.latency:.3f}s;"
                      f"E={sol.efficiency:.4f}"))
 
-    # tau > 1 local updates (paper §VII)
+    # trained compression grid (one line of axes; buckets: one per
+    # compression-on ratio + one shared compression-off bucket)
     full = ClassificationData.synthetic(n=1800, dim=128, seed=0, spread=6.0)
     data, test = full.split(300)
-    for tau in ([1, 4] if fast else [1, 2, 4, 8]):
-        sim = FeelSimulation(devs, data, test, partition="iid", b_max=64,
-                             base_lr=0.1, local_steps=tau)
-        res = sim.run(40 if fast else 200, eval_every=20)
-        rows.append((f"ablation_tau/{tau}", res.times[-1] * 1e6,
-                     f"acc={res.accs[-1]:.4f};simT={res.times[-1]:.1f}s"))
+    periods = 40 if fast else 200
+    base = ScenarioSpec(fleet=devs, name="ablation", partition="iid",
+                        b_max=64, base_lr=0.1, seeds=(0,))
+    ratios = [0.005, 0.1] if fast else [0.001, 0.005, 0.02, 0.1]
+    study = grid(base, compression=ratios, compress=[True, False])
+    res = Experiment(data, test, study).run(periods,
+                                            executor=AsyncExecutor())
+    for r in ratios:
+        for on in (True, False):
+            c = res.sel(compression=r, compress=on)
+            rows.append((f"ablation_train_r/{r}/{'on' if on else 'off'}",
+                         float(c.times[0, -1]) * 1e6,
+                         f"acc={float(c.final_acc[0]):.4f};"
+                         f"simT={float(c.times[0, -1]):.1f}s"))
+
+    # tau > 1 local updates (paper §VII) — local_steps splits buckets,
+    # AsyncExecutor pipelines them
+    taus = [1, 4] if fast else [1, 2, 4, 8]
+    res_tau = Experiment(data, test, grid(base, local_steps=taus)).run(
+        periods, executor=AsyncExecutor())
+    for tau in taus:
+        c = res_tau.sel(local_steps=tau)
+        rows.append((f"ablation_tau/{tau}", float(c.times[0, -1]) * 1e6,
+                     f"acc={float(c.final_acc[0]):.4f};"
+                     f"simT={float(c.times[0, -1]):.1f}s"))
     return rows
 
 

@@ -1,33 +1,47 @@
 """Fig. 3 — generalization across model classes and learning rates:
 the proposed scheme converges for every (model × lr) combination.
-DenseNet/ResNet/MobileNet are stood in by three MLP capacities."""
+DenseNet/ResNet/MobileNet are stood in by three MLP capacities.
+
+Declarative-API driver: the (model × lr) plane is ONE ``grid`` study —
+``model`` is a labeled axis bundling (hidden, depth), so each capacity
+lowers to its own shape bucket and ``base_lr`` rides along inside it —
+run under ``AsyncExecutor`` so each model's host planning overlaps the
+previous model's device execution."""
 from __future__ import annotations
 
 import numpy as np
 
+from repro.api import AsyncExecutor, Experiment, ScenarioSpec, grid
 from repro.core import DeviceProfile
 from repro.data.pipeline import ClassificationData
-from repro.fed.trainer import FeelSimulation
+
+MODELS = {"densenet_stand_in": dict(hidden=512, depth=4),
+          "resnet_stand_in": dict(hidden=256, depth=3),
+          "mobilenet_stand_in": dict(hidden=128, depth=2)}
 
 
 def main(fast: bool = True):
     periods = 80 if fast else 2000
-    devs = [DeviceProfile(kind="cpu", f_cpu=f * 1e9)
-            for f in [0.7] * 4 + [1.4] * 4 + [2.1] * 4]
+    devs = tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                 for f in [0.7] * 4 + [1.4] * 4 + [2.1] * 4)
     full = ClassificationData.synthetic(n=2600, dim=128, seed=0, spread=6.0)
     data, test = full.split(400)
-    models = {"densenet_stand_in": (512, 4), "resnet_stand_in": (256, 3),
-              "mobilenet_stand_in": (128, 2)}
+    base = ScenarioSpec(fleet=devs, name="fig3", partition="noniid",
+                        policy="proposed", b_max=64, seeds=(0,))
+    study = grid(base, model=MODELS, base_lr=[0.1, 0.05])
+    res = Experiment(data, test, study).run(periods,
+                                            executor=AsyncExecutor())
+    assert res.n_buckets == len(MODELS)           # one bucket per capacity
     rows = []
-    for mname, (hidden, depth) in models.items():
+    for mname in MODELS:
         for lr in [0.1, 0.05]:
-            sim = FeelSimulation(devs, data, test, partition="noniid",
-                                 policy="proposed", b_max=64, base_lr=lr,
-                                 hidden=hidden, depth=depth)
-            r = sim.run(periods, eval_every=periods // 4)
-            converged = r.losses[-1] < r.losses[0] * 0.8
-            rows.append((f"fig3/{mname}/lr{lr}", r.times[-1] * 1e6,
-                         f"acc={r.accs[-1]:.4f};loss={r.losses[-1]:.4f};"
+            c = res.sel(model=mname, base_lr=lr)
+            losses, accs = c.losses[0], c.accs[0]
+            converged = losses[-1] < losses[0] * 0.8
+            rows.append((f"fig3/{mname}/lr{lr}",
+                         float(c.times[0, -1]) * 1e6,
+                         f"acc={float(accs[-1]):.4f};"
+                         f"loss={float(losses[-1]):.4f};"
                          f"converged={converged}"))
     return rows
 

@@ -1,8 +1,14 @@
-"""CI smoke: a tiny 2-cell declarative experiment end-to-end on CPU.
+"""CI smoke: tiny declarative experiments end-to-end on CPU.
 
-Asserts the structural guarantees the API makes — single bucket, single
-compiled program, mesh-sharded batch axis on whatever devices exist (1 on
-CPU CI), finite series, monotone time ledgers — in under a minute.
+Cell 1 — a 2-cell single-bucket experiment through ``MeshExecutor``
+(whatever devices exist; 1 on CPU CI): single bucket, single compiled
+program, finite series, monotone time ledgers.
+
+Cell 2 — an ``AsyncExecutor`` smoke on a multi-bucket geometry study
+(``grid`` over ``cell.radius_m`` × scheme): async dispatch must be
+bit-identical to the serial reference, streaming must yield one
+cumulative partial per bucket, and wider cells must plan longer
+communication latencies.
 
 Run:  PYTHONPATH=src python -m benchmarks.smoke_experiment
 """
@@ -10,11 +16,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.api import Experiment, ScenarioSpec
+from repro.api import (AsyncExecutor, Experiment, MeshExecutor,
+                       ScenarioSpec, SerialExecutor, grid)
 from repro.core import DeviceProfile
 from repro.data.pipeline import ClassificationData
 from repro.fed import engine
-from repro.launch.mesh import make_batch_mesh
 
 
 def main(fast: bool = True):
@@ -28,8 +34,8 @@ def main(fast: bool = True):
              for part in ("iid", "noniid")]
 
     before = engine.trace_count()
-    res = Experiment(data, test, specs, mesh=make_batch_mesh()).run(
-        periods=8)
+    res = Experiment(data, test, specs).run(periods=8,
+                                            executor=MeshExecutor())
     traces = engine.trace_count() - before
 
     assert res.n_buckets == 1, res.n_buckets
@@ -40,9 +46,31 @@ def main(fast: bool = True):
     assert np.all(np.diff(res.times, axis=1) > 0)
     assert set(res.coords["partition"]) == {"iid", "noniid"}
     assert res.speed(2.0).shape == (4,)           # inf-safe reduction
+
+    # ---- async smoke: multi-bucket geometry study ------------------------
+    base = ScenarioSpec(fleet=fleet, name="cpu3", partition="noniid",
+                        policy="full", b_max=16, base_lr=0.15, hidden=64,
+                        compression=1.0, seeds=(0,))
+    study = grid(base, scheme=["feel", "individual"],
+                 **{"cell.radius_m": [150.0, 600.0]})
+    exp = Experiment(data, test, study)
+    assert len(exp.lower()) == 2                  # feel + dev buckets
+    serial = exp.run(periods=6, executor=SerialExecutor())
+    partials = list(exp.stream(periods=6, executor=AsyncExecutor()))
+    assert len(partials) == 2                     # one yield per bucket
+    a = partials[-1]
+    assert np.array_equal(np.asarray(serial.losses), np.asarray(a.losses))
+    assert np.array_equal(np.asarray(serial.accs), np.asarray(a.accs))
+    assert np.array_equal(serial.times, a.times)
+    near = a.sel(cell_radius_m=150.0, scheme="feel").times[0, -1]
+    far = a.sel(cell_radius_m=600.0, scheme="feel").times[0, -1]
+    assert far > near, (near, far)                # wider cell: slower rates
     return [("smoke_experiment/2cell_2seed_8p", 0.0,
              f"buckets={res.n_buckets};traces={traces};"
-             f"final_acc={res.final_acc.mean():.3f}")]
+             f"final_acc={res.final_acc.mean():.3f}"),
+            ("smoke_experiment/async_geometry_2bucket", 0.0,
+             f"serial==async;radius150_t={float(near):.2f}s;"
+             f"radius600_t={float(far):.2f}s")]
 
 
 if __name__ == "__main__":

@@ -1,8 +1,7 @@
-"""Sweep engine wall-clock: 3-way comparison on an 8-cell × 8-seed grid
-(ISSUE 2 acceptance: ≥ 4 cells × 8 seeds), emitting ``BENCH_sweep.json``.
+"""Sweep engine wall-clock: 4-way comparison emitting ``BENCH_sweep.json``.
 
-The grid is a scenario *family* — 2 CPU fleets × {iid, noniid} × 2 base
-learning rates, all under the proposed Algorithm-1 policy — i.e. the
+The main grid is a scenario *family* — 2 CPU fleets × {iid, noniid} × 2
+base learning rates, all under the proposed Algorithm-1 policy — i.e. the
 workload the declarative API exists for.  Rungs (same grid; schedules are
 bit-identical across rungs, so this measures pure implementation
 overhead):
@@ -24,8 +23,19 @@ overhead):
                   scenarios, horizons deduplicated across rows that are
                   scheduler-identical modulo partition/base_lr (exact, not
                   approximate), vmapped init, flattened (cell × seed) axis.
+  bucket_async  — a *multi-bucket* grid (a ``grid()`` study over model
+                  capacity × partition: 4 shape buckets, 16 rows each)
+                  run under ``AsyncExecutor`` vs ``SerialExecutor``.  The
+                  async runtime dispatches bucket N without blocking and
+                  overlaps bucket N+1's host planning (channel MC draws,
+                  Algorithm-1 bisections) behind N's device execution;
+                  buckets are declared largest-first so the final —
+                  unhidden — collection is the cheapest one.  Both
+                  executors produce bit-identical Results (test-enforced);
+                  best-of-2 walls damp CI scheduling noise.
 
-Acceptance bar: bucket_vmap >= 2x over PR 1's per-cell loop.
+Acceptance bars: bucket_vmap >= 2x over PR 1's per-cell loop;
+bucket_async >= 1.2x over SerialExecutor on the >= 3-bucket grid.
 """
 from __future__ import annotations
 
@@ -36,7 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Experiment, ScenarioSpec
+from repro.api import (AsyncExecutor, Experiment, ScenarioSpec,
+                       SerialExecutor, grid)
 from repro.compression.sbc import compress_dense
 from repro.core import DeviceProfile, FeelScheduler
 from repro.data.pipeline import ClassificationData
@@ -47,6 +58,9 @@ PERIODS, SEEDS = 50, tuple(range(8))
 BMAX, HIDDEN = 24, 96
 CELLS = [(fl, part, lr) for fl in ("cpu6-slow", "cpu6-fast")
          for part in ("iid", "noniid") for lr in (0.1, 0.15)]
+# multi-bucket study: model capacity splits shape buckets; declared
+# largest-first so AsyncExecutor's final (unhidden) collect is smallest
+MB_HIDDEN = [128, 96, 64, 48]
 
 
 def _fleet(tag):
@@ -188,6 +202,28 @@ def _bucket_specs():
             for fl, part, lr in CELLS]
 
 
+# ---------------------------------------------------------------------------
+# rung 4: multi-bucket async dispatch (overlap host planning with device
+# execution across shape buckets)
+# ---------------------------------------------------------------------------
+
+
+def _multibucket_study():
+    base = ScenarioSpec(fleet=_fleet("cpu6-slow"), name="mb",
+                        partition="noniid", policy="proposed", b_max=BMAX,
+                        base_lr=0.1, seeds=SEEDS)
+    return grid(base, hidden=MB_HIDDEN, partition=["iid", "noniid"])
+
+
+def _time_executor(exp, executor_cls, reps: int = 2) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        exp.run(PERIODS, executor=executor_cls())
+        best = min(best, time.time() - t0)
+    return best
+
+
 def main(fast: bool = True):
     full = ClassificationData.synthetic(n=900, dim=48, seed=0, spread=6.0)
     data, test = full.split(150)
@@ -221,6 +257,14 @@ def main(fast: bool = True):
             done += 1
     t_python = (time.time() - t0) * (n_runs / python_runs)
 
+    # rung 4: serial vs async executors on a 4-bucket study
+    mb = _multibucket_study()
+    exp_mb = Experiment(data, test, mb)
+    n_mb_buckets = len(exp_mb.lower())
+    exp_mb.run(PERIODS)                  # warm: compile all 4 programs
+    t_mb_serial = _time_executor(exp_mb, SerialExecutor)
+    t_mb_async = _time_executor(exp_mb, AsyncExecutor)
+
     report = {
         "grid": {"cells": ["/".join(map(str, c)) for c in CELLS],
                  "n_cells": n_cells, "n_seeds": len(SEEDS),
@@ -232,11 +276,21 @@ def main(fast: bool = True):
         "speedup_bucket_vs_percell": t_percell / t_bucket,
         "speedup_bucket_vs_python": t_python / t_bucket,
         "n_buckets": res.n_buckets,
+        "multibucket_grid": {
+            "hidden": MB_HIDDEN, "partitions": ["iid", "noniid"],
+            "n_specs": len(mb), "n_seeds": len(SEEDS),
+            "n_buckets": n_mb_buckets, "periods": PERIODS,
+            "walls": "best of 2",
+        },
+        "bucket_serial_s": t_mb_serial,
+        "bucket_async_s": t_mb_async,
+        "speedup_async_vs_serial": t_mb_serial / t_mb_async,
     }
     with open("BENCH_sweep.json", "w") as f:
         json.dump(report, f, indent=2)
 
     tag = f"{n_cells}cell_8seed_50p"
+    mb_tag = f"{n_mb_buckets}bucket_{len(mb)}cell_8seed_50p"
     return [(f"sweep_speed/bucket_vmap_{tag}", t_bucket * 1e6,
              f"wall={t_bucket:.2f}s;buckets={res.n_buckets}"),
             (f"sweep_speed/percell_vmap_{tag}", t_percell * 1e6,
@@ -244,7 +298,10 @@ def main(fast: bool = True):
              f"speedup_bucket={t_percell / t_bucket:.2f}x"),
             (f"sweep_speed/python_loop_{tag}", t_python * 1e6,
              f"wall={t_python:.2f}s(extrap from {python_runs} runs);"
-             f"speedup_bucket={t_python / t_bucket:.2f}x")]
+             f"speedup_bucket={t_python / t_bucket:.2f}x"),
+            (f"sweep_speed/bucket_async_{mb_tag}", t_mb_async * 1e6,
+             f"wall={t_mb_async:.2f}s;serial={t_mb_serial:.2f}s;"
+             f"speedup_async={t_mb_serial / t_mb_async:.2f}x")]
 
 
 if __name__ == "__main__":

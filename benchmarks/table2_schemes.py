@@ -5,14 +5,17 @@ reproduction target, DESIGN.md §9).
 Declarative-API driver: the whole (K × partition × scheme) grid is ONE
 ``Experiment`` — feel/gradient_fl lower to a bucketed FEEL scan per fleet
 size, individual/model_fl to the per-device-parameter scan, all seeds and
-cells batched along the flattened (scenario × seed) axis."""
+cells batched along the flattened (scenario × seed) axis — run under
+``AsyncExecutor``: the grid spans several shape buckets (FEEL + the two
+dev schemes per fleet size), so each bucket's host planning overlaps the
+previous bucket's device execution."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.api import Experiment, ScenarioSpec
+from repro.api import AsyncExecutor, Experiment, ScenarioSpec
 from repro.core import DeviceProfile
 from repro.data.pipeline import ClassificationData
 
@@ -42,7 +45,8 @@ def main(fast: bool = True):
         for scheme in SCHEMES]
 
     t0 = time.time()
-    res = Experiment(data, test, specs).run(periods)
+    res = Experiment(data, test, specs).run(periods,
+                                            executor=AsyncExecutor())
     wall = time.time() - t0
 
     rows = [("table2/_experiment", wall * 1e6,

@@ -1,12 +1,13 @@
 """Quickstart: one FEEL training period solved end-to-end, then a tiny
-declarative experiment.
+declarative geometry study.
 
 Part 1 drops K heterogeneous edge devices into a cell, samples the
 wireless channel (eq. 5-6), solves 𝒫₁ (Theorems 1+2 / Algorithm 1) and
 prints the optimal batchsizes, TDMA slots, and the learning-efficiency
 comparison against the paper's baseline policies.  Part 2 declares a
-2-cell scenario grid as ``ScenarioSpec`` values and runs it as one
-compiled program via ``repro.api.Experiment``.
+``grid`` study sweeping the wireless cell radius × data partition and
+runs it as one compiled program via ``repro.api.Experiment`` — the swept
+radius comes back as a named ``Results`` coordinate.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -44,19 +45,24 @@ for name, pol in POLICIES.items():
     print(f"{name:<10}{res.global_batch:>7.0f}{res.latency:>10.3f}"
           f"{eff:>12.4f}")
 
-# ---- part 2: the declarative experiment API --------------------------------
-from repro.api import Experiment, ScenarioSpec            # noqa: E402
+# ---- part 2: a declarative geometry study ----------------------------------
+from repro.api import Experiment, ScenarioSpec, grid      # noqa: E402
 from repro.data.pipeline import ClassificationData        # noqa: E402
 
 full = ClassificationData.synthetic(n=900, dim=64, seed=0, spread=6.0)
 data, test = full.split(150)
-specs = [ScenarioSpec(fleet=tuple(devices), name="cpu8", partition=part,
-                      policy="proposed", b_max=64, base_lr=0.15,
-                      hidden=128, seeds=(0, 1))
-         for part in ("iid", "noniid")]
-results = Experiment(data, test, specs).run(periods=20)
-print(f"\n2 cells x 2 seeds lowered to {results.n_buckets} compiled program")
-for labels, cell in results.cells():
-    print(f"  {labels['partition']:<7} final acc "
-          f"{cell.final_acc.mean():.3f}±{cell.final_acc.std():.3f}  "
-          f"sim time {cell.times[:, -1].mean():.1f}s")
+base = ScenarioSpec(fleet=tuple(devices), name="cpu8", policy="proposed",
+                    b_max=64, base_lr=0.15, hidden=128, seeds=(0, 1),
+                    compression=0.1)   # heavier payload: geometry shows up
+                                       # in the latency ledger
+study = grid(base, partition=["iid", "noniid"],
+             **{"cell.radius_m": [150.0, 400.0]})
+results = Experiment(data, test, study).run(periods=20)
+print(f"\n{len(study)} cells x 2 seeds lowered to "
+      f"{results.n_buckets} compiled program")
+for radius in (150.0, 400.0):
+    for part in ("iid", "noniid"):
+        cell = results.sel(cell_radius_m=radius, partition=part)
+        print(f"  r={radius:>5.0f}m {part:<7} final acc "
+              f"{cell.final_acc.mean():.3f}±{cell.final_acc.std():.3f}  "
+              f"sim time {cell.times[:, -1].mean():.1f}s")

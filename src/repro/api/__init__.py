@@ -1,29 +1,47 @@
-"""Declarative experiment API: ScenarioSpec → bucketed lowering → Results.
+"""Declarative experiment API: Study grids → bucketed lowering →
+pluggable Executor runtimes → streaming Results.
 
 The paper's contribution is a *family* of scenarios — CPU vs GPU fleets,
-IID vs non-IID partitions, the four Table-II schemes, batchsize policies —
-and this package is the experiment surface that serves that family at
-hardware speed:
+IID vs non-IID partitions, the four Table-II schemes, batchsize policies,
+wireless operating points — and this package is the experiment surface
+that serves that family at hardware speed:
 
 * :class:`ScenarioSpec` (``spec.py``) — one frozen, hashable cell of the
   scenario grid: fleet, wireless ``CellConfig``, partition, policy,
   scheme, compression, ``b_max``, ``base_lr``, ``local_steps``, seeds.
-* :class:`Experiment` (``experiment.py``) — groups specs into
-  shape-compatible buckets (the rule lives on
-  ``ScenarioSpec.bucket_key`` — see ``spec.py``'s docstring) and lowers
-  each bucket to ONE jitted ``vmap(lax.scan)`` program whose leading axis
-  flattens the (scenario × seed) grid, optionally sharded across a device
-  mesh (``launch.mesh.make_batch_mesh``).
-* :class:`Results` (``results.py``) — named (fleet, partition, policy,
-  scheme, seed, period) axes with ``sel``/``speed``/``final_acc``
-  reductions and explicit NaN handling for not-evaluated periods.
+* :func:`grid` / :class:`Study` (``study.py``) — product-expansion
+  sweeps over *any* spec field, including ``CellConfig`` geometry via
+  dotted axes (``cell.radius_m``, ``cell.bandwidth_hz``,
+  ``cell.tx_power_dbm``), expanding to deduplicated specs with
+  auto-derived labels and per-axis ``Results`` coordinates.
+* :class:`Experiment` (``experiment.py``) — dedupes and groups rows into
+  shape-compatible buckets (``ScenarioSpec.bucket_key`` — see
+  ``spec.py``), lowers each bucket to ONE jitted ``vmap(lax.scan)``
+  program through the plan/dispatch/collect phases of ``lowering.py``,
+  and assembles ``Results`` incrementally (``run`` / ``stream``).
+* Executors (``executor.py``) — :class:`SerialExecutor` (reference),
+  :class:`AsyncExecutor` (cross-bucket pipelining: bucket *N+1*'s host
+  planning overlaps bucket *N*'s device execution), and
+  :class:`MeshExecutor` (batch axis sharded over
+  ``launch.mesh.make_batch_mesh``).  Bit-identical by construction and
+  by test.
+* :class:`Results` / :class:`ResultsBuilder` (``results.py``) — named
+  (fleet, partition, policy, scheme, seed, period, …axis) coordinates
+  with ``sel``/``speed``/``final_acc`` reductions, explicit NaN handling,
+  and incremental per-bucket collection.
 
 The legacy entry points ``fed.sweep.run_sweep`` and
 ``fed.trainer.run_scheme`` remain as thin deprecation shims on top of
-this package.
+this package; ``Experiment(mesh=...)`` is pending deprecation in favour
+of ``MeshExecutor``.
 """
+from repro.api.executor import (AsyncExecutor, Executor, MeshExecutor,
+                                SerialExecutor)
 from repro.api.experiment import Experiment
-from repro.api.results import Results, time_to_target
+from repro.api.results import Results, ResultsBuilder, time_to_target
 from repro.api.spec import ScenarioSpec
+from repro.api.study import Study, grid
 
-__all__ = ["Experiment", "Results", "ScenarioSpec", "time_to_target"]
+__all__ = ["AsyncExecutor", "Executor", "Experiment", "MeshExecutor",
+           "Results", "ResultsBuilder", "ScenarioSpec", "SerialExecutor",
+           "Study", "grid", "time_to_target"]

@@ -1,0 +1,100 @@
+"""Pluggable Experiment runtimes: how buckets are scheduled on hardware.
+
+The lowering (``api.lowering``) splits every bucket into three pure
+phases — host-side *plan*, non-blocking device *dispatch*, blocking
+*collect* — and an :class:`Executor` is nothing but a composition policy
+over those phases.  All executors are bit-identical in results (the
+phases are pure functions of the bucket; test-enforced); they differ only
+in wall-clock and device layout:
+
+* :class:`SerialExecutor` — plan → dispatch → collect one bucket at a
+  time, blocking between buckets.  The reference runtime (today's
+  behaviour) and the default.
+* :class:`AsyncExecutor` — dispatch bucket *N* without blocking and
+  overlap bucket *N+1*'s host planning (channel Monte-Carlo draws and
+  Algorithm-1 bisections are pure host NumPy) behind its device
+  execution; only block at collection.  On a multi-bucket grid the host
+  plans the next program while the device retires the previous one.
+* :class:`MeshExecutor` — shard every bucket's flattened
+  (scenario × seed) batch axis across a 1-D device mesh
+  (``launch.mesh.make_batch_mesh``), created lazily over all available
+  devices when none is given.  Subsumes the deprecated
+  ``Experiment(mesh=...)`` kwarg.
+
+Executors yield ``(bucket, (losses, accs, times, global_batch))`` in
+bucket order as results become available, which is what lets
+``Experiment.stream`` hand back incrementally collected ``Results``.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Sequence, Tuple
+
+from repro.api.lowering import (Bucket, collect_bucket, dispatch_bucket,
+                                plan_bucket)
+from repro.launch.mesh import ensure_batch_mesh, make_batch_mesh
+
+BucketSeries = Tuple[Bucket, tuple]
+
+
+class Executor:
+    """Composition policy over the plan/dispatch/collect bucket phases."""
+
+    def __init__(self, mesh=None):
+        self.mesh = mesh
+
+    def _resolve_mesh(self):
+        return None if self.mesh is None else ensure_batch_mesh(self.mesh)
+
+    def execute(self, buckets: Sequence[Bucket], data, test,
+                periods: int) -> Iterator[BucketSeries]:
+        """Yield ``(bucket, (losses, accs, times, global_batch))`` per
+        bucket, in bucket order."""
+        raise NotImplementedError
+
+
+class SerialExecutor(Executor):
+    """One bucket at a time, blocking at each collection (reference)."""
+
+    def execute(self, buckets, data, test, periods):
+        mesh = self._resolve_mesh()
+        for bucket in buckets:
+            handle = dispatch_bucket(plan_bucket(bucket, data, periods),
+                                     data, test, mesh=mesh)
+            yield bucket, collect_bucket(handle)
+
+
+class AsyncExecutor(Executor):
+    """Cross-bucket pipelining: plan+dispatch every bucket back-to-back,
+    collect afterwards.
+
+    Because jax dispatch is asynchronous, dispatching bucket *N* returns
+    as soon as the program is enqueued — bucket *N+1*'s host planning
+    (pure NumPy) then runs concurrently with *N*'s device execution, and
+    the only blocking happens at collection.  Results are bit-identical
+    to :class:`SerialExecutor` (test-enforced): every phase is a pure
+    function of its bucket, so scheduling order cannot change values.
+    """
+
+    def execute(self, buckets, data, test, periods):
+        mesh = self._resolve_mesh()
+        handles = [dispatch_bucket(plan_bucket(bucket, data, periods),
+                                   data, test, mesh=mesh)
+                   for bucket in buckets]
+        for handle in handles:
+            yield handle.bucket, collect_bucket(handle)
+
+
+class MeshExecutor(SerialExecutor):
+    """Serial schedule with every bucket's batch axis sharded over a 1-D
+    device mesh; builds ``make_batch_mesh(max_devices)`` lazily when no
+    mesh is given.  For sharding *and* cross-bucket overlap, pass a mesh
+    to :class:`AsyncExecutor` instead."""
+
+    def __init__(self, mesh=None, max_devices: Optional[int] = None):
+        super().__init__(mesh=mesh)
+        self.max_devices = max_devices
+
+    def _resolve_mesh(self):
+        if self.mesh is None:
+            self.mesh = make_batch_mesh(self.max_devices)
+        return ensure_batch_mesh(self.mesh)

@@ -1,74 +1,144 @@
 """The declarative experiment driver: specs in, named Results out.
 
-    from repro.api import Experiment, ScenarioSpec
+    from repro.api import AsyncExecutor, Experiment, ScenarioSpec, grid
 
-    specs = [ScenarioSpec(fleet=fleet, name="cpu6", partition=part,
-                          policy=pol, seeds=range(8), b_max=64)
-             for part in ("iid", "noniid")
-             for pol in ("proposed", "online", "full")]
-    res = Experiment(data, test, specs).run(periods=100)
-    res.sel(policy="proposed").speed(0.6)
+    study = grid(ScenarioSpec(fleet=fleet, name="cpu6", seeds=range(8)),
+                 policy=("proposed", "online", "full"),
+                 **{"cell.radius_m": [100.0, 200.0, 400.0]})
+    res = Experiment(data, test, study).run(periods=100,
+                                            executor=AsyncExecutor())
+    res.sel(policy="proposed", cell_radius_m=200.0).speed(0.6)
 
 ``run`` lowers the whole grid through ``api.lowering``: rows (spec × seed)
-are grouped into shape-compatible buckets, each bucket executes as ONE
-jitted ``vmap(lax.scan)`` program over the flattened (scenario × seed)
-batch axis, and that axis is sharded across the devices of ``mesh`` when
-one is given (``launch.mesh.make_batch_mesh()``; a 1-device mesh is the
-CPU fallback and changes nothing but layout).
+are deduplicated (a spec declared twice is computed once and fanned back
+out) and grouped into shape-compatible buckets, each bucket executing as
+ONE jitted ``vmap(lax.scan)`` over the flattened (scenario × seed) axis.
+*How* buckets are scheduled is the executor's policy (``api.executor``):
+serial reference, async cross-bucket pipelining, or mesh-sharded — all
+bit-identical in results.  ``stream`` yields cumulative partial
+``Results`` as each bucket collects, for long grids where early buckets
+are worth looking at before the last one retires.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Iterator, List, Optional, Sequence
 
 import numpy as np
 
-from repro.api.lowering import (Bucket, group_rows, run_dev_bucket,
-                                run_feel_bucket)
-from repro.api.results import COORD_NAMES, Results
+from repro.api.executor import Executor, MeshExecutor, SerialExecutor
+from repro.api.lowering import Bucket, group_rows
+from repro.api.results import COORD_NAMES, Results, ResultsBuilder
 from repro.api.spec import ScenarioSpec
 from repro.data.pipeline import ClassificationData
 
 
 @dataclass
 class Experiment:
-    """A family of scenarios over one dataset, lowered bucket-by-bucket."""
+    """A family of scenarios over one dataset, lowered bucket-by-bucket.
+
+    ``specs`` may be any spec sequence, including a
+    :class:`repro.api.study.Study` — swept study axes then surface as
+    extra ``Results`` coordinates.  ``mesh`` is pending deprecation:
+    prefer ``run(executor=MeshExecutor(mesh))``.
+    """
     data: ClassificationData
     test: ClassificationData
     specs: Sequence[ScenarioSpec]
-    mesh: Optional[object] = None        # launch.mesh.make_batch_mesh()
+    mesh: Optional[object] = None        # pending-deprecation: MeshExecutor
 
     def lower(self) -> List[Bucket]:
         """The bucketed row plan (introspection / tests): which rows share
-        a compiled program, in execution order."""
+        a compiled program, in execution order.  Duplicate (spec, seed)
+        rows collapse onto one computed row (``Row.indices`` fans out)."""
         return group_rows(self.specs)
 
-    def run(self, periods: int) -> Results:
+    def run(self, periods: int, executor: Optional[Executor] = None,
+            mesh=None) -> Results:
+        """Run the whole grid and return the complete ``Results``."""
+        builder = None
+        for builder in self._collected(periods, executor, mesh):
+            pass
+        return builder.build()
+
+    def stream(self, periods: int, executor: Optional[Executor] = None,
+               mesh=None) -> Iterator[Results]:
+        """Yield a cumulative partial ``Results`` after each bucket
+        collection (the final yield is the complete result).
+
+        With an :class:`~repro.api.executor.AsyncExecutor` every bucket
+        is already dispatched before the first yield, so consuming the
+        stream slowly does not serialize the device work.
+        """
+        for builder in self._collected(periods, executor, mesh):
+            yield builder.partial()
+
+    def _collected(self, periods: int, executor: Optional[Executor],
+                   mesh) -> Iterator[ResultsBuilder]:
+        """Drive the executor, yielding the builder after each bucket
+        lands (``run`` assembles once at the end; ``stream`` snapshots a
+        partial per yield)."""
         buckets = self.lower()
         if not buckets:
             raise ValueError("Experiment has no specs")
-        n_rows = sum(len(b.rows) for b in buckets)
-        losses = np.empty((n_rows, periods))
-        accs = np.empty((n_rows, periods))
-        times = np.empty((n_rows, periods))
-        gb = np.empty((n_rows, periods), np.int64)
-        coords = {name: np.empty(n_rows, object) for name in COORD_NAMES}
-        coords["seed"] = np.empty(n_rows, np.int64)
+        executor = self._resolve_executor(executor, mesh)
+        builder = ResultsBuilder(coords=self._coords(buckets),
+                                 n_rows=self._n_rows(buckets),
+                                 n_buckets=len(buckets))
+        for bucket, (bl, ba, bt, bg) in executor.execute(
+                buckets, self.data, self.test, periods):
+            idx = np.array([i for row in bucket.rows
+                            for i in row.indices], np.int64)
+            take = np.array([j for j, row in enumerate(bucket.rows)
+                             for _ in row.indices], np.int64)
+            builder.add_rows(idx, bl[take], ba[take], bt[take], bg[take])
+            yield builder
 
+    # ------------------------------------------------------------------
+    def _resolve_executor(self, executor: Optional[Executor],
+                          mesh) -> Executor:
+        legacy_mesh = mesh if mesh is not None else self.mesh
+        if executor is not None:
+            if legacy_mesh is not None:
+                raise ValueError(
+                    "pass either executor= or mesh=, not both; give the "
+                    "mesh to the executor (e.g. AsyncExecutor(mesh=...))")
+            return executor
+        if legacy_mesh is not None:
+            warnings.warn(
+                "Experiment(mesh=...) / run(mesh=...) is pending "
+                "deprecation; use run(executor=MeshExecutor(mesh)) (or "
+                "AsyncExecutor(mesh=...) for cross-bucket overlap)",
+                PendingDeprecationWarning, stacklevel=4)
+            return MeshExecutor(legacy_mesh)
+        return SerialExecutor()
+
+    @staticmethod
+    def _n_rows(buckets: Sequence[Bucket]) -> int:
+        return sum(len(r.indices) for b in buckets for r in b.rows)
+
+    def _coords(self, buckets: Sequence[Bucket]):
+        """Per-output-row coordinate columns: the standard labels plus, for
+        Study specs, one column per swept axis (``axis_coords``)."""
+        n_rows = self._n_rows(buckets)
+        axis_coords = getattr(self.specs, "axis_coords", None)
+        extra = [n for n in getattr(self.specs, "coord_names", ())
+                 if n not in COORD_NAMES] if axis_coords else []
+        coords = {name: np.empty(n_rows, object)
+                  for name in (*COORD_NAMES, *extra)}
+        coords["seed"] = np.empty(n_rows, np.int64)
         for bucket in buckets:
-            runner = run_feel_bucket if bucket.kind == "feel" \
-                else run_dev_bucket
-            bl, ba, bt, bg = runner(bucket, self.data, self.test, periods,
-                                    mesh=self.mesh)
-            for j, row in enumerate(bucket.rows):
-                i = row.index
-                losses[i], accs[i], times[i], gb[i] = bl[j], ba[j], bt[j], \
-                    bg[j]
-                coords["fleet"][i] = row.spec.name or f"K{row.spec.k}"
-                coords["partition"][i] = row.spec.partition
-                coords["policy"][i] = row.spec.effective_policy
-                coords["scheme"][i] = row.spec.scheme
-                coords["seed"][i] = row.seed
-                coords["spec"][i] = row.spec
-        return Results(coords=coords, losses=losses, accs=accs, times=times,
-                       global_batch=gb, n_buckets=len(buckets))
+            for row in bucket.rows:
+                axes = axis_coords(row.spec) if axis_coords else {}
+                for i in row.indices:
+                    coords["fleet"][i] = row.spec.name or f"K{row.spec.k}"
+                    coords["partition"][i] = row.spec.partition
+                    coords["policy"][i] = row.spec.effective_policy
+                    coords["scheme"][i] = row.spec.scheme
+                    coords["seed"][i] = row.seed
+                    coords["spec"][i] = row.spec
+                    for name in extra:
+                        if name in axes:
+                            coords[name][i] = axes[name]
+        return coords

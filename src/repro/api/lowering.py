@@ -1,29 +1,42 @@
-"""ScenarioSpec → compiled-program lowering.
+"""ScenarioSpec → compiled-program lowering, in three phases.
 
-``lower(...)`` groups the flattened (spec × seed) rows of an experiment
-into shape-compatible buckets (``ScenarioSpec.bucket_key``) and executes
-each bucket as ONE jitted program:
+``group_rows(...)`` flattens the (spec × seed) grid of an experiment into
+shape-compatible buckets (``ScenarioSpec.bucket_key``); duplicate
+(spec, seed) occurrences collapse onto one computed row whose
+``Row.indices`` fan the result back out to every output position.  Each
+bucket then executes as ONE jitted program via three composable phases —
+the split is what lets ``api.executor`` runtimes schedule buckets
+differently without re-implementing the lowering:
 
-* host side, vectorized across the whole bucket: initial parameters come
-  from a single ``vmap(init)`` over the stacked per-row PRNG keys
-  (bit-identical to per-row init — counter-based PRNG), FEEL horizons from
-  ``core.scheduler.plan_horizons_batch`` (shared-fleet Algorithm-1 rows
-  fused into one lockstep solve), dev-scheme ledgers from
-  ``core.scheduler.DevScheduler``;
-* device side: ``engine.run_trajectory_batch`` /
-  ``engine.run_dev_trajectory_batch`` — a ``vmap(lax.scan)`` over the
-  flattened (scenario × seed) batch axis, optionally sharded across a
-  1-D device mesh (``launch.mesh.make_batch_mesh``), padded to the mesh
-  size by wrapping the leading rows and sliced back afterwards.
+* :func:`plan_bucket` — **host only** (pure NumPy): vectorized channel
+  Monte-Carlo draws, Algorithm-1 bisections
+  (``core.scheduler.plan_horizons_batch`` — shared-fleet rows fused into
+  one lockstep solve), horizon dedup across rows that are
+  scheduler-identical modulo partition/base_lr (``_plan_key``), batcher
+  sampling, the cumulative latency ledger.  No device work, so an async
+  runtime can overlap this with another bucket's device execution.
+* :func:`dispatch_bucket` — enqueue the bucket's device program and
+  return immediately (jax dispatch is asynchronous): one ``vmap(init)``
+  over stacked per-row PRNG keys (bit-identical to per-row init —
+  counter-based PRNG), then ``engine.run_trajectory_batch`` /
+  ``run_dev_trajectory_batch``, a ``vmap(lax.scan)`` over the flattened
+  (scenario × seed) axis, optionally sharded across a 1-D device mesh
+  (``launch.mesh.make_batch_mesh``; rows padded cyclically, sliced back
+  at collection).
+* :func:`collect_bucket` — block on the device values and return host
+  ``(losses, accs, times, global_batch)`` series, one row per *computed*
+  row (callers fan out via ``Row.indices``).
 
 Per-row rng streams (partitioner, batcher, scheduler channel draws) are
 consumed in exactly the order the per-simulation path uses, so lowering a
-grid produces bit-identical schedules to running each cell alone.
+grid produces bit-identical schedules to running each cell alone — and
+the phases are pure functions of the bucket, so every executor schedule
+(serial, async, meshed) produces bit-identical results.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,10 +56,19 @@ tree_map = jax.tree_util.tree_map
 
 @dataclass(frozen=True)
 class Row:
-    """One realized (spec, seed) pair — one entry of a bucket's batch axis."""
+    """One *computed* (spec, seed) pair of a bucket's batch axis.
+
+    ``indices`` are the experiment-output row positions this computation
+    feeds: more than one when the same ``ScenarioSpec`` was declared
+    twice — the duplicate is computed once and fanned back out.
+    """
     spec: ScenarioSpec
     seed: int
-    index: int                  # row position in the experiment's output
+    indices: Tuple[int, ...]
+
+    @property
+    def index(self) -> int:
+        return self.indices[0]
 
 
 @dataclass
@@ -62,16 +84,30 @@ class Bucket:
 
 def group_rows(specs: Sequence[ScenarioSpec]) -> List[Bucket]:
     """Flatten specs × seeds into rows, grouped into first-seen-order
-    buckets by shape compatibility."""
-    buckets: Dict[tuple, Bucket] = {}
+    buckets by shape compatibility.
+
+    Duplicate (spec, seed) pairs — the same spec declared twice —
+    deduplicate onto one row carrying every output index, so an
+    experiment never runs one trajectory twice.
+    """
+    entries: Dict[tuple, List[list]] = {}
+    seen: Dict[tuple, list] = {}
     index = 0
     for spec in specs:
         key = spec.bucket_key()
         for seed in spec.seeds:
-            buckets.setdefault(key, Bucket(key=key, rows=[])) \
-                .rows.append(Row(spec=spec, seed=seed, index=index))
+            row_key = (spec, seed)
+            if row_key in seen:
+                seen[row_key].append(index)
+            else:
+                entry = [spec, seed, [index]]
+                seen[row_key] = entry[2]
+                entries.setdefault(key, []).append(entry)
             index += 1
-    return list(buckets.values())
+    return [Bucket(key=key,
+                   rows=[Row(spec=s, seed=sd, indices=tuple(ix))
+                         for s, sd, ix in rows])
+            for key, rows in entries.items()]
 
 
 def _partition(spec: ScenarioSpec, data, seed: int):
@@ -110,8 +146,11 @@ def _plan_key(r: Row) -> tuple:
     consume identical rng streams and produce identical horizons (the
     partition only affects the *batcher*, and base_lr only rescales the
     lr row — rebuilt per row below), so the whole-grid lowering plans each
-    unique key ONCE.  This is a structural win a per-cell driver cannot
-    have: it never sees that its cells share planning work."""
+    unique key ONCE.  The full frozen ``CellConfig`` is part of the key:
+    distinct wireless geometries (radius, bandwidth, tx power, frames)
+    never share a planned horizon.  This is a structural win a per-cell
+    driver cannot have: it never sees that its cells share planning
+    work."""
     s = r.spec
     return (s.fleet, s.effective_policy, s.b_max, s.compression, s.cell,
             s.hidden, s.depth, r.seed)
@@ -124,8 +163,47 @@ def _rescale_lr(horizon, base_lr: float, ref_batch: float):
         horizon.global_batch / ref_batch))
 
 
-def run_feel_bucket(bucket: Bucket, data, test, periods: int, mesh=None):
-    """Lower + execute one FEEL-family bucket; returns (N, P) series."""
+# ---------------------------------------------------------------------------
+# phase containers
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BucketPlan:
+    """Phase-1 output: everything host planning produced for one bucket.
+
+    ``times``/``global_batch`` are final host-side results (one row per
+    computed row); ``payload`` holds the kind-specific arrays the dispatch
+    phase feeds the device program.
+    """
+    bucket: Bucket
+    input_dim: int
+    times: np.ndarray            # (n, P) cumulative simulated seconds
+    global_batch: np.ndarray     # (n, P) int64
+    payload: dict
+
+
+@dataclass
+class BucketHandle:
+    """Phase-2 output: in-flight device values + finished host ledgers.
+
+    ``losses``/``accs`` are (possibly padded) device arrays whose
+    computation has been *dispatched* but not necessarily finished —
+    :func:`collect_bucket` blocks and slices.
+    """
+    bucket: Bucket
+    losses: object               # (n+pad, P) device array
+    accs: object                 # (n+pad, P) device array
+    times: np.ndarray
+    global_batch: np.ndarray
+
+
+# ---------------------------------------------------------------------------
+# phase 1: plan (pure host NumPy)
+# ---------------------------------------------------------------------------
+
+
+def _plan_feel(bucket: Bucket, data, periods: int) -> BucketPlan:
     rows = bucket.rows
     spec0 = rows[0].spec
     input_dim = data.x.shape[1]
@@ -157,30 +235,14 @@ def run_feel_bucket(bucket: Bucket, data, test, periods: int, mesh=None):
         schedules.append(engine.build_schedule(
             sched, batcher, r.spec.fleet, periods, r.spec.local_steps,
             horizon=horizon))
-
-    params0 = _init_params_batch(rows, input_dim)
-    residual0 = tree_map(
-        lambda p: jnp.zeros((p.shape[0], spec0.k) + p.shape[1:], p.dtype),
-        params0)
-
-    n = len(rows)
-    pad = 0 if mesh is None else pad_batch(n, mesh)
-    if pad:
-        params0, residual0 = _pad_rows((params0, residual0), n, pad)
-        schedules = [schedules[i % n] for i in range(n + pad)]
-    _, _, (losses, accs, _) = engine.run_trajectory_batch(
-        params0, residual0, schedules, data, test,
-        local_steps=spec0.local_steps, compress=spec0.compress,
-        ratio=spec0.compression, mesh=mesh)
-    losses = np.asarray(losses)[:n]
-    accs = np.asarray(accs)[:n]
-    times = np.stack([s.times for s in schedules[:n]])
-    gb = np.stack([s.global_batch for s in schedules[:n]])
-    return losses, accs, times, gb
+    return BucketPlan(
+        bucket=bucket, input_dim=input_dim,
+        times=np.stack([s.times for s in schedules]),
+        global_batch=np.stack([s.global_batch for s in schedules]),
+        payload={"schedules": schedules})
 
 
-def run_dev_bucket(bucket: Bucket, data, test, periods: int, mesh=None):
-    """Lower + execute one individual/model_fl bucket (N, P) series."""
+def _plan_dev(bucket: Bucket, data, periods: int) -> BucketPlan:
     rows = bucket.rows
     spec0 = rows[0].spec
     input_dim = data.x.shape[1]
@@ -197,13 +259,60 @@ def run_dev_bucket(bucket: Bucket, data, test, periods: int, mesh=None):
             upload=(r.spec.scheme == "model_fl"),
             seed=r.seed, cell=Cell.make(r.seed, r.spec.cell))
         horizons.append(sched.plan_horizon(periods))
+    n = len(rows)
+    return BucketPlan(
+        bucket=bucket, input_dim=input_dim,
+        times=np.stack([h.times for h in horizons]),
+        global_batch=np.broadcast_to(
+            batch * spec0.k, (n, periods)).astype(np.int64).copy(),
+        payload={"idx": np.stack([h.idx for h in horizons]),
+                 "lr": np.array([r.spec.base_lr for r in rows],
+                                np.float32)})
 
-    p0 = _init_params_batch(rows, input_dim)
+
+def plan_bucket(bucket: Bucket, data, periods: int) -> BucketPlan:
+    """Host-side planning for one bucket (no device work dispatched)."""
+    planner = _plan_feel if bucket.kind == "feel" else _plan_dev
+    return planner(bucket, data, periods)
+
+
+# ---------------------------------------------------------------------------
+# phase 2: dispatch (enqueue the device program, return without blocking)
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_feel(plan: BucketPlan, data, test, mesh) -> BucketHandle:
+    rows = plan.bucket.rows
+    spec0 = rows[0].spec
+    schedules = plan.payload["schedules"]
+
+    params0 = _init_params_batch(rows, plan.input_dim)
+    residual0 = tree_map(
+        lambda p: jnp.zeros((p.shape[0], spec0.k) + p.shape[1:], p.dtype),
+        params0)
+
+    n = len(rows)
+    pad = 0 if mesh is None else pad_batch(n, mesh)
+    if pad:
+        params0, residual0 = _pad_rows((params0, residual0), n, pad)
+        schedules = [schedules[i % n] for i in range(n + pad)]
+    _, _, (losses, accs, _) = engine.run_trajectory_batch(
+        params0, residual0, schedules, data, test,
+        local_steps=spec0.local_steps, compress=spec0.compress,
+        ratio=spec0.compression, mesh=mesh)
+    return BucketHandle(bucket=plan.bucket, losses=losses, accs=accs,
+                        times=plan.times, global_batch=plan.global_batch)
+
+
+def _dispatch_dev(plan: BucketPlan, data, test, mesh) -> BucketHandle:
+    rows = plan.bucket.rows
+    spec0 = rows[0].spec
+
+    p0 = _init_params_batch(rows, plan.input_dim)
     dev_params0 = tree_map(
         lambda a: jnp.broadcast_to(
             a[:, None], (a.shape[0], spec0.k) + a.shape[1:]), p0)
-    idx = np.stack([h.idx for h in horizons])
-    lr = np.array([r.spec.base_lr for r in rows], np.float32)
+    idx, lr = plan.payload["idx"], plan.payload["lr"]
 
     n = len(rows)
     pad = 0 if mesh is None else pad_batch(n, mesh)
@@ -212,9 +321,28 @@ def run_dev_bucket(bucket: Bucket, data, test, periods: int, mesh=None):
     _, (losses, accs) = engine.run_dev_trajectory_batch(
         dev_params0, idx, lr, data, test,
         average=(spec0.scheme == "model_fl"), mesh=mesh)
-    losses = np.asarray(losses)[:n]
-    accs = np.asarray(accs)[:n]
-    times = np.stack([h.times for h in horizons])
-    gb = np.broadcast_to(batch * spec0.k,
-                         (n, periods)).astype(np.int64).copy()
-    return losses, accs, times, gb
+    return BucketHandle(bucket=plan.bucket, losses=losses, accs=accs,
+                        times=plan.times, global_batch=plan.global_batch)
+
+
+def dispatch_bucket(plan: BucketPlan, data, test, mesh=None) -> BucketHandle:
+    """Enqueue one planned bucket's device program; returns immediately
+    with in-flight device values (jax dispatch is asynchronous)."""
+    dispatcher = (_dispatch_feel if plan.bucket.kind == "feel"
+                  else _dispatch_dev)
+    return dispatcher(plan, data, test, mesh)
+
+
+# ---------------------------------------------------------------------------
+# phase 3: collect (block, slice padding, hand back host arrays)
+# ---------------------------------------------------------------------------
+
+
+def collect_bucket(handle: BucketHandle):
+    """Block until the bucket's device values are ready; returns
+    ``(losses, accs, times, global_batch)`` — (n, P) host arrays, one row
+    per computed row (fan out duplicates via ``Row.indices``)."""
+    n = len(handle.bucket.rows)
+    losses = np.asarray(handle.losses)[:n]
+    accs = np.asarray(handle.accs)[:n]
+    return losses, accs, handle.times, handle.global_batch

@@ -17,6 +17,17 @@ differing only in, say, ``base_lr`` or ``b_max`` share every label.  The
 isolates exactly one scenario's seed rows, and :meth:`Results.cells`
 groups by it (never merging distinct scenarios, whatever their labels).
 
+Experiments built from a :func:`repro.api.study.grid` additionally carry
+one coordinate per swept axis (dotted geometry axes sanitized:
+``cell.radius_m`` → ``cell_radius_m``), so
+``res.sel(cell_radius_m=200.0)`` selects a wireless operating point
+without any string parsing.
+
+:class:`ResultsBuilder` assembles a ``Results`` incrementally from
+per-bucket chunks as executors collect them — there is no preallocated
+full block, and :meth:`ResultsBuilder.partial` exposes the rows collected
+so far (the streaming surface behind ``Experiment.stream``).
+
 NaN accuracies mean "not evaluated at this period" (the python reference
 engine only scores at eval points); :func:`time_to_target` masks them
 explicitly before comparing, so an unevaluated period never counts as a
@@ -24,8 +35,8 @@ miss *or* a hit and no invalid-compare warnings leak.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Iterator, Mapping, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Mapping, Tuple
 
 import numpy as np
 
@@ -79,6 +90,12 @@ class Results:
         """Filter rows by coordinate value(s): scalars or collections.
 
         ``res.sel(policy="proposed", seed=(0, 1))``
+
+        A tuple ``want`` against a tuple-valued coordinate (e.g. a swept
+        ``seeds`` axis, whose values are seed tuples) matches by
+        *equality*, not membership — ``sel(seeds=(0, 1))`` selects the
+        rows swept with exactly that seed set; wrap it in a list
+        (``sel(seeds=[(0, 1), (2, 3)])``) for membership.
         """
         mask = np.ones(self.rows, bool)
         for name, want in coords.items():
@@ -86,7 +103,11 @@ class Results:
                 raise KeyError(f"unknown coordinate {name!r}; "
                                f"have {tuple(self.coords)}")
             col = self.coords[name]
-            if isinstance(want, (list, tuple, set, frozenset, np.ndarray)):
+            if isinstance(want, tuple) and \
+                    any(isinstance(c, tuple) for c in col):
+                mask &= np.array([c == want for c in col], bool)
+            elif isinstance(want, (list, tuple, set, frozenset,
+                                   np.ndarray)):
                 mask &= np.array([c in want for c in col], bool)
             else:
                 mask &= np.asarray(col == want, bool)
@@ -108,3 +129,55 @@ class Results:
             seen.append(key)
             labels = dict(zip((n for n in COORD_NAMES if n != "seed"), key))
             yield labels, self.sel(**labels)
+
+
+@dataclass
+class ResultsBuilder:
+    """Incremental per-bucket :class:`Results` assembly.
+
+    Executors collect buckets one at a time (possibly long after
+    dispatch); the builder accumulates each bucket's rows as a chunk —
+    no full-experiment block is preallocated — and can produce a
+    :meth:`partial` ``Results`` of everything collected so far at any
+    point.  ``coords`` holds the full experiment's per-row coordinates
+    (cheap host values, known at lowering time); chunk rows address into
+    them by output index.
+    """
+    coords: Mapping[str, np.ndarray]   # full-length (n_rows,) per coord
+    n_rows: int
+    n_buckets: int
+    _chunks: List[tuple] = field(default_factory=list)
+
+    def add_rows(self, indices, losses, accs, times, global_batch) -> None:
+        """Add one collected bucket's rows (already fanned out to output
+        indices — ``len(indices)`` rows per series)."""
+        self._chunks.append((np.asarray(indices, np.int64),
+                             np.asarray(losses), np.asarray(accs),
+                             np.asarray(times), np.asarray(global_batch)))
+
+    @property
+    def collected_rows(self) -> int:
+        return sum(len(c[0]) for c in self._chunks)
+
+    def partial(self) -> Results:
+        """A ``Results`` of every row collected so far, in output-index
+        order (equals the complete result once all buckets are in)."""
+        if not self._chunks:
+            raise ValueError("no buckets collected yet")
+        idx = np.concatenate([c[0] for c in self._chunks])
+        order = np.argsort(idx, kind="stable")
+        sel = idx[order]
+        stack = [np.concatenate([c[j] for c in self._chunks])[order]
+                 for j in range(1, 5)]
+        return Results(
+            coords={k: v[sel] for k, v in self.coords.items()},
+            losses=stack[0], accs=stack[1], times=stack[2],
+            global_batch=stack[3], n_buckets=self.n_buckets)
+
+    def build(self) -> Results:
+        """The complete ``Results``; raises if any bucket is missing."""
+        if self.collected_rows != self.n_rows:
+            raise ValueError(
+                f"incomplete collection: {self.collected_rows} of "
+                f"{self.n_rows} rows")
+        return self.partial()

@@ -108,12 +108,20 @@ class ScenarioSpec:
         return f"{base}/{self.partition}/{self.scheme}/{self.effective_policy}"
 
     def bucket_key(self) -> tuple:
-        """Shape-compatibility class (see module docstring)."""
+        """Shape-compatibility class (see module docstring).
+
+        ``compression`` is structural only while ``compress`` is on (it
+        sets the static top-k fraction inside the jitted step); with
+        compression off it affects nothing but the *planned* payload
+        bits, so compress-off specs merge regardless of ratio — a
+        ``grid(base, compression=[...], compress=[True, False])``
+        ablation costs one program for the whole off column."""
         if self.is_dev_scheme:
             return ("dev", self.scheme, self.k, self.dev_epoch_batch,
                     self.hidden, self.depth)
         return ("feel", self.k, self.b_max, self.local_steps,
-                self.compress, self.compression, self.hidden, self.depth)
+                self.compress, self.compression if self.compress else None,
+                self.hidden, self.depth)
 
 
 jax.tree_util.register_static(ScenarioSpec)

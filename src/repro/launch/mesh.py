@@ -59,3 +59,16 @@ def replicated_sharding(mesh) -> NamedSharding:
 def pad_batch(n: int, mesh) -> int:
     """Rows to append so a length-``n`` batch axis divides the mesh."""
     return (-n) % mesh.devices.size
+
+
+def ensure_batch_mesh(mesh) -> Mesh:
+    """Validate a sweep mesh: the executors shard the flattened
+    (scenario × seed) axis over a ``"batch"`` axis, so a mesh without one
+    (e.g. the 2-D production meshes above) fails fast here instead of
+    deep inside ``device_put``."""
+    if "batch" not in getattr(mesh, "axis_names", ()):
+        raise ValueError(
+            f"expected a 1-D sweep mesh with a 'batch' axis "
+            f"(launch.mesh.make_batch_mesh); got axes "
+            f"{getattr(mesh, 'axis_names', ())!r}")
+    return mesh

@@ -1,13 +1,16 @@
 """Declarative experiment API: bucketing rule, one-trace-per-bucket
 lowering, equivalence against the per-cell PR-1 paths (bit-for-bit for the
-planner ledgers), NaN speed masking, and the mesh-sharded batch axis."""
+planner ledgers), executor runtimes (serial == async == meshed,
+bit-for-bit), duplicate-spec dedup + fan-out, streaming collection, NaN
+speed masking, and the mesh-sharded batch axis."""
 import math
 import warnings
 
 import numpy as np
 import pytest
 
-from repro.api import Experiment, ScenarioSpec, time_to_target
+from repro.api import (AsyncExecutor, Experiment, MeshExecutor,
+                       ScenarioSpec, SerialExecutor, time_to_target)
 from repro.channels.model import Cell
 from repro.core import DeviceProfile, FeelScheduler
 from repro.core.latency import period_latency, uplink_latency
@@ -245,6 +248,103 @@ def test_plan_horizons_batch_bitwise(fleet):
 
 
 # ---------------------------------------------------------------------------
+# executor runtimes: serial == async (bit-for-bit), streaming, dedup
+# ---------------------------------------------------------------------------
+
+
+def _multibucket_specs(fleet):
+    """Three shape buckets: FEEL family (2 cells × 2 seeds), individual,
+    model_fl."""
+    return ([_spec(fleet, partition=p, policy="proposed", seeds=(0, 1))
+             for p in ("iid", "noniid")]
+            + [_spec(fleet, scheme="individual", seeds=(0,)),
+               _spec(fleet, scheme="model_fl", seeds=(0,))])
+
+
+def test_async_executor_bit_identical_to_serial(dataset, fleet):
+    """ISSUE-3 acceptance: AsyncExecutor results are bit-for-bit identical
+    to SerialExecutor on a multi-bucket grid — scheduling policy must not
+    touch values."""
+    data, test = dataset
+    specs = _multibucket_specs(fleet)
+    exp = Experiment(data, test, specs)
+    assert len(exp.lower()) == 3
+    serial = exp.run(periods=4, executor=SerialExecutor())
+    done = exp.run(periods=4, executor=AsyncExecutor())
+    default = exp.run(periods=4)                  # default == serial
+    for got in (done, default):
+        np.testing.assert_array_equal(
+            np.asarray(serial.losses), np.asarray(got.losses))
+        np.testing.assert_array_equal(
+            np.asarray(serial.accs), np.asarray(got.accs))
+        np.testing.assert_array_equal(serial.times, got.times)
+        np.testing.assert_array_equal(serial.global_batch, got.global_batch)
+    assert serial.n_buckets == done.n_buckets == 3
+
+
+def test_stream_yields_cumulative_partials(dataset, fleet):
+    """stream() hands back one cumulative partial Results per bucket; the
+    final partial equals run()'s complete Results."""
+    data, test = dataset
+    specs = _multibucket_specs(fleet)
+    exp = Experiment(data, test, specs)
+    partials = list(exp.stream(periods=4, executor=AsyncExecutor()))
+    assert len(partials) == 3
+    assert [p.rows for p in partials] == [4, 5, 6]  # 4 feel rows, then +1, +1
+    full = exp.run(periods=4)
+    np.testing.assert_array_equal(np.asarray(partials[-1].losses),
+                                  np.asarray(full.losses))
+    np.testing.assert_array_equal(partials[-1].times, full.times)
+    # early partials carry the already-collected rows in output order
+    np.testing.assert_array_equal(np.asarray(partials[0].losses),
+                                  np.asarray(full.losses[:4]))
+
+
+def test_duplicate_specs_dedupe_and_fan_out(dataset, fleet):
+    """The same ScenarioSpec declared twice is computed ONCE (one row per
+    (spec, seed) in the lowering) and fanned back out to both output
+    positions."""
+    data, test = dataset
+    spec = _spec(fleet, partition="iid", policy="full", seeds=(0, 1))
+    other = _spec(fleet, partition="noniid", policy="full", seeds=(0,))
+    exp = Experiment(data, test, [spec, other, spec])
+    buckets = exp.lower()
+    assert len(buckets) == 1
+    assert len(buckets[0].rows) == 3              # 2 unique + 1, not 5
+    fan = [r.indices for r in buckets[0].rows]
+    assert fan == [(0, 3), (1, 4), (2,)]
+    res = exp.run(periods=4)
+    assert res.rows == 5                          # output keeps both copies
+    np.testing.assert_array_equal(np.asarray(res.losses[0]),
+                                  np.asarray(res.losses[3]))
+    np.testing.assert_array_equal(np.asarray(res.losses[1]),
+                                  np.asarray(res.losses[4]))
+    np.testing.assert_array_equal(res.times[0], res.times[3])
+    assert res.coords["spec"][0] == res.coords["spec"][3] == spec
+
+
+def test_executor_and_mesh_are_exclusive(dataset, fleet):
+    data, test = dataset
+    specs = [_spec(fleet, seeds=(0,))]
+    mesh = make_batch_mesh()
+    with pytest.raises(ValueError, match="not both"):
+        Experiment(data, test, specs, mesh=mesh).run(
+            periods=2, executor=SerialExecutor())
+
+
+def test_run_sweep_and_run_scheme_warn_deprecation(dataset, fleet):
+    """The legacy drivers must emit DeprecationWarning."""
+    data, test = dataset
+    with pytest.warns(DeprecationWarning, match="run_sweep is deprecated"):
+        run_sweep({"cpu3": list(fleet)}, data, test, policies=("full",),
+                  partitions=("iid",), seeds=(0,), periods=2, b_max=BMAX,
+                  base_lr=0.15)
+    with pytest.warns(DeprecationWarning, match="run_scheme is deprecated"):
+        run_scheme("individual", list(fleet), data, test, "noniid", 2,
+                   seed=0)
+
+
+# ---------------------------------------------------------------------------
 # NaN speed masking (python engine leaves NaN at non-eval periods)
 # ---------------------------------------------------------------------------
 
@@ -366,13 +466,15 @@ def test_pad_rows_wraps_cyclically_when_pad_exceeds_rows():
 
 def test_mesh_multi_device_sharding():
     """End-to-end on a real 8-device mesh (forced host devices, so this
-    must run in a subprocess): sharded == plain, including a feel bucket
-    and a dev bucket both smaller than the mesh."""
+    must run in a subprocess): sharded == plain for MeshExecutor, the
+    async-with-mesh combination, AND the deprecated mesh= forwarding path,
+    including a feel bucket and a dev bucket both smaller than the
+    mesh."""
     import subprocess
     import sys
     prog = """
 import numpy as np
-from repro.api import Experiment, ScenarioSpec
+from repro.api import AsyncExecutor, Experiment, MeshExecutor, ScenarioSpec
 from repro.core import DeviceProfile
 from repro.data.pipeline import ClassificationData
 from repro.launch.mesh import make_batch_mesh
@@ -387,10 +489,14 @@ specs.append(ScenarioSpec(fleet=fleet, scheme="individual", b_max=8,
 mesh = make_batch_mesh()
 assert mesh.devices.size == 8, mesh.devices.size
 plain = Experiment(data, test, specs).run(periods=3)
-sharded = Experiment(data, test, specs, mesh=mesh).run(periods=3)
-assert np.array_equal(plain.times, sharded.times)
-assert np.allclose(plain.losses, sharded.losses, atol=1e-5)
-assert np.allclose(plain.accs, sharded.accs, atol=1e-5)
+for runner in (lambda e: e.run(periods=3, executor=MeshExecutor()),
+               lambda e: e.run(periods=3, executor=AsyncExecutor(mesh=mesh)),
+               lambda e: Experiment(e.data, e.test, e.specs,
+                                    mesh=mesh).run(periods=3)):
+    sharded = runner(Experiment(data, test, specs))
+    assert np.array_equal(plain.times, sharded.times)
+    assert np.allclose(plain.losses, sharded.losses, atol=1e-5)
+    assert np.allclose(plain.accs, sharded.accs, atol=1e-5)
 print("OK")
 """
     import os
@@ -415,8 +521,26 @@ def test_mesh_one_device_fallback(dataset, fleet):
                    seeds=(0, 1, 2)),              # 3 rows: padding exercised
              _spec(fleet, scheme="individual", seeds=(0,))]
     plain = Experiment(data, test, specs).run(periods=4)
-    mesh = make_batch_mesh()
-    sharded = Experiment(data, test, specs, mesh=mesh).run(periods=4)
+    sharded = Experiment(data, test, specs).run(
+        periods=4, executor=MeshExecutor())       # lazy make_batch_mesh()
     np.testing.assert_array_equal(plain.times, sharded.times)
     np.testing.assert_allclose(plain.losses, sharded.losses, atol=1e-6)
     np.testing.assert_allclose(plain.accs, sharded.accs, atol=1e-6)
+
+
+def test_legacy_mesh_kwarg_forwards_to_mesh_executor(dataset, fleet):
+    """Experiment(mesh=...) still works — forwarded to MeshExecutor with a
+    pending-deprecation note — and rejects non-batch meshes."""
+    data, test = dataset
+    specs = [_spec(fleet, partition="iid", policy="full", seeds=(0,))]
+    plain = Experiment(data, test, specs).run(periods=3)
+    mesh = make_batch_mesh()
+    with pytest.warns(PendingDeprecationWarning, match="MeshExecutor"):
+        fwd = Experiment(data, test, specs, mesh=mesh).run(periods=3)
+    np.testing.assert_array_equal(plain.times, fwd.times)
+    np.testing.assert_allclose(plain.losses, fwd.losses, atol=1e-6)
+
+    from repro.launch.mesh import make_host_mesh
+    with pytest.raises(ValueError, match="batch"):
+        Experiment(data, test, specs).run(
+            periods=3, executor=MeshExecutor(make_host_mesh()))

@@ -1,0 +1,238 @@
+"""Study grids: product expansion over spec fields (incl. dotted
+CellConfig geometry axes and labeled multi-field axes), auto-derived
+labels, dedup, Results axis coordinates, and the geometry-planning
+invariants (bigger cells plan slower communication; distinct geometries
+never share planner state)."""
+import numpy as np
+import pytest
+
+from repro.api import AsyncExecutor, Experiment, ScenarioSpec, Study, grid
+from repro.api.lowering import Row, _plan_key, plan_bucket
+from repro.channels.model import CellConfig
+from repro.core import DeviceProfile
+from repro.data.pipeline import ClassificationData
+
+DIM = 16
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    full = ClassificationData.synthetic(n=260, dim=DIM, seed=0, spread=6.0)
+    return full.split(60)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                 for f in [0.7, 2.1])
+
+
+def _base(fleet, **kw):
+    kw.setdefault("name", "cpu2")
+    kw.setdefault("policy", "full")
+    kw.setdefault("b_max", 8)
+    kw.setdefault("hidden", 24)
+    # uncompressed payload: geometry must visibly move the comm latency
+    kw.setdefault("compression", 1.0)
+    return ScenarioSpec(fleet=fleet, **kw)
+
+
+# ---------------------------------------------------------------------------
+# expansion mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_grid_product_expansion_and_coords(fleet):
+    base = _base(fleet)
+    study = grid(base, partition=["iid", "noniid"],
+                 **{"cell.radius_m": [100.0, 300.0]})
+    assert isinstance(study, Study)
+    assert len(study) == 4                        # full product
+    assert study.coord_names == ("partition", "cell_radius_m")
+    # declaration-order expansion, later axes fastest
+    got = [(s.partition, s.cell.radius_m) for s in study]
+    assert got == [("iid", 100.0), ("iid", 300.0),
+                   ("noniid", 100.0), ("noniid", 300.0)]
+    for s in study:
+        coords = study.axis_coords(s)
+        assert coords["partition"] == s.partition
+        assert coords["cell_radius_m"] == s.cell.radius_m
+        # non-swept cell fields keep their base values
+        assert s.cell.bandwidth_hz == base.cell.bandwidth_hz
+    # label: geometry axis suffixes the name, partition is a label field
+    assert study[0].name == "cpu2/radius_m=100"
+
+
+def test_grid_labeled_axis_bundles_fields(fleet):
+    study = grid(_base(fleet),
+                 model={"big": dict(hidden=48, depth=3),
+                        "small": dict(hidden=16, depth=2)},
+                 base_lr=[0.1, 0.2])
+    assert len(study) == 4
+    big = [s for s in study if study.axis_coords(s)["model"] == "big"]
+    assert all(s.hidden == 48 and s.depth == 3 for s in big)
+    assert {study.axis_coords(s)["base_lr"] for s in big} == {0.1, 0.2}
+    assert big[0].name.startswith("cpu2/model=big/base_lr=0.1")
+
+
+def test_grid_dedupes_identical_expansions(fleet):
+    study = grid(_base(fleet), policy=["full", "full", "online"])
+    assert len(study) == 2                        # duplicate value collapsed
+    assert [s.policy for s in study] == ["full", "online"]
+
+
+def test_grid_rejects_bad_axes(fleet):
+    base = _base(fleet)
+    with pytest.raises(ValueError, match="no field"):
+        grid(base, not_a_field=[1, 2])
+    with pytest.raises(ValueError, match="no field"):
+        grid(base, **{"cell.not_a_knob": [1.0]})
+    with pytest.raises(ValueError, match="not a nested dataclass"):
+        grid(base, **{"b_max.deep": [1]})
+    with pytest.raises(ValueError, match="no values"):
+        grid(base, policy=[])
+    # axis values still go through ScenarioSpec validation
+    with pytest.raises(ValueError, match="policy"):
+        grid(base, policy=["propsed"])
+    # coordinate-name collisions with built-in Results coords fail loudly
+    # instead of producing silently unselectable axes …
+    with pytest.raises(ValueError, match="built-in"):
+        grid(base, fleet=[base.fleet])
+    with pytest.raises(ValueError, match="built-in"):
+        grid(base, policy={"a": dict(hidden=16)})
+    # … but plain partition/policy/scheme sweeps pass through (the
+    # built-in coordinate carries exactly the swept value)
+    assert len(grid(base, partition=["iid", "noniid"],
+                    policy=["full", "online"])) == 4
+    # overlapping axes would silently override each other: reject
+    with pytest.raises(ValueError, match="overlapping"):
+        grid(base, hidden=[16, 32],
+             model={"small": dict(hidden=16, depth=2)})
+    with pytest.raises(ValueError, match="overlapping"):
+        grid(base, cell=[CellConfig()], **{"cell.radius_m": [100.0]})
+    # a policy sweep must actually surface in the policy coordinate:
+    # dev/gradient_fl schemes report effective_policy "none"/"full", so
+    # the swept rows would be silently unselectable (and duplicated)
+    with pytest.raises(ValueError, match="does not survive"):
+        grid(base, scheme=["feel", "individual"],
+             policy=["proposed", "online"])
+    with pytest.raises(ValueError, match="does not survive"):
+        grid(_base(fleet, scheme="gradient_fl"), policy=["proposed"])
+
+
+def test_tuple_valued_axis_selects_by_equality(dataset, fleet):
+    """A swept ``seeds`` axis stores tuple coordinates; sel with a tuple
+    must match the whole tuple (equality), with a list of tuples by
+    membership — not silently return 0 rows."""
+    data, test = dataset
+    study = grid(_base(fleet), seeds=[(0, 1), (2, 3)])
+    res = Experiment(data, test, study).run(periods=2)
+    assert res.rows == 4
+    one = res.sel(seeds=(0, 1))
+    assert one.rows == 2 and set(one.coords["seed"]) == {0, 1}
+    both = res.sel(seeds=[(0, 1), (2, 3)])
+    assert both.rows == 4
+    # plain collection semantics elsewhere are untouched
+    assert res.sel(seed=(0, 2)).rows == 2
+
+
+# ---------------------------------------------------------------------------
+# geometry sweeps: coordinates, planning monotonicity, plan-key hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_geometry_grid_single_experiment_with_coords(dataset, fleet):
+    """ISSUE-3 acceptance: a cell.radius_m × policy grid runs as ONE
+    Experiment (single shape bucket) and the swept geometry comes back as
+    a selectable Results coordinate."""
+    data, test = dataset
+    study = grid(_base(fleet, seeds=(0, 1)), policy=["full", "online"],
+                 **{"cell.radius_m": [100.0, 400.0]})
+    exp = Experiment(data, test, study)
+    assert len(exp.lower()) == 1                  # geometry never splits
+    res = exp.run(periods=3)
+    assert res.rows == 8
+    assert "cell_radius_m" in res.coords
+    sub = res.sel(cell_radius_m=400.0, policy="full")
+    assert sub.rows == 2
+    assert all(s.cell.radius_m == 400.0 for s in sub.coords["spec"])
+    # the same cell selected two ways must agree
+    by_spec = res.sel(spec=sub.coords["spec"][0])
+    np.testing.assert_array_equal(by_spec.losses, sub.losses)
+
+
+def test_radius_and_bandwidth_move_horizons_monotonically(dataset, fleet):
+    """Larger radius → lower rates → longer planned communication latency;
+    more bandwidth → higher rates → shorter.  Checked on the host planning
+    phase alone (plan_bucket), fixed-batch policy so only geometry moves.
+    """
+    data, _ = dataset
+    radii = [100.0, 200.0, 400.0, 800.0]
+    study = grid(_base(fleet, seeds=(0,)), **{"cell.radius_m": radii})
+    [bucket] = Experiment(data, None, study).lower()
+    plan = plan_bucket(bucket, data, periods=4)
+    finals = plan.times[:, -1]                    # rows follow study order
+    assert np.all(np.diff(finals) > 0), finals
+
+    bands = [5e6, 10e6, 40e6]
+    study_b = grid(_base(fleet, seeds=(0,)),
+                   **{"cell.bandwidth_hz": bands})
+    [bucket_b] = Experiment(data, None, study_b).lower()
+    plan_b = plan_bucket(bucket_b, data, periods=4)
+    finals_b = plan_b.times[:, -1]
+    assert np.all(np.diff(finals_b) < 0), finals_b
+
+
+def test_distinct_geometries_never_share_plan_key(fleet):
+    """_plan_key must split on the full CellConfig: same fleet/policy/seed
+    but different geometry rows plan independently."""
+    cells = [CellConfig(), CellConfig(radius_m=400.0),
+             CellConfig(bandwidth_hz=20e6), CellConfig(tx_power_dbm=20.0),
+             CellConfig(frame_up_s=0.02)]
+    rows = [Row(spec=_base(fleet, cell=c), seed=0, indices=(i,))
+            for i, c in enumerate(cells)]
+    keys = {_plan_key(r) for r in rows}
+    assert len(keys) == len(cells)
+    # and equal geometry (+ equal everything else) does share
+    assert _plan_key(rows[0]) == _plan_key(
+        Row(spec=_base(fleet), seed=0, indices=(9,)))
+
+
+def test_geometry_sweep_values_match_per_cell_runs(dataset, fleet):
+    """A geometry grid lowered as one bucket is bit-identical (ledger) /
+    tolerance-equal (series) to running each geometry alone."""
+    data, test = dataset
+    radii = [120.0, 500.0]
+    study = grid(_base(fleet, seeds=(0,)), **{"cell.radius_m": radii})
+    res = Experiment(data, test, study).run(periods=3,
+                                            executor=AsyncExecutor())
+    for radius in radii:
+        solo = Experiment(data, test,
+                          [_base(fleet, cell=CellConfig(radius_m=radius),
+                                 seeds=(0,))]).run(periods=3)
+        cell = res.sel(cell_radius_m=radius)
+        np.testing.assert_array_equal(cell.times, solo.times)
+        np.testing.assert_array_equal(cell.global_batch, solo.global_batch)
+        np.testing.assert_allclose(cell.losses, solo.losses, atol=1e-6)
+        np.testing.assert_allclose(cell.accs, solo.accs, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bucket-key hygiene for the compression ablation grid
+# ---------------------------------------------------------------------------
+
+
+def test_compress_off_merges_ratios_into_one_bucket(dataset, fleet):
+    """compression is structural only while compress=True; the whole
+    compress=False column of a (compression × compress) ablation grid
+    shares one bucket (ratio still moves the planned payload/latency)."""
+    data, test = dataset
+    study = grid(_base(fleet, seeds=(0,)), compression=[0.01, 0.1],
+                 compress=[True, False])
+    buckets = Experiment(data, test, study).lower()
+    assert len(buckets) == 3                      # 2 on-ratios + 1 off
+    res = Experiment(data, test, study).run(periods=3)
+    off = res.sel(compress=False)
+    t_small = off.sel(compression=0.01).times[0, -1]
+    t_big = off.sel(compression=0.1).times[0, -1]
+    assert t_big > t_small                        # payload moved the ledger
