@@ -1,0 +1,91 @@
+"""Impact of the number of users K — the paper's fleet-size figure, as a
+declarative ``users=`` study.
+
+One ``grid(base, users=[...]) × partition`` study sweeps the fleet size
+under the proposed Algorithm-1 policy.  Fleet size is non-structural
+(padded ragged-fleet buckets), so every K shares ONE compiled program per
+partition-independent shape family — the whole figure is a single
+``Experiment`` run, with cross-K fused host planning.
+
+For each K the figure reports the mean final accuracy and the simulated
+time-to-target (more users → more data per aggregation round → higher
+accuracy at a given period count, but longer periods: the efficiency
+trade-off the paper's joint batchsize/bandwidth allocation navigates).
+
+Run:  PYTHONPATH=src python -m benchmarks.fig_users
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.api import AsyncExecutor, Experiment, ScenarioSpec, grid
+from repro.core import DeviceProfile
+from repro.data.pipeline import ClassificationData
+from repro.fed import engine
+
+USERS = [2, 4, 6, 8]
+TARGET_ACC = 0.60
+
+
+def _base_fleet():
+    """Heterogeneous CPU tiers; users= cycles them round-robin per K."""
+    return tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                 for f in (0.7, 1.4, 2.1))
+
+
+def main(fast: bool = True):
+    periods = 30 if fast else 100
+    seeds = tuple(range(4 if fast else 8))
+    full = ClassificationData.synthetic(n=900, dim=48, seed=0, spread=6.0)
+    data, test = full.split(150)
+
+    base = ScenarioSpec(fleet=_base_fleet(), name="ku", partition="noniid",
+                        policy="proposed", b_max=24, base_lr=0.15,
+                        hidden=96, seeds=seeds)
+    study = grid(base, users=USERS, partition=["iid", "noniid"])
+
+    exp = Experiment(data, test, study)
+    before = engine.trace_count()
+    res = exp.run(periods, executor=AsyncExecutor())
+    traces = engine.trace_count() - before
+    assert res.n_buckets == 1, res.n_buckets     # whole K-sweep: one bucket
+
+    table = {}
+    print(f"{'K':>3} {'partition':<8} {'final acc':>16} "
+          f"{'t({:.0%})'.format(TARGET_ACC):>10}")
+    for k in res.unique("num_users"):
+        for part in ("iid", "noniid"):
+            cell = res.sel(num_users=k, partition=part)
+            acc = cell.final_acc
+            speed = cell.speed(TARGET_ACC)
+            reached = np.isfinite(speed)
+            t_tgt = float(np.mean(speed[reached])) if reached.any() \
+                else float("inf")
+            table[f"K{k}/{part}"] = {
+                "final_acc_mean": float(acc.mean()),
+                "final_acc_std": float(acc.std()),
+                "time_to_target_s": t_tgt,
+                "sim_time_s": float(cell.times[:, -1].mean()),
+            }
+            print(f"{k:>3} {part:<8} {acc.mean():>8.3f}±{acc.std():<6.3f} "
+                  f"{t_tgt:>10.1f}")
+
+    with open("BENCH_fig_users.json", "w") as f:
+        json.dump({"users": USERS, "periods": periods,
+                   "n_seeds": len(seeds), "target_acc": TARGET_ACC,
+                   "n_buckets": res.n_buckets, "traces": traces,
+                   "cells": table}, f, indent=2)
+
+    accs_iid = [table[f"K{k}/iid"]["final_acc_mean"] for k in USERS]
+    return [(f"fig_users/{len(USERS)}sizes_{len(seeds)}seed_{periods}p",
+             0.0,
+             f"buckets={res.n_buckets};traces={traces};"
+             f"acc_iid_K{USERS[0]}={accs_iid[0]:.3f};"
+             f"acc_iid_K{USERS[-1]}={accs_iid[-1]:.3f}")]
+
+
+if __name__ == "__main__":
+    for r in main(fast=True):
+        print(",".join(map(str, r)))

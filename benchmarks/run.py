@@ -9,8 +9,9 @@ import time
 def main() -> None:
     from benchmarks import (ablation_compression, fig2_gpu_training_function,
                             fig3_generalization, fig45_batchsize_policies,
-                            loss_decay_fit, roofline, smoke_experiment,
-                            solver_scaling, sweep_speed, table2_schemes)
+                            fig_users, loss_decay_fit, roofline,
+                            smoke_experiment, solver_scaling, sweep_speed,
+                            table2_schemes)
     modules = [
         ("fig2_gpu_training_function", fig2_gpu_training_function),
         ("solver_scaling", solver_scaling),
@@ -20,6 +21,7 @@ def main() -> None:
         ("fig3_generalization", fig3_generalization),
         ("fig45_batchsize_policies", fig45_batchsize_policies),
         ("ablation_compression", ablation_compression),
+        ("fig_users", fig_users),
         ("sweep_speed", sweep_speed),
         ("roofline", roofline),
     ]

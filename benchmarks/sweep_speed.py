@@ -33,9 +33,28 @@ overhead):
                   unhidden — collection is the cheapest one.  Both
                   executors produce bit-identical Results (test-enforced);
                   best-of-2 walls damp CI scheduling noise.
+  users_padded  — rung 5: the paper's "impact of number of users" sweep,
+                  ``grid(base, users=[5, 6, 7, 8])`` × 8 seeds at a short
+                  horizon (the interactive-sweep regime, where per-K
+                  recompiles dominate wall-clock — exactly the workload
+                  the ragged-fleet redesign unblocks).  Padded-bucketed:
+                  fleet size is non-structural, so the whole K-sweep
+                  lowers to ONE padded compiled program with cross-K
+                  fused Algorithm-1 planning.  Per-K serial: the
+                  pre-redesign shape-per-K lowering (each spec its own
+                  Experiment → its own compile + its own planning pass).
+                  Both walls are measured cold (compiles included — the
+                  compile tax is the point): the padded side compiles
+                  ONE (N=32, K=8) program; the per-K side compiles one
+                  (N=8, K_m) program per fleet size.  (On long horizons
+                  the CPU pays serially for the padding FLOPs and the
+                  ratio shrinks toward the device-work ratio
+                  ΣK_m / (n·K_max); on accelerator meshes the batch axis
+                  is parallel and padding is ~free.)
 
 Acceptance bars: bucket_vmap >= 2x over PR 1's per-cell loop;
-bucket_async >= 1.2x over SerialExecutor on the >= 3-bucket grid.
+bucket_async >= 1.2x over SerialExecutor on the >= 3-bucket grid;
+users_padded >= 1.5x over per-K serial on the 4-size K-sweep.
 """
 from __future__ import annotations
 
@@ -61,6 +80,12 @@ CELLS = [(fl, part, lr) for fl in ("cpu6-slow", "cpu6-fast")
 # multi-bucket study: model capacity splits shape buckets; declared
 # largest-first so AsyncExecutor's final (unhidden) collect is smallest
 MB_HIDDEN = [128, 96, 64, 48]
+# rung 5 K-sweep: fleet sizes via the users= axis; hidden=80 is unique to
+# this rung so both sides compile cold, and the short horizon keeps the
+# rung in the compile/plan-dominated interactive regime
+US_USERS = [5, 6, 7, 8]
+US_HIDDEN = 80
+US_PERIODS = 12
 
 
 def _fleet(tag):
@@ -215,6 +240,13 @@ def _multibucket_study():
     return grid(base, hidden=MB_HIDDEN, partition=["iid", "noniid"])
 
 
+def _users_study():
+    base = ScenarioSpec(fleet=_fleet("cpu6-slow")[:3], name="ks",
+                        partition="noniid", policy="proposed", b_max=BMAX,
+                        base_lr=0.1, hidden=US_HIDDEN, seeds=SEEDS)
+    return grid(base, users=US_USERS)
+
+
 def _time_executor(exp, executor_cls, reps: int = 2) -> float:
     best = float("inf")
     for _ in range(reps):
@@ -265,6 +297,19 @@ def main(fast: bool = True):
     t_mb_serial = _time_executor(exp_mb, SerialExecutor)
     t_mb_async = _time_executor(exp_mb, AsyncExecutor)
 
+    # rung 5: K-sweep — padded bucket (ONE cold compile + fused planning)
+    # vs per-K serial lowering (one cold compile + one planning pass per
+    # fleet size), both at the short interactive horizon
+    us = _users_study()
+    t0 = time.time()
+    res_us = Experiment(data, test, us).run(US_PERIODS)
+    t_us_padded = time.time() - t0
+    assert res_us.n_buckets == 1
+    t0 = time.time()
+    for spec in us:
+        Experiment(data, test, [spec]).run(US_PERIODS)
+    t_us_perk = time.time() - t0
+
     report = {
         "grid": {"cells": ["/".join(map(str, c)) for c in CELLS],
                  "n_cells": n_cells, "n_seeds": len(SEEDS),
@@ -285,12 +330,23 @@ def main(fast: bool = True):
         "bucket_serial_s": t_mb_serial,
         "bucket_async_s": t_mb_async,
         "speedup_async_vs_serial": t_mb_serial / t_mb_async,
+        "users_sweep": {
+            "users": US_USERS, "n_seeds": len(SEEDS),
+            "periods": US_PERIODS,
+            "hidden": US_HIDDEN, "n_buckets": res_us.n_buckets,
+            "walls": "cold (compiles included: 1 padded program vs one "
+                     "per fleet size; short interactive horizon)",
+        },
+        "users_padded_s": t_us_padded,
+        "users_per_k_serial_s": t_us_perk,
+        "speedup_users_padded_vs_per_k": t_us_perk / t_us_padded,
     }
     with open("BENCH_sweep.json", "w") as f:
         json.dump(report, f, indent=2)
 
     tag = f"{n_cells}cell_8seed_50p"
     mb_tag = f"{n_mb_buckets}bucket_{len(mb)}cell_8seed_50p"
+    us_tag = f"{len(US_USERS)}sizes_8seed_{US_PERIODS}p"
     return [(f"sweep_speed/bucket_vmap_{tag}", t_bucket * 1e6,
              f"wall={t_bucket:.2f}s;buckets={res.n_buckets}"),
             (f"sweep_speed/percell_vmap_{tag}", t_percell * 1e6,
@@ -301,7 +357,10 @@ def main(fast: bool = True):
              f"speedup_bucket={t_python / t_bucket:.2f}x"),
             (f"sweep_speed/bucket_async_{mb_tag}", t_mb_async * 1e6,
              f"wall={t_mb_async:.2f}s;serial={t_mb_serial:.2f}s;"
-             f"speedup_async={t_mb_serial / t_mb_async:.2f}x")]
+             f"speedup_async={t_mb_serial / t_mb_async:.2f}x"),
+            (f"sweep_speed/users_padded_{us_tag}", t_us_padded * 1e6,
+             f"wall={t_us_padded:.2f}s;per_k={t_us_perk:.2f}s;"
+             f"speedup_padded={t_us_perk / t_us_padded:.2f}x")]
 
 
 if __name__ == "__main__":

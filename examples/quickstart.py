@@ -66,3 +66,16 @@ for radius in (150.0, 400.0):
         print(f"  r={radius:>5.0f}m {part:<7} final acc "
               f"{cell.final_acc.mean():.3f}±{cell.final_acc.std():.3f}  "
               f"sim time {cell.times[:, -1].mean():.1f}s")
+
+# ---- part 3: fleet size as a sweep axis ------------------------------------
+# fleet is non-structural: every K pads into ONE compiled program, and
+# the swept size comes back as the num_users coordinate
+kstudy = grid(base, users=[2, 4, 8])
+kres = Experiment(data, test, kstudy).run(periods=20)
+print(f"\nK-sweep {list(kres.unique('num_users'))} lowered to "
+      f"{kres.n_buckets} compiled program")
+for k in kres.unique("num_users"):
+    cell = kres.sel(num_users=k)
+    print(f"  K={k}  final acc {cell.final_acc.mean():.3f}"
+          f"±{cell.final_acc.std():.3f}  "
+          f"sim time {cell.times[:, -1].mean():.1f}s")

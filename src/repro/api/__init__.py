@@ -12,8 +12,11 @@ that serves that family at hardware speed:
 * :func:`grid` / :class:`Study` (``study.py``) — product-expansion
   sweeps over *any* spec field, including ``CellConfig`` geometry via
   dotted axes (``cell.radius_m``, ``cell.bandwidth_hz``,
-  ``cell.tx_power_dbm``), expanding to deduplicated specs with
-  auto-derived labels and per-axis ``Results`` coordinates.
+  ``cell.tx_power_dbm``) and fleet size/composition via the ``users``
+  axis (``users=[4, 8, 16]`` → ``res.sel(num_users=8)``; fleet is a
+  padded, non-structural axis so a whole K-sweep shares one compiled
+  program), expanding to deduplicated specs with auto-derived labels and
+  per-axis ``Results`` coordinates.
 * :class:`Experiment` (``experiment.py``) — dedupes and groups rows into
   shape-compatible buckets (``ScenarioSpec.bucket_key`` — see
   ``spec.py``), lowers each bucket to ONE jitted ``vmap(lax.scan)``
@@ -32,8 +35,8 @@ that serves that family at hardware speed:
 
 The legacy entry points ``fed.sweep.run_sweep`` and
 ``fed.trainer.run_scheme`` remain as thin deprecation shims on top of
-this package; ``Experiment(mesh=...)`` is pending deprecation in favour
-of ``MeshExecutor``.
+this package.  The ``Experiment(mesh=...)`` shim is gone — meshes belong
+to executors (``MeshExecutor(mesh)`` / ``AsyncExecutor(mesh=...)``).
 """
 from repro.api.executor import (AsyncExecutor, Executor, MeshExecutor,
                                 SerialExecutor)

@@ -15,11 +15,12 @@ in wall-clock and device layout:
   Algorithm-1 bisections are pure host NumPy) behind its device
   execution; only block at collection.  On a multi-bucket grid the host
   plans the next program while the device retires the previous one.
+  ``max_in_flight=N`` caps the dispatch backlog (device residency) at N
+  buckets without changing a single result bit.
 * :class:`MeshExecutor` — shard every bucket's flattened
   (scenario × seed) batch axis across a 1-D device mesh
   (``launch.mesh.make_batch_mesh``), created lazily over all available
-  devices when none is given.  Subsumes the deprecated
-  ``Experiment(mesh=...)`` kwarg.
+  devices when none is given.
 
 Executors yield ``(bucket, (losses, accs, times, global_batch))`` in
 bucket order as results become available, which is what lets
@@ -27,6 +28,7 @@ bucket order as results become available, which is what lets
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Iterator, Optional, Sequence, Tuple
 
 from repro.api.lowering import (Bucket, collect_bucket, dispatch_bucket,
@@ -64,7 +66,7 @@ class SerialExecutor(Executor):
 
 
 class AsyncExecutor(Executor):
-    """Cross-bucket pipelining: plan+dispatch every bucket back-to-back,
+    """Cross-bucket pipelining: plan+dispatch buckets back-to-back,
     collect afterwards.
 
     Because jax dispatch is asynchronous, dispatching bucket *N* returns
@@ -73,14 +75,37 @@ class AsyncExecutor(Executor):
     the only blocking happens at collection.  Results are bit-identical
     to :class:`SerialExecutor` (test-enforced): every phase is a pure
     function of its bucket, so scheduling order cannot change values.
+
+    ``max_in_flight`` bounds how many dispatched buckets' device values
+    stay resident at once: once the window is full, the oldest bucket is
+    collected (blocking) before the next one is planned and dispatched.
+    The default (``None``) keeps every bucket in flight — today's
+    behaviour, fine at current scales; thousand-bucket studies should
+    cap the backlog.  ``max_in_flight=1`` degenerates to the serial
+    schedule.  The cap is a scheduling policy only: capped and uncapped
+    runs are bit-identical (test-enforced).
     """
+
+    def __init__(self, mesh=None, max_in_flight: Optional[int] = None):
+        super().__init__(mesh=mesh)
+        if max_in_flight is not None and max_in_flight < 1:
+            raise ValueError(
+                f"max_in_flight must be >= 1, got {max_in_flight}")
+        self.max_in_flight = max_in_flight
 
     def execute(self, buckets, data, test, periods):
         mesh = self._resolve_mesh()
-        handles = [dispatch_bucket(plan_bucket(bucket, data, periods),
-                                   data, test, mesh=mesh)
-                   for bucket in buckets]
-        for handle in handles:
+        cap = self.max_in_flight or len(buckets)
+        pending: deque = deque()
+        for bucket in buckets:
+            if len(pending) >= cap:
+                handle = pending.popleft()
+                yield handle.bucket, collect_bucket(handle)
+            pending.append(
+                dispatch_bucket(plan_bucket(bucket, data, periods),
+                                data, test, mesh=mesh))
+        while pending:
+            handle = pending.popleft()
             yield handle.bucket, collect_bucket(handle)
 
 

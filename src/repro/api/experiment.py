@@ -21,13 +21,12 @@ are worth looking at before the last one retires.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
 from typing import Iterator, List, Optional, Sequence
 
 import numpy as np
 
-from repro.api.executor import Executor, MeshExecutor, SerialExecutor
+from repro.api.executor import Executor, SerialExecutor
 from repro.api.lowering import Bucket, group_rows
 from repro.api.results import COORD_NAMES, Results, ResultsBuilder
 from repro.api.spec import ScenarioSpec
@@ -40,13 +39,13 @@ class Experiment:
 
     ``specs`` may be any spec sequence, including a
     :class:`repro.api.study.Study` — swept study axes then surface as
-    extra ``Results`` coordinates.  ``mesh`` is pending deprecation:
-    prefer ``run(executor=MeshExecutor(mesh))``.
+    extra ``Results`` coordinates.  Device placement is the executor's
+    job: ``run(executor=MeshExecutor(...))`` (the former
+    ``Experiment(mesh=...)`` shim is gone).
     """
     data: ClassificationData
     test: ClassificationData
     specs: Sequence[ScenarioSpec]
-    mesh: Optional[object] = None        # pending-deprecation: MeshExecutor
 
     def lower(self) -> List[Bucket]:
         """The bucketed row plan (introspection / tests): which rows share
@@ -54,16 +53,16 @@ class Experiment:
         rows collapse onto one computed row (``Row.indices`` fans out)."""
         return group_rows(self.specs)
 
-    def run(self, periods: int, executor: Optional[Executor] = None,
-            mesh=None) -> Results:
+    def run(self, periods: int,
+            executor: Optional[Executor] = None) -> Results:
         """Run the whole grid and return the complete ``Results``."""
         builder = None
-        for builder in self._collected(periods, executor, mesh):
+        for builder in self._collected(periods, executor):
             pass
         return builder.build()
 
-    def stream(self, periods: int, executor: Optional[Executor] = None,
-               mesh=None) -> Iterator[Results]:
+    def stream(self, periods: int,
+               executor: Optional[Executor] = None) -> Iterator[Results]:
         """Yield a cumulative partial ``Results`` after each bucket
         collection (the final yield is the complete result).
 
@@ -71,18 +70,19 @@ class Experiment:
         is already dispatched before the first yield, so consuming the
         stream slowly does not serialize the device work.
         """
-        for builder in self._collected(periods, executor, mesh):
+        for builder in self._collected(periods, executor):
             yield builder.partial()
 
-    def _collected(self, periods: int, executor: Optional[Executor],
-                   mesh) -> Iterator[ResultsBuilder]:
+    def _collected(self, periods: int,
+                   executor: Optional[Executor]) -> Iterator[ResultsBuilder]:
         """Drive the executor, yielding the builder after each bucket
         lands (``run`` assembles once at the end; ``stream`` snapshots a
         partial per yield)."""
         buckets = self.lower()
         if not buckets:
             raise ValueError("Experiment has no specs")
-        executor = self._resolve_executor(executor, mesh)
+        if executor is None:
+            executor = SerialExecutor()
         builder = ResultsBuilder(coords=self._coords(buckets),
                                  n_rows=self._n_rows(buckets),
                                  n_buckets=len(buckets))
@@ -94,25 +94,6 @@ class Experiment:
                              for _ in row.indices], np.int64)
             builder.add_rows(idx, bl[take], ba[take], bt[take], bg[take])
             yield builder
-
-    # ------------------------------------------------------------------
-    def _resolve_executor(self, executor: Optional[Executor],
-                          mesh) -> Executor:
-        legacy_mesh = mesh if mesh is not None else self.mesh
-        if executor is not None:
-            if legacy_mesh is not None:
-                raise ValueError(
-                    "pass either executor= or mesh=, not both; give the "
-                    "mesh to the executor (e.g. AsyncExecutor(mesh=...))")
-            return executor
-        if legacy_mesh is not None:
-            warnings.warn(
-                "Experiment(mesh=...) / run(mesh=...) is pending "
-                "deprecation; use run(executor=MeshExecutor(mesh)) (or "
-                "AsyncExecutor(mesh=...) for cross-bucket overlap)",
-                PendingDeprecationWarning, stacklevel=4)
-            return MeshExecutor(legacy_mesh)
-        return SerialExecutor()
 
     @staticmethod
     def _n_rows(buckets: Sequence[Bucket]) -> int:

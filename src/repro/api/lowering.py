@@ -32,6 +32,16 @@ consumed in exactly the order the per-simulation path uses, so lowering a
 grid produces bit-identical schedules to running each cell alone — and
 the phases are pure functions of the bucket, so every executor schedule
 (serial, async, meshed) produces bit-identical results.
+
+Fleet size is NOT structural (``spec.bucket_key``): a bucket's rows may
+carry different fleets.  Planning always runs at each row's true K (same
+rng streams and ledgers as a solo run; Algorithm-1 rows fuse across
+fleets via the masked ``core.solver.FleetRows`` path), then schedules /
+index blocks are zero-padded to the bucket's ``k_pad`` and a per-row
+``active`` mask ({0,1} per user row) rides into the device program,
+where padded users contribute zero weight, zero batch and are excluded
+from every parameter average — padded rows are bit-identical to solo
+unpadded runs (test-enforced).
 """
 from __future__ import annotations
 
@@ -73,13 +83,31 @@ class Row:
 
 @dataclass
 class Bucket:
-    """All rows sharing one ``bucket_key`` → one compiled program."""
+    """All rows sharing one ``bucket_key`` → one compiled program.
+
+    Rows may carry fleets of different sizes (fleet is not structural —
+    see ``spec.bucket_key``): the plan/dispatch phases pad every row's
+    user axis to :attr:`k_pad` and thread a per-row active mask, so the
+    compiled shape is one (padded) family for the whole bucket.
+    """
     key: tuple
     rows: List[Row]
 
     @property
     def kind(self) -> str:
         return self.key[0]      # "feel" | "dev"
+
+    @property
+    def k_pad(self) -> int:
+        """The padded user-axis width: max K over the bucket's rows."""
+        return max(r.spec.k for r in self.rows)
+
+    def active_mask(self) -> np.ndarray:
+        """(n, k_pad) f32 {0,1}: row r's first ``spec.k`` users active."""
+        mask = np.zeros((len(self.rows), self.k_pad), np.float32)
+        for i, r in enumerate(self.rows):
+            mask[i, :r.spec.k] = 1.0
+        return mask
 
 
 def group_rows(specs: Sequence[ScenarioSpec]) -> List[Bucket]:
@@ -224,6 +252,10 @@ def _plan_feel(bucket: Bucket, data, periods: int) -> BucketPlan:
             cell_cfg=r.spec.cell, seed=r.seed))
     planned = plan_horizons_batch(schedulers, periods)
 
+    # per-row planning runs at the row's TRUE fleet size (identical rng
+    # streams and ledgers to a solo run); only the finished schedules are
+    # zero-padded to the bucket's K so one program fits every row
+    k_pad = bucket.k_pad
     schedules = []
     for r, key in zip(rows, plan_keys):
         parts = _partition(r.spec, data, r.seed)
@@ -232,14 +264,14 @@ def _plan_feel(bucket: Bucket, data, periods: int) -> BucketPlan:
         horizon = planned[unique[key]]
         if r.spec.base_lr != sched.base_lr:
             horizon = _rescale_lr(horizon, r.spec.base_lr, sched.ref_batch)
-        schedules.append(engine.build_schedule(
+        schedules.append(engine.pad_schedule(engine.build_schedule(
             sched, batcher, r.spec.fleet, periods, r.spec.local_steps,
-            horizon=horizon))
+            horizon=horizon), k_pad))
     return BucketPlan(
         bucket=bucket, input_dim=input_dim,
         times=np.stack([s.times for s in schedules]),
         global_batch=np.stack([s.global_batch for s in schedules]),
-        payload={"schedules": schedules})
+        payload={"schedules": schedules, "active": bucket.active_mask()})
 
 
 def _plan_dev(bucket: Bucket, data, periods: int) -> BucketPlan:
@@ -248,6 +280,7 @@ def _plan_dev(bucket: Bucket, data, periods: int) -> BucketPlan:
     input_dim = data.x.shape[1]
     n_params = _n_params(spec0, input_dim)
     batch = spec0.dev_epoch_batch
+    k_pad = bucket.k_pad
 
     horizons = []
     for r in rows:
@@ -260,14 +293,20 @@ def _plan_dev(bucket: Bucket, data, periods: int) -> BucketPlan:
             seed=r.seed, cell=Cell.make(r.seed, r.spec.cell))
         horizons.append(sched.plan_horizon(periods))
     n = len(rows)
+    # rows plan at their true K; pad idx user rows with index 0 (the
+    # active mask keeps those devices out of every parameter average)
+    idx = np.zeros((n, periods, k_pad, batch), np.int64)
+    for i, (r, h) in enumerate(zip(rows, horizons)):
+        idx[i, :, :r.spec.k] = h.idx
     return BucketPlan(
         bucket=bucket, input_dim=input_dim,
         times=np.stack([h.times for h in horizons]),
-        global_batch=np.broadcast_to(
-            batch * spec0.k, (n, periods)).astype(np.int64).copy(),
-        payload={"idx": np.stack([h.idx for h in horizons]),
+        global_batch=np.stack([
+            np.full(periods, batch * r.spec.k, np.int64) for r in rows]),
+        payload={"idx": idx,
                  "lr": np.array([r.spec.base_lr for r in rows],
-                                np.float32)})
+                                np.float32),
+                 "active": bucket.active_mask()})
 
 
 def plan_bucket(bucket: Bucket, data, periods: int) -> BucketPlan:
@@ -285,21 +324,24 @@ def _dispatch_feel(plan: BucketPlan, data, test, mesh) -> BucketHandle:
     rows = plan.bucket.rows
     spec0 = rows[0].spec
     schedules = plan.payload["schedules"]
+    active = plan.payload["active"]
+    k_pad = plan.bucket.k_pad
 
     params0 = _init_params_batch(rows, plan.input_dim)
     residual0 = tree_map(
-        lambda p: jnp.zeros((p.shape[0], spec0.k) + p.shape[1:], p.dtype),
+        lambda p: jnp.zeros((p.shape[0], k_pad) + p.shape[1:], p.dtype),
         params0)
 
     n = len(rows)
     pad = 0 if mesh is None else pad_batch(n, mesh)
     if pad:
-        params0, residual0 = _pad_rows((params0, residual0), n, pad)
+        params0, residual0, active = _pad_rows(
+            (params0, residual0, active), n, pad)
         schedules = [schedules[i % n] for i in range(n + pad)]
     _, _, (losses, accs, _) = engine.run_trajectory_batch(
         params0, residual0, schedules, data, test,
         local_steps=spec0.local_steps, compress=spec0.compress,
-        ratio=spec0.compression, mesh=mesh)
+        ratio=spec0.compression, mesh=mesh, active=active)
     return BucketHandle(bucket=plan.bucket, losses=losses, accs=accs,
                         times=plan.times, global_batch=plan.global_batch)
 
@@ -307,20 +349,23 @@ def _dispatch_feel(plan: BucketPlan, data, test, mesh) -> BucketHandle:
 def _dispatch_dev(plan: BucketPlan, data, test, mesh) -> BucketHandle:
     rows = plan.bucket.rows
     spec0 = rows[0].spec
+    k_pad = plan.bucket.k_pad
 
     p0 = _init_params_batch(rows, plan.input_dim)
     dev_params0 = tree_map(
         lambda a: jnp.broadcast_to(
-            a[:, None], (a.shape[0], spec0.k) + a.shape[1:]), p0)
+            a[:, None], (a.shape[0], k_pad) + a.shape[1:]), p0)
     idx, lr = plan.payload["idx"], plan.payload["lr"]
+    active = plan.payload["active"]
 
     n = len(rows)
     pad = 0 if mesh is None else pad_batch(n, mesh)
     if pad:
-        dev_params0, idx, lr = _pad_rows((dev_params0, idx, lr), n, pad)
+        dev_params0, idx, lr, active = _pad_rows(
+            (dev_params0, idx, lr, active), n, pad)
     _, (losses, accs) = engine.run_dev_trajectory_batch(
         dev_params0, idx, lr, data, test,
-        average=(spec0.scheme == "model_fl"), mesh=mesh)
+        average=(spec0.scheme == "model_fl"), mesh=mesh, active=active)
     return BucketHandle(bucket=plan.bucket, losses=losses, accs=accs,
                         times=plan.times, global_batch=plan.global_batch)
 

@@ -19,9 +19,12 @@ groups by it (never merging distinct scenarios, whatever their labels).
 
 Experiments built from a :func:`repro.api.study.grid` additionally carry
 one coordinate per swept axis (dotted geometry axes sanitized:
-``cell.radius_m`` → ``cell_radius_m``), so
-``res.sel(cell_radius_m=200.0)`` selects a wireless operating point
-without any string parsing.
+``cell.radius_m`` → ``cell_radius_m``; the fleet-size axis ``users``
+surfaces as ``num_users``), so ``res.sel(cell_radius_m=200.0)`` or
+``res.sel(num_users=8)`` selects an operating point without any string
+parsing, and :meth:`Results.unique` walks an axis in declaration order
+(``for k in res.unique("num_users"): res.sel(num_users=k)...`` is the
+paper's accuracy-vs-K figure loop).
 
 :class:`ResultsBuilder` assembles a ``Results`` incrementally from
 per-bucket chunks as executors collect them — there is no preallocated
@@ -116,6 +119,18 @@ class Results:
             losses=self.losses[mask], accs=self.accs[mask],
             times=self.times[mask], global_batch=self.global_batch[mask],
             n_buckets=self.n_buckets)
+
+    def unique(self, name: str) -> Tuple:
+        """Unique values of one coordinate, first-seen (row) order —
+        e.g. ``res.unique("num_users")`` walks a swept K axis."""
+        if name not in self.coords:
+            raise KeyError(f"unknown coordinate {name!r}; "
+                           f"have {tuple(self.coords)}")
+        out: List[object] = []
+        for v in self.coords[name]:
+            if v not in out:
+                out.append(v)
+        return tuple(out)
 
     def cells(self) -> Iterator[Tuple[Dict[str, object], "Results"]]:
         """Iterate unique (fleet, partition, policy, scheme) cells in row

@@ -18,11 +18,22 @@ trajectory matches:
 * scheme family — ``feel``/``gradient_fl`` run the masked-slot FEEL scan;
   ``individual``/``model_fl`` run the per-device-parameter scan (and the
   FedAvg averaging flag is compiled in, so those two never merge);
-* fleet size K and slot width (``b_max``, or the dev schemes' fixed epoch
-  batch) — array shapes;
+* slot width (``b_max``, or the dev schemes' fixed epoch batch) — array
+  shapes;
 * ``local_steps``, ``compress`` and ``compression`` — scan-body structure
   (static python branching / top-k fraction inside the jitted step);
 * model architecture (``hidden``, ``depth``) — parameter pytree shapes.
+
+The fleet is deliberately NOT part of the key: fleet size and composition
+are *sweepable* axes, not structural ones.  The lowering pads every
+member's user axis to the bucket's max K and threads an ``active_mask``
+({0,1} per user row) end to end — through the channel Monte-Carlo draws,
+the masked Algorithm-1 rows solver, the schedules and the engine's
+reductions — so a K-heterogeneous grid (``grid(base, users=[...])``)
+still costs one compiled program, and every padded row stays bit-identical
+to its solo unpadded run.  Device *profiles* never reach the device
+program at all (they only shape host planning), so profile-heterogeneous
+fleets are shape-compatible by construction.
 
 Everything else — partition, policy, cell geometry, base_lr, seeds — only
 changes *values* fed to the program (schedules, initial params), so specs
@@ -110,16 +121,18 @@ class ScenarioSpec:
     def bucket_key(self) -> tuple:
         """Shape-compatibility class (see module docstring).
 
-        ``compression`` is structural only while ``compress`` is on (it
-        sets the static top-k fraction inside the jitted step); with
-        compression off it affects nothing but the *planned* payload
-        bits, so compress-off specs merge regardless of ratio — a
-        ``grid(base, compression=[...], compress=[True, False])``
-        ablation costs one program for the whole off column."""
+        The fleet is absent on purpose: K is padded to the bucket max at
+        lowering time (active-mask contract), so fleet size/composition
+        sweep *within* a bucket.  ``compression`` is structural only while
+        ``compress`` is on (it sets the static top-k fraction inside the
+        jitted step); with compression off it affects nothing but the
+        *planned* payload bits, so compress-off specs merge regardless of
+        ratio — a ``grid(base, compression=[...], compress=[True,
+        False])`` ablation costs one program for the whole off column."""
         if self.is_dev_scheme:
-            return ("dev", self.scheme, self.k, self.dev_epoch_batch,
+            return ("dev", self.scheme, self.dev_epoch_batch,
                     self.hidden, self.depth)
-        return ("feel", self.k, self.b_max, self.local_steps,
+        return ("feel", self.b_max, self.local_steps,
                 self.compress, self.compression if self.compress else None,
                 self.hidden, self.depth)
 

@@ -24,7 +24,16 @@ Axis kinds
 * **labeled axis** — the value is a mapping ``{label: {field: value,
   ...}}`` bundling several (possibly dotted) field updates under one
   coordinate label, for paired knobs that are one conceptual axis:
-  ``model={"resnet_stand_in": dict(hidden=256, depth=3), ...}``.
+  ``model={"resnet_stand_in": dict(hidden=256, depth=3), ...}``;
+* **users axis** — fleet size/composition as a first-class sweep (the
+  paper's "impact of number of users" knob).  ``users=[4, 8, 16]``
+  resizes the base fleet to each K — truncating, or extending by cycling
+  the base profiles round-robin — while ``users={label: fleet}`` sweeps
+  explicit (heterogeneous) fleets.  The Results coordinate is
+  ``num_users`` (the swept K, or the label for explicit fleets):
+  ``res.sel(num_users=8)``.  Fleet size is *not* structural
+  (``spec.bucket_key``): the whole K-sweep lowers into the same padded
+  bucket as the base spec, one compiled program.
 
 Expansion is the full cartesian product in axis-declaration order.
 Expanded specs get auto-derived labels: ``name`` gains a ``key=value``
@@ -59,6 +68,38 @@ _PASSTHROUGH_COORDS = {
     "scheme": lambda s: s.scheme,
     "policy": lambda s: s.effective_policy,
 }
+# axes whose Results coordinate carries a different name than the axis
+# (the ``users`` axis writes the ``fleet`` field; its swept value — K or
+# an explicit-fleet label — surfaces as ``num_users``)
+_COORD_RENAMES = {"users": "num_users"}
+
+
+def _coord_name(axis: str) -> str:
+    return _COORD_RENAMES.get(axis, axis.replace(".", "_"))
+
+
+def _resize_fleet(fleet: Tuple, k: int) -> Tuple:
+    """The ``users=[K, ...]`` resize rule: truncate to the first K
+    profiles, or extend by cycling the base profiles round-robin."""
+    if not isinstance(k, int) or isinstance(k, bool) or k < 1:
+        raise ValueError(
+            f"users axis: fleet size must be a positive int, got {k!r} "
+            f"(use users={{label: fleet}} for explicit fleets)")
+    return tuple(fleet[i % len(fleet)] for i in range(k))
+
+
+def _users_choices(base: ScenarioSpec, values):
+    """Normalize a ``users`` axis into (coord, {'fleet': fleet}) choices."""
+    if isinstance(values, Mapping):
+        choices = []
+        for label, fl in values.items():
+            fl = tuple(fl)
+            if not fl:
+                raise ValueError(
+                    f"users axis: fleet for {label!r} is empty")
+            choices.append((label, {"fleet": fl}))
+        return choices
+    return [(k, {"fleet": _resize_fleet(base.fleet, k)}) for k in values]
 
 
 def _field_names(obj) -> Tuple[str, ...]:
@@ -145,7 +186,7 @@ class Study(Sequence):
     @property
     def coord_names(self) -> Tuple[str, ...]:
         """Sanitized Results coordinate names, axis-declaration order."""
-        return tuple(name.replace(".", "_") for name in self.axes)
+        return tuple(_coord_name(name) for name in self.axes)
 
     def axis_coords(self, spec: ScenarioSpec) -> Mapping[str, object]:
         """The swept-axis values that produced ``spec`` (sanitized keys)."""
@@ -162,7 +203,7 @@ def grid(base: ScenarioSpec, **axes) -> Study:
     normalized: Dict[str, List[Tuple[object, Dict[str, object]]]] = {}
     touched: Dict[str, Set[str]] = {}    # axis -> field paths it writes
     for name, values in axes.items():
-        coord = name.replace(".", "_")
+        coord = _coord_name(name)
         if coord in COORD_NAMES and not (
                 coord == name and name in _PASSTHROUGH_COORDS
                 and not isinstance(values, Mapping)):
@@ -171,7 +212,10 @@ def grid(base: ScenarioSpec, **axes) -> Study:
                 f"coordinate that would not carry the swept values — "
                 f"rename the axis (e.g. a labeled axis "
                 f"'{name}s={{label: {{field: value}}}}')")
-        if isinstance(values, Mapping):
+        if name == "users":
+            choices = _users_choices(base, values)
+            touched[name] = {"fleet"}
+        elif isinstance(values, Mapping):
             for label, updates in values.items():
                 if not isinstance(updates, Mapping):
                     raise ValueError(
@@ -224,7 +268,7 @@ def grid(base: ScenarioSpec, **axes) -> Study:
         if spec in coords:
             continue                       # duplicate combination: keep first
         specs.append(spec)
-        coords[spec] = {name.replace(".", "_"): coord
+        coords[spec] = {_coord_name(name): coord
                         for name, (coord, _) in zip(normalized, combo)}
     return Study(base=base, axes={n: tuple(c for c, _ in ch)
                                   for n, ch in normalized.items()},

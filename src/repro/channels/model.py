@@ -54,7 +54,8 @@ class Cell:
                                         axis=0)
         return rate                                          # bits/s
 
-    def avg_rate_updown_rows(self, dist_km: np.ndarray, periods: int):
+    def avg_rate_updown_rows(self, dist_km: np.ndarray, periods: int,
+                             pad_to: int | None = None):
         """``periods`` consecutive (uplink, downlink) rate draws in ONE rng
         consumption.
 
@@ -62,7 +63,16 @@ class Cell:
         down = avg_rate(d)`` because ``Generator`` fills arrays variate by
         variate in C order, so one ``(P, 2, S, K)`` draw consumes the stream
         exactly like 2·P sequential ``(S, K)`` draws (test-covered).
-        Returns (rates_up (P, K), rates_down (P, K))."""
+
+        ``pad_to`` appends padded-user columns for the ragged-fleet
+        lowering: the K *active* users draw exactly as above (the rng
+        stream is untouched by padding — that is what keeps padded rows
+        bit-identical to solo runs), while each padded column carries the
+        deterministic unit-SNR rate W (finite and positive so masked
+        intermediate math stays well-behaved; the solver's active mask
+        zeroes its batchsize and bandwidth share, so the value never
+        reaches a result).  Returns (rates_up (P, K'), rates_down (P, K'))
+        with K' = ``pad_to`` or K."""
         c = self.cfg
         pl = path_loss_db(dist_km)
         p_rx_dbm = c.tx_power_dbm - pl
@@ -72,7 +82,12 @@ class Cell:
             size=(periods, 2, c.fading_samples, len(dist_km)))
         rate = c.bandwidth_hz * np.mean(
             np.log2(1 + snr_lin[None, None, None, :] * h2), axis=2)
-        return rate[:, 0], rate[:, 1]                        # bits/s
+        up, down = rate[:, 0], rate[:, 1]                    # bits/s
+        if pad_to is not None and pad_to > len(dist_km):
+            fill = np.full((periods, pad_to - len(dist_km)), c.bandwidth_hz)
+            up = np.concatenate([up, fill], axis=1)
+            down = np.concatenate([down, fill], axis=1)
+        return up, down
 
     def sample_rates(self, k: int):
         """Drop K users, return (dist_km, uplink rates, downlink rates)."""

@@ -8,7 +8,7 @@ from repro.core.efficiency import (loss_decay, learning_efficiency, lr_scale,
 from repro.core.solver import (solve_uplink, solve_downlink, solve_period,
                                batch_closed_form, tau_closed_form,
                                e_up_bounds, mu_bounds, fixed_slot_rows,
-                               UplinkSolution, DownlinkSolution,
+                               FleetRows, UplinkSolution, DownlinkSolution,
                                PeriodSolution)
 from repro.core.baselines import POLICIES, PolicyResult
 from repro.core.scheduler import (DevHorizon, DevScheduler, FeelScheduler,
@@ -20,7 +20,7 @@ __all__ = [
     "downlink_latency", "loss_decay", "learning_efficiency", "lr_scale",
     "XiEstimator", "solve_uplink", "solve_downlink", "solve_period",
     "batch_closed_form", "tau_closed_form", "e_up_bounds", "mu_bounds",
-    "fixed_slot_rows", "UplinkSolution", "DownlinkSolution",
+    "fixed_slot_rows", "FleetRows", "UplinkSolution", "DownlinkSolution",
     "PeriodSolution", "POLICIES", "PolicyResult", "DevHorizon",
     "DevScheduler", "FeelScheduler", "PeriodPlan", "PlanHorizon",
     "plan_horizons_batch",

@@ -234,25 +234,31 @@ class FeelScheduler:
 
 def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
                         periods: int) -> List[PlanHorizon]:
-    """Plan many schedulers' horizons with shared-fleet proposed rows fused.
+    """Plan many schedulers' horizons with proposed-policy rows fused —
+    across fleets of ANY size or composition.
 
     Bit-identical to ``[s.plan_horizon(periods) for s in schedulers]``:
     each scheduler's own rng streams are consumed in exactly the per-call
     order, but Algorithm-1 / Theorem-2 bisections for every proposed-policy
-    scheduler that shares (fleet, payload, frames, b_max) run as ONE
-    lockstep rows solve over the flattened (scenario × period) axis — the
-    rows are independent given their rates, so fusing them changes nothing
-    but wall-clock.  Scheduler state (ξ cache, ``_b_cache``, ``_period``)
-    is advanced exactly as the per-call path would.
+    scheduler that shares (payload, frames, b_max) run as ONE lockstep
+    masked rows solve over the flattened (scenario × period) axis.  Fleets
+    are padded to the group's max K as :class:`~repro.core.solver.FleetRows`
+    (padded user columns: deterministic rate fill, active mask 0 — zero
+    batchsize and bandwidth share, outside every reduction), so a K-sweep
+    plans as one solve instead of one per fleet; the rows are independent
+    given their rates and mask, so fusing changes nothing but wall-clock
+    (test-enforced bitwise).  Scheduler state (ξ cache, ``_b_cache``,
+    ``_period``) is advanced exactly as the per-call path would.
     """
-    from repro.core.solver import optimize_batch_rows, solve_period_rows
+    from repro.core.solver import (FleetRows, optimize_batch_rows,
+                                   solve_period_rows)
     out: List[Optional[PlanHorizon]] = [None] * len(schedulers)
     groups = defaultdict(list)
     for i, s in enumerate(schedulers):
         if s.policy != "proposed":
             out[i] = s.plan_horizon(periods)
         else:
-            key = (tuple(s.devices), s.payload_bits, s.cell.cfg.frame_up_s,
+            key = (s.payload_bits, s.cell.cfg.frame_up_s,
                    s.cell.cfg.frame_down_s, s.b_max, s.reopt_every)
             groups[key].append(i)
     for key, idxs in groups.items():
@@ -263,25 +269,31 @@ def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
         scheds = [schedulers[i] for i in idxs]
         s0 = scheds[0]
         c = s0.cell.cfg
-        M, P, K = len(scheds), periods, len(s0.devices)
+        M, P = len(scheds), periods
+        ks = [len(s.devices) for s in scheds]
+        K = max(ks)
+        fleet_rows = FleetRows.from_fleets(
+            [tuple(s.devices) for s in scheds], k_pad=K)
         rates_up = np.empty((M, P, K))
         rates_down = np.empty((M, P, K))
         for m, s in enumerate(scheds):           # per-scheduler rng streams
             rates_up[m], rates_down[m] = s.cell.avg_rate_updown_rows(
-                s._dist_km, P)
+                s._dist_km, P, pad_to=K)
         xi = np.array([s.xi_est.xi for s in scheds])
         reopt = np.array([[(s._period + p) % s.reopt_every == 0
                            or (p == 0 and s._b_cache is None)
                            for p in range(P)] for s in scheds])
         flat_up = rates_up.reshape(M * P, K)
         flat_down = rates_down.reshape(M * P, K)
+        flat_fleets = fleet_rows.repeat(P)       # row m*P+p = scheduler m
         xi_rows = np.repeat(xi, P)
         B = np.empty((M, P))
         if reopt.any():
             rf = reopt.reshape(M * P)
             b_star = optimize_batch_rows(
-                s0.devices, flat_up[rf], flat_down[rf], s0.payload_bits,
-                c.frame_up_s, c.frame_down_s, xi_rows[rf], s0.b_max)
+                flat_fleets.take(rf), flat_up[rf], flat_down[rf],
+                s0.payload_bits, c.frame_up_s, c.frame_down_s, xi_rows[rf],
+                s0.b_max)
             j = 0
             for m, s in enumerate(scheds):
                 carry = s._b_cache
@@ -293,19 +305,22 @@ def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
         else:
             for m, s in enumerate(scheds):
                 B[m, :] = s._b_cache
-        sol = solve_period_rows(s0.devices, flat_up, flat_down,
+        sol = solve_period_rows(flat_fleets, flat_up, flat_down,
                                 s0.payload_bits, c.frame_up_s, c.frame_down_s,
                                 xi_rows, B.reshape(M * P), s0.b_max)
-        batch = np.maximum(np.round(sol["batch"]).astype(int), 1)
-        batch = batch.reshape(M, P, K)
+        # round active batches up to >= 1; padded columns stay exactly 0
+        batch = np.where(fleet_rows.active[:, None, :],
+                         np.maximum(np.round(sol["batch"]).astype(int)
+                                    .reshape(M, P, K), 1), 0)
         gb = batch.sum(2)
         for m, (i, s) in enumerate(zip(idxs, scheds)):
             s._b_cache = float(B[m, -1])
             s._period += P
+            k_m = ks[m]                          # slice back to the true K
             out[i] = PlanHorizon(
-                batch=batch[m],
-                tau_up=sol["tau_up"].reshape(M, P, K)[m],
-                tau_down=sol["tau_down"].reshape(M, P, K)[m],
+                batch=batch[m, :, :k_m],
+                tau_up=sol["tau_up"].reshape(M, P, K)[m, :, :k_m],
+                tau_down=sol["tau_down"].reshape(M, P, K)[m, :, :k_m],
                 lr=np.array([lr_scale(s.base_lr, g, s.ref_batch)
                              for g in gb[m]], np.float64),
                 latency=sol["latency"].reshape(M, P)[m],

@@ -117,15 +117,38 @@ def zero_residual(params, k: int):
     return tree_map(lambda p: jnp.zeros((k,) + p.shape, p.dtype), params)
 
 
+def pad_schedule(schedule: Schedule, k: int) -> Schedule:
+    """Zero-pad a schedule's user axis to ``k`` rows (the ragged-fleet
+    bucket contract): padded users get index 0, weight 0 and batch 0, so
+    they gather real samples but contribute exactly nothing to any
+    weighted loss, gradient, or eq. (1) aggregation.  Host ledgers
+    (times/lr/global_batch) are per-period and untouched."""
+    kk = schedule.idx.shape[1]
+    if kk == k:
+        return schedule
+    pad3 = ((0, 0), (0, k - kk), (0, 0))
+    return Schedule(idx=np.pad(schedule.idx, pad3),
+                    weight=np.pad(schedule.weight, pad3),
+                    batch=np.pad(schedule.batch, ((0, 0), (0, k - kk))),
+                    lr=schedule.lr, times=schedule.times,
+                    global_batch=schedule.global_batch)
+
+
 # ---------------------------------------------------------------------------
 # the scanned period step (Steps 1-5 of the paper's §II-A loop, pure jnp)
 # ---------------------------------------------------------------------------
 
 
-def _period_step(data_x, data_y, test_x, test_y, local_steps, compress,
-                 ratio, carry, xs):
+def _period_step(data_x, data_y, test_x, test_y, active, local_steps,
+                 compress, ratio, carry, xs):
     params, residual = carry
     idx, w, bk, lr = xs["idx"], xs["weight"], xs["batch"], xs["lr"]
+    # active: (K,) f32 {0,1} — mask hygiene for padded user rows.  Their
+    # schedule already carries zero weights/batch; multiplying keeps that
+    # invariant even for hand-built schedules (x * 1.0 == x bitwise, so
+    # fully-active rows are unchanged).
+    w = w * active[:, None]
+    bk = bk * active
     x = data_x[idx]                              # (K, slot, D)
     y = data_y[idx]
     xf = x.reshape(-1, x.shape[-1])
@@ -148,8 +171,14 @@ def _period_step(data_x, data_y, test_x, test_y, local_steps, compress,
                          params, dev_params)
 
     if compress:
-        grads, residual = compress_dense(grads, ratio, residual)
-    # eq. (1): weighted average by B_k
+        # per-device SBC: every device sparsifies its OWN upload (the
+        # paper's per-device uplink compression), which also makes the
+        # top-k fraction a function of the device payload alone — a padded
+        # (all-zero-gradient) user row compresses to exact zeros and the
+        # active rows compress identically at any fleet padding.
+        grads, residual = jax.vmap(
+            lambda g, r: compress_dense(g, ratio, r))(grads, residual)
+    # eq. (1): weighted average by B_k (padded rows carry B_k = 0)
     wk = bk / jnp.sum(bk)
     agg = tree_map(lambda g: jnp.tensordot(wk, g, axes=1), grads)
     params = tree_map(lambda p, g: p - lr * g, params, agg)
@@ -162,29 +191,35 @@ def _period_step(data_x, data_y, test_x, test_y, local_steps, compress,
 @lru_cache(maxsize=None)
 def _trajectory_fn(local_steps: int, compress: bool, ratio: float,
                    batched: bool):
-    def run(params0, residual0, xs, data_x, data_y, test_x, test_y):
+    def run(params0, residual0, active, xs, data_x, data_y, test_x, test_y):
         _TRACES["n"] += 1                        # host side effect: traces
         step = partial(_period_step, data_x, data_y, test_x, test_y,
-                       local_steps, compress, ratio)
+                       active, local_steps, compress, ratio)
         (params, residual), series = jax.lax.scan(
             step, (params0, residual0), xs)
         return params, residual, series
 
     if batched:
-        run = jax.vmap(run, in_axes=(0, 0, 0, None, None, None, None))
+        run = jax.vmap(run, in_axes=(0, 0, 0, 0, None, None, None, None))
     return jax.jit(run)
 
 
 def run_trajectory(params0, residual0, schedule: Schedule, data, test, *,
                    local_steps: int = 1, compress: bool = True,
-                   ratio: float = 0.005):
+                   ratio: float = 0.005, active=None):
     """One trajectory as a single jitted ``lax.scan``.
 
-    Returns (final params, final residuals, (losses, accs, decays)) where
-    the series are per-period device arrays of length ``schedule.periods``.
+    ``active``: optional (K,) f32 {0,1} user mask (default all-active) —
+    zero rows are padded users that contribute nothing (ragged-fleet
+    bucketing).  Returns (final params, final residuals,
+    (losses, accs, decays)) where the series are per-period device arrays
+    of length ``schedule.periods``.
     """
+    if active is None:
+        active = jnp.ones(schedule.idx.shape[1], jnp.float32)
     fn = _trajectory_fn(local_steps, compress, float(ratio), False)
-    return fn(params0, residual0, schedule.stacked_xs(),
+    return fn(params0, residual0, jnp.asarray(active, jnp.float32),
+              schedule.stacked_xs(),
               jnp.asarray(data.x), jnp.asarray(data.y),
               jnp.asarray(test.x), jnp.asarray(test.y))
 
@@ -199,26 +234,35 @@ def stack_schedules(schedules: Sequence[Schedule]):
 def run_trajectory_batch(params0, residual0, schedules: Sequence[Schedule],
                          data, test, *, local_steps: int = 1,
                          compress: bool = True, ratio: float = 0.005,
-                         mesh=None):
+                         mesh=None, active=None):
     """Batched sweep: one compiled program advances every (scenario, seed).
 
     ``params0``/``residual0`` carry a leading batch axis (stack pytrees with
     ``jax.tree_util.tree_map(lambda *a: jnp.stack(a), *per_entry)``);
     ``schedules`` is one pre-generated :class:`Schedule` per batch entry —
     the axis may flatten an arbitrary (scenario × seed) grid, not just
-    seeds.  With ``mesh`` (a 1-D "batch" mesh from
-    ``launch.mesh.make_batch_mesh``) the batch axis is sharded across its
-    devices (batch size must divide evenly; pad upstream) and the datasets
-    are replicated; ``mesh=None`` keeps the single-device layout.
+    seeds.  Entries need not share a fleet size: pad each schedule to the
+    common K (:func:`pad_schedule`) and pass ``active`` — an (N, K) f32
+    {0,1} per-row user mask (default all-active) whose zero columns are
+    padded users contributing nothing to any reduction.  With ``mesh``
+    (a 1-D "batch" mesh from ``launch.mesh.make_batch_mesh``) the batch
+    axis is sharded across its devices (batch size must divide evenly;
+    pad upstream) and the datasets are replicated; ``mesh=None`` keeps the
+    single-device layout.
     """
     xs = stack_schedules(schedules)
+    if active is None:
+        active = jnp.ones((len(schedules), schedules[0].idx.shape[1]),
+                          jnp.float32)
+    else:
+        active = jnp.asarray(active, jnp.float32)
     data_args = (jnp.asarray(data.x), jnp.asarray(data.y),
                  jnp.asarray(test.x), jnp.asarray(test.y))
     if mesh is not None:
-        (params0, residual0, xs), data_args = _shard_batch_args(
-            mesh, (params0, residual0, xs), data_args)
+        (params0, residual0, active, xs), data_args = _shard_batch_args(
+            mesh, (params0, residual0, active, xs), data_args)
     fn = _trajectory_fn(local_steps, compress, float(ratio), True)
-    return fn(params0, residual0, xs, *data_args)
+    return fn(params0, residual0, active, xs, *data_args)
 
 
 # ---------------------------------------------------------------------------
@@ -226,16 +270,26 @@ def run_trajectory_batch(params0, residual0, schedules: Sequence[Schedule],
 # ---------------------------------------------------------------------------
 
 
-def _dev_step(data_x, data_y, test_x, test_y, lr, average, dev_params, idx):
+def _dev_step(data_x, data_y, test_x, test_y, lr, average, active,
+              dev_params, idx):
     x = data_x[idx]
     y = data_y[idx]
     g = jax.vmap(jax.grad(feel_model.loss_fn))(dev_params, x, y)
     dev_params = tree_map(lambda p, gg: p - lr * gg, dev_params, g)
+    # masked device mean: padded user rows (active 0) train on dummy data
+    # and must never enter a parameter average — denominator is the active
+    # count (for an all-active mask this is sum(a)/K == mean bitwise)
+    n_active = jnp.sum(active)
+
+    def masked_mean(a):
+        m = active.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.sum(a * m, axis=0) / n_active
+
     if average:
         # FedAvg: replace every device copy with the parameter mean
         dev_params = tree_map(
-            lambda a: jnp.broadcast_to(a.mean(0), a.shape), dev_params)
-    avg = tree_map(lambda a: a.mean(0), dev_params)
+            lambda a: jnp.broadcast_to(masked_mean(a), a.shape), dev_params)
+    avg = tree_map(masked_mean, dev_params)
     loss = feel_model.loss_fn(avg, test_x, test_y)
     acc = feel_model.accuracy(avg, test_x, test_y)
     return dev_params, (loss, acc)
@@ -243,40 +297,50 @@ def _dev_step(data_x, data_y, test_x, test_y, lr, average, dev_params, idx):
 
 @lru_cache(maxsize=None)
 def _dev_trajectory_fn(average: bool, batched: bool = False):
-    def run(dev_params0, idx, lr, data_x, data_y, test_x, test_y):
+    def run(dev_params0, idx, lr, active, data_x, data_y, test_x, test_y):
         _TRACES["n"] += 1
         step = partial(_dev_step, data_x, data_y, test_x, test_y, lr,
-                       average)
+                       average, active)
         return jax.lax.scan(step, dev_params0, idx)
 
     if batched:
-        run = jax.vmap(run, in_axes=(0, 0, 0, None, None, None, None))
+        run = jax.vmap(run, in_axes=(0, 0, 0, 0, None, None, None, None))
     return jax.jit(run)
 
 
 def run_dev_trajectory(dev_params0, idx: np.ndarray, lr: float, data, test,
-                       *, average: bool):
+                       *, average: bool, active=None):
     """scan-compiled individual / model_fl (``average=True``) trajectory.
 
-    ``idx``: (P, K, batch) pre-sampled indices.  Returns
+    ``idx``: (P, K, batch) pre-sampled indices; ``active``: optional (K,)
+    f32 {0,1} user mask (default all-active).  Returns
     (final per-device params, (test losses, test accs)) per period.
     """
+    if active is None:
+        active = jnp.ones(idx.shape[1], jnp.float32)
     fn = _dev_trajectory_fn(bool(average))
     return fn(dev_params0, jnp.asarray(idx, jnp.int32),
-              jnp.float32(lr), jnp.asarray(data.x), jnp.asarray(data.y),
+              jnp.float32(lr), jnp.asarray(active, jnp.float32),
+              jnp.asarray(data.x), jnp.asarray(data.y),
               jnp.asarray(test.x), jnp.asarray(test.y))
 
 
 def run_dev_trajectory_batch(dev_params0, idx: np.ndarray, lr: np.ndarray,
-                             data, test, *, average: bool, mesh=None):
+                             data, test, *, average: bool, mesh=None,
+                             active=None):
     """Batched individual / model_fl: one program for a whole bucket.
 
     ``dev_params0`` leaves are (N, K, ...), ``idx`` is (N, P, K, batch),
-    ``lr`` is (N,) — N the flattened (scenario × seed) axis.  ``mesh``
-    shards N across devices as in :func:`run_trajectory_batch`.
+    ``lr`` is (N,) — N the flattened (scenario × seed) axis; ``active`` is
+    an optional (N, K) f32 {0,1} per-row user mask (zero columns = padded
+    users, excluded from every parameter average).  ``mesh`` shards N
+    across devices as in :func:`run_trajectory_batch`.
     """
-    batched = (dev_params0, jnp.asarray(idx, jnp.int32),
-               jnp.asarray(lr, jnp.float32))
+    idx = jnp.asarray(idx, jnp.int32)
+    if active is None:
+        active = jnp.ones((idx.shape[0], idx.shape[2]), jnp.float32)
+    batched = (dev_params0, idx, jnp.asarray(lr, jnp.float32),
+               jnp.asarray(active, jnp.float32))
     data_args = (jnp.asarray(data.x), jnp.asarray(data.y),
                  jnp.asarray(test.x), jnp.asarray(test.y))
     if mesh is not None:

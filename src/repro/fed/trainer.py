@@ -190,8 +190,15 @@ class FeelSimulation:
                 lambda p0, pk: (p0[None] - pk) / lr,
                 self.params, dev_params)
         if self.compress:
-            grads, self.residuals = compress_dense(
-                grads, self.scheduler.compression, self.residuals)
+            # per-device SBC (each device sparsifies its own upload) —
+            # must mirror engine._period_step exactly for the scan-vs-
+            # python equivalence contract
+            if self.residuals is None:
+                self.residuals = jax.tree_util.tree_map(jnp.zeros_like,
+                                                        grads)
+            grads, self.residuals = jax.vmap(
+                lambda g, r: compress_dense(
+                    g, self.scheduler.compression, r))(grads, self.residuals)
         # eq. (1): weighted average by B_k
         bkj = jnp.asarray(bk, jnp.float32)
         wk = bkj / jnp.sum(bkj)

@@ -53,27 +53,34 @@ def _spec(fleet, **kw):
 
 
 def test_bucketing_rule(dataset, fleet):
-    """Partition/policy/seed/base_lr vary values only → one bucket; shape-
-    or structure-changing knobs (b_max, K, scheme, local_steps) split."""
+    """Partition/policy/seed/base_lr — and, since the ragged-fleet
+    redesign, fleet size/composition — vary values only → one bucket;
+    shape- or structure-changing knobs (b_max, scheme, local_steps)
+    split."""
     data, test = dataset
     same = [_spec(fleet, partition=p, policy=pol, base_lr=lr, seeds=(0, 1))
             for p, pol, lr in [("iid", "proposed", 0.15),
                                ("noniid", "full", 0.1),
                                ("noniid", "random", 0.2)]]
+    same.append(_spec(fleet[:2], name="cpu2"))    # smaller fleet: same bucket
     exp = Experiment(data, test, same)
     buckets = exp.lower()
     assert len(buckets) == 1
-    assert len(buckets[0].rows) == 6              # 3 specs × 2 seeds
+    assert len(buckets[0].rows) == 7              # 3 specs × 2 seeds + K2
+    assert buckets[0].k_pad == len(fleet)
+    mask = buckets[0].active_mask()
+    assert mask.shape == (7, 3)
+    np.testing.assert_array_equal(mask[-1], [1.0, 1.0, 0.0])
 
     split = same + [
         _spec(fleet, b_max=BMAX * 2),             # slot width
-        _spec(fleet[:2]),                         # fleet size K
         _spec(fleet, local_steps=2),              # scan-body structure
         _spec(fleet, scheme="individual"),        # dev-family program
         _spec(fleet, scheme="model_fl"),          # averaging compiled in
+        _spec(fleet[:2], name="cpu2i", scheme="individual"),  # dev: merges
     ]
     keys = [b.key for b in Experiment(data, test, split).lower()]
-    assert len(keys) == len(set(keys)) == 6       # base bucket + 5 splits
+    assert len(keys) == len(set(keys)) == 5       # base bucket + 4 splits
 
 
 def test_spec_validation(fleet):
@@ -323,13 +330,16 @@ def test_duplicate_specs_dedupe_and_fan_out(dataset, fleet):
     assert res.coords["spec"][0] == res.coords["spec"][3] == spec
 
 
-def test_executor_and_mesh_are_exclusive(dataset, fleet):
+def test_legacy_mesh_kwarg_is_gone(dataset, fleet):
+    """The PR-3 ``Experiment(mesh=...)`` / ``run(mesh=...)`` shim has been
+    removed: meshes belong to executors now."""
     data, test = dataset
     specs = [_spec(fleet, seeds=(0,))]
     mesh = make_batch_mesh()
-    with pytest.raises(ValueError, match="not both"):
-        Experiment(data, test, specs, mesh=mesh).run(
-            periods=2, executor=SerialExecutor())
+    with pytest.raises(TypeError):
+        Experiment(data, test, specs, mesh=mesh)
+    with pytest.raises(TypeError):
+        Experiment(data, test, specs).run(periods=2, mesh=mesh)
 
 
 def test_run_sweep_and_run_scheme_warn_deprecation(dataset, fleet):
@@ -466,10 +476,10 @@ def test_pad_rows_wraps_cyclically_when_pad_exceeds_rows():
 
 def test_mesh_multi_device_sharding():
     """End-to-end on a real 8-device mesh (forced host devices, so this
-    must run in a subprocess): sharded == plain for MeshExecutor, the
-    async-with-mesh combination, AND the deprecated mesh= forwarding path,
-    including a feel bucket and a dev bucket both smaller than the
-    mesh."""
+    must run in a subprocess): sharded == plain for MeshExecutor and the
+    async-with-mesh combination, including a ragged feel bucket (two
+    fleet sizes padded into one program) and a dev bucket, both smaller
+    than the mesh."""
     import subprocess
     import sys
     prog = """
@@ -481,18 +491,24 @@ from repro.launch.mesh import make_batch_mesh
 full = ClassificationData.synthetic(n=300, dim=24, seed=0, spread=6.0)
 data, test = full.split(60)
 fleet = tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9) for f in (0.7, 2.1))
+wide = fleet + (DeviceProfile(kind="cpu", f_cpu=1.4e9),)
 specs = [ScenarioSpec(fleet=fleet, partition=p, policy="full", b_max=8,
                       base_lr=0.15, hidden=32, seeds=(0,))
          for p in ("iid", "noniid")]
+specs.append(ScenarioSpec(fleet=wide, name="K3", partition="iid",
+                          policy="full", b_max=8, base_lr=0.15, hidden=32,
+                          seeds=(0,)))        # ragged row: padded K2 -> K3
 specs.append(ScenarioSpec(fleet=fleet, scheme="individual", b_max=8,
                           hidden=32, seeds=(0,)))
 mesh = make_batch_mesh()
 assert mesh.devices.size == 8, mesh.devices.size
 plain = Experiment(data, test, specs).run(periods=3)
 for runner in (lambda e: e.run(periods=3, executor=MeshExecutor()),
-               lambda e: e.run(periods=3, executor=AsyncExecutor(mesh=mesh)),
-               lambda e: Experiment(e.data, e.test, e.specs,
-                                    mesh=mesh).run(periods=3)):
+               lambda e: e.run(periods=3,
+                               executor=AsyncExecutor(mesh=mesh)),
+               lambda e: e.run(periods=3,
+                               executor=AsyncExecutor(mesh=mesh,
+                                                      max_in_flight=1))):
     sharded = runner(Experiment(data, test, specs))
     assert np.array_equal(plain.times, sharded.times)
     assert np.allclose(plain.losses, sharded.losses, atol=1e-5)
@@ -528,19 +544,44 @@ def test_mesh_one_device_fallback(dataset, fleet):
     np.testing.assert_allclose(plain.accs, sharded.accs, atol=1e-6)
 
 
-def test_legacy_mesh_kwarg_forwards_to_mesh_executor(dataset, fleet):
-    """Experiment(mesh=...) still works — forwarded to MeshExecutor with a
-    pending-deprecation note — and rejects non-batch meshes."""
+def test_mesh_executor_rejects_non_batch_mesh(dataset, fleet):
+    """Executors validate their mesh up front: a mesh without a 'batch'
+    axis fails fast instead of deep inside device_put."""
     data, test = dataset
     specs = [_spec(fleet, partition="iid", policy="full", seeds=(0,))]
-    plain = Experiment(data, test, specs).run(periods=3)
-    mesh = make_batch_mesh()
-    with pytest.warns(PendingDeprecationWarning, match="MeshExecutor"):
-        fwd = Experiment(data, test, specs, mesh=mesh).run(periods=3)
-    np.testing.assert_array_equal(plain.times, fwd.times)
-    np.testing.assert_allclose(plain.losses, fwd.losses, atol=1e-6)
-
     from repro.launch.mesh import make_host_mesh
     with pytest.raises(ValueError, match="batch"):
         Experiment(data, test, specs).run(
             periods=3, executor=MeshExecutor(make_host_mesh()))
+
+
+def test_async_max_in_flight_validation():
+    with pytest.raises(ValueError, match="max_in_flight"):
+        AsyncExecutor(max_in_flight=0)
+
+
+def test_async_max_in_flight_bit_equal(dataset, fleet):
+    """The dispatch-backlog cap is pure scheduling policy: capped (1 and
+    2 in flight) vs uncapped AsyncExecutor runs are bit-equal on a
+    3-bucket grid."""
+    data, test = dataset
+    specs = _multibucket_specs(fleet)
+    exp = Experiment(data, test, specs)
+    assert len(exp.lower()) == 3
+    uncapped = exp.run(periods=4, executor=AsyncExecutor())
+    for cap in (1, 2):
+        capped = exp.run(periods=4,
+                         executor=AsyncExecutor(max_in_flight=cap))
+        np.testing.assert_array_equal(np.asarray(uncapped.losses),
+                                      np.asarray(capped.losses))
+        np.testing.assert_array_equal(np.asarray(uncapped.accs),
+                                      np.asarray(capped.accs))
+        np.testing.assert_array_equal(uncapped.times, capped.times)
+        np.testing.assert_array_equal(uncapped.global_batch,
+                                      capped.global_batch)
+    # streaming still yields one cumulative partial per bucket
+    partials = list(exp.stream(periods=4,
+                               executor=AsyncExecutor(max_in_flight=1)))
+    assert len(partials) == 3
+    np.testing.assert_array_equal(np.asarray(partials[-1].losses),
+                                  np.asarray(uncapped.losses))

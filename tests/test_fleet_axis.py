@@ -1,0 +1,304 @@
+"""Fleet as a first-class sweep axis (ragged-fleet padded lowering).
+
+Covers the ``users=`` grid axis (resize rule, labeled fleets, num_users
+coordinate, validation), the ONE-compiled-program-per-padded-shape-family
+acceptance (trace-count pattern), padded-vs-solo bit equality for the
+ledgers AND the device trajectories (feel proposed/fixed policies and
+both dev-family schemes), mask hygiene (padded user rows never leak into
+batchsize / bandwidth / accuracy reductions), the masked Algorithm-1
+rows solver, and cross-K fused host planning.
+"""
+import numpy as np
+import pytest
+
+from repro.api import AsyncExecutor, Experiment, ScenarioSpec, grid
+from repro.api.lowering import plan_bucket
+from repro.core import DeviceProfile, FeelScheduler
+from repro.core.scheduler import plan_horizons_batch
+from repro.core.solver import FleetRows, solve_uplink_rows
+from repro.channels.model import Cell
+from repro.data.pipeline import ClassificationData
+from repro.fed import engine
+
+# distinctive shapes (no other test module uses dim=28 / hidden=56 /
+# b_max=20) so the lru-cached engine programs are fresh and the
+# trace-count assertions below are exact
+DIM, HIDDEN, BMAX = 28, 56, 20
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    full = ClassificationData.synthetic(n=420, dim=DIM, seed=0, spread=6.0)
+    return full.split(80)
+
+
+def _fleet(k):
+    return tuple(DeviceProfile(kind="cpu", f_cpu=(0.6 + 0.3 * i) * 1e9)
+                 for i in range(k))
+
+
+def _spec(k, **kw):
+    kw.setdefault("name", f"K{k}")
+    kw.setdefault("policy", "proposed")
+    kw.setdefault("partition", "noniid")
+    kw.setdefault("b_max", BMAX)
+    kw.setdefault("base_lr", 0.15)
+    kw.setdefault("hidden", HIDDEN)
+    return ScenarioSpec(fleet=_fleet(k), **kw)
+
+
+# ---------------------------------------------------------------------------
+# the users= grid axis
+# ---------------------------------------------------------------------------
+
+
+def test_users_axis_resize_rule():
+    base = _spec(3)
+    study = grid(base, users=[2, 3, 7])
+    assert study.coord_names == ("num_users",)
+    assert [s.k for s in study] == [2, 3, 7]
+    # truncation keeps the leading profiles; extension cycles round-robin
+    assert study[0].fleet == base.fleet[:2]
+    assert study[2].fleet == tuple(base.fleet[i % 3] for i in range(7))
+    assert [study.axis_coords(s)["num_users"] for s in study] == [2, 3, 7]
+    assert study[0].name == "K3/users=2"
+    # K == base fleet size is the base fleet verbatim
+    assert study[1].fleet == base.fleet
+
+
+def test_users_axis_explicit_fleets():
+    slow = tuple(DeviceProfile(kind="cpu", f_cpu=0.5e9) for _ in range(4))
+    study = grid(_spec(3), users={"slow4": slow, "base2": _fleet(2)})
+    assert [study.axis_coords(s)["num_users"] for s in study] \
+        == ["slow4", "base2"]
+    assert study[0].fleet == slow and study[1].k == 2
+
+
+def test_users_axis_crosses_with_other_axes():
+    study = grid(_spec(3), users=[2, 4], partition=["iid", "noniid"])
+    assert len(study) == 4
+    assert study.coord_names == ("num_users", "partition")
+    assert {(s.k, s.partition) for s in study} \
+        == {(2, "iid"), (2, "noniid"), (4, "iid"), (4, "noniid")}
+
+
+def test_users_axis_validation():
+    base = _spec(3)
+    with pytest.raises(ValueError, match="positive int"):
+        grid(base, users=[0])
+    with pytest.raises(ValueError, match="positive int"):
+        grid(base, users=[2.5])
+    with pytest.raises(ValueError, match="positive int"):
+        grid(base, users=[True])
+    with pytest.raises(ValueError, match="empty"):
+        grid(base, users={"none": ()})
+    with pytest.raises(ValueError, match="no values"):
+        grid(base, users=[])
+    # a plain fleet axis is still rejected (its built-in coordinate holds
+    # the spec *name*, not the swept fleet) — users= is the supported way
+    with pytest.raises(ValueError, match="built-in"):
+        grid(base, fleet=[base.fleet])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: one compiled program per padded-shape family
+# ---------------------------------------------------------------------------
+
+
+def test_users_grid_is_one_bucket_one_trace(dataset):
+    """ISSUE-4 acceptance: grid(base, users=[...]) lowers to ONE bucket
+    and ONE trajectory trace for the whole K-sweep."""
+    data, test = dataset
+    study = grid(_spec(3, seeds=(0, 1)), users=[3, 5, 8])
+    exp = Experiment(data, test, study)
+    buckets = exp.lower()
+    assert len(buckets) == 1
+    assert buckets[0].k_pad == 8
+    before = engine.trace_count()
+    res = exp.run(periods=4)
+    assert engine.trace_count() - before == 1     # 3 fleet sizes, 1 program
+    assert res.n_buckets == 1
+    assert res.rows == 6
+    # num_users is a selectable Results coordinate
+    assert res.unique("num_users") == (3, 5, 8)
+    assert res.sel(num_users=5).rows == 2
+    # global batch actually grows with K (the paper's K knob is live)
+    gb = [res.sel(num_users=k).global_batch.mean() for k in (3, 5, 8)]
+    assert gb[0] < gb[1] < gb[2], gb
+
+
+# ---------------------------------------------------------------------------
+# padded-vs-solo bit equality
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["proposed", "full"])
+def test_padded_bucket_bit_identical_to_solo_runs(dataset, policy):
+    """A K-heterogeneous grid (K ∈ {3, 5, 8}) run as one padded bucket
+    reproduces three solo unpadded runs: ledgers and horizons (host
+    planning) bit-for-bit, device trajectories to float tolerance — the
+    masked math is value-exact (zeros add exactly), but XLA retiles its
+    reductions when the vmap batch width changes, the same 1-ulp caveat
+    the PR-2/PR-3 equivalence suites carry for cross-program compares."""
+    data, test = dataset
+    ks = (3, 5, 8)
+    specs = [_spec(k, policy=policy, seeds=(0, 1)) for k in ks]
+    exp = Experiment(data, test, specs)
+    assert len(exp.lower()) == 1
+    res = exp.run(periods=5, executor=AsyncExecutor())
+    for k in ks:
+        solo = Experiment(data, test,
+                          [_spec(k, policy=policy, seeds=(0, 1))]
+                          ).run(periods=5)
+        cell = res.sel(fleet=f"K{k}")
+        np.testing.assert_array_equal(cell.times, solo.times)
+        np.testing.assert_array_equal(cell.global_batch, solo.global_batch)
+        np.testing.assert_allclose(np.asarray(cell.losses),
+                                   np.asarray(solo.losses),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(cell.accs),
+                                   np.asarray(solo.accs),
+                                   atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("scheme", ["individual", "model_fl"])
+def test_padded_dev_bucket_bit_identical_to_solo_runs(dataset, scheme):
+    """The per-device-parameter schemes ride the same padded contract:
+    masked parameter averages keep padded device rows out (ledger
+    bit-for-bit, series to float tolerance as above)."""
+    data, test = dataset
+    specs = [_spec(k, scheme=scheme, seeds=(0,)) for k in (3, 6)]
+    exp = Experiment(data, test, specs)
+    assert len(exp.lower()) == 1
+    res = exp.run(periods=4)
+    for k in (3, 6):
+        solo = Experiment(data, test,
+                          [_spec(k, scheme=scheme, seeds=(0,))]
+                          ).run(periods=4)
+        cell = res.sel(fleet=f"K{k}")
+        np.testing.assert_array_equal(cell.times, solo.times)
+        np.testing.assert_allclose(np.asarray(cell.losses),
+                                   np.asarray(solo.losses),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(cell.accs),
+                                   np.asarray(solo.accs),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mask hygiene: padded rows never leak into any reduction
+# ---------------------------------------------------------------------------
+
+
+def test_padded_plan_mask_hygiene(dataset):
+    """Padded user rows of a planned bucket carry exactly zero weight,
+    zero batch and zero sample contribution; global_batch sums active
+    users only."""
+    data, _ = dataset
+    specs = [_spec(k, seeds=(0,)) for k in (3, 8)]
+    [bucket] = Experiment(data, None, specs).lower()
+    assert bucket.k_pad == 8
+    plan = plan_bucket(bucket, data, periods=4)
+    mask = plan.payload["active"]
+    np.testing.assert_array_equal(mask[0], [1] * 3 + [0] * 5)
+    np.testing.assert_array_equal(mask[1], [1] * 8)
+    sched_k3 = plan.payload["schedules"][0]
+    assert np.all(sched_k3.weight[:, 3:] == 0)
+    assert np.all(sched_k3.batch[:, 3:] == 0)
+    assert np.all(sched_k3.idx[:, 3:] == 0)
+    # the ledger's global batch is the ACTIVE batch sum, not the padded
+    np.testing.assert_array_equal(
+        plan.global_batch[0],
+        sched_k3.batch[:, :3].sum(1).astype(np.int64))
+
+
+def test_active_mask_guards_engine_reductions(dataset):
+    """The engine's active mask is a real guard, not dead weight: poison
+    the padded columns of a padded schedule with garbage weights/batch
+    and the masked trajectory must still reproduce the clean run."""
+    data, test = dataset
+    import jax
+    import jax.numpy as jnp
+    sim_spec = _spec(3, seeds=(0,))
+    [bucket] = Experiment(data, test, [sim_spec]).lower()
+    plan = plan_bucket(bucket, data, periods=3)
+    clean = plan.payload["schedules"][0]
+    padded = engine.pad_schedule(clean, 6)
+    poisoned = engine.Schedule(
+        idx=padded.idx.copy(), weight=padded.weight.copy(),
+        batch=padded.batch.copy(), lr=padded.lr, times=padded.times,
+        global_batch=padded.global_batch)
+    poisoned.weight[:, 3:] = 1.0                  # garbage in padded rows
+    poisoned.batch[:, 3:] = 7.0
+    active = jnp.asarray([1.0] * 3 + [0.0] * 3, jnp.float32)
+
+    key = jax.random.key(0)
+    from repro.fed import feel_model
+    params0 = feel_model.init(key, HIDDEN, depth=3, input_dim=DIM)
+    res_clean = engine.run_trajectory(
+        params0, engine.zero_residual(params0, 3), clean, data, test,
+        ratio=sim_spec.compression)
+    res_poisoned = engine.run_trajectory(
+        params0, engine.zero_residual(params0, 6), poisoned, data, test,
+        ratio=sim_spec.compression, active=active)
+    for a, b in zip(res_clean[2], res_poisoned[2]):   # losses, accs, decays
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_masked_solver_rows_zero_padded_columns():
+    """Padded columns of the masked Algorithm-1 solve get exactly zero
+    batchsize and zero slot share, and active columns are bit-equal to
+    the compact solve."""
+    fleet = _fleet(3)
+    rng = np.random.default_rng(3)
+    rates = rng.uniform(2e7, 2e8, (4, 3))
+    B = rng.uniform(6, 50, 4)
+    dl = 0.05 * np.sqrt(B)
+    bt0, tau0, e0, mu0 = solve_uplink_rows(list(fleet), rates, 1.2e4,
+                                           0.010, B, dl, BMAX)
+    fr = FleetRows.from_fleets([fleet] * 4, k_pad=7)
+    rates_p = np.concatenate([rates, np.full((4, 4), 1e7)], axis=1)
+    bt1, tau1, e1, mu1 = solve_uplink_rows(fr, rates_p, 1.2e4,
+                                           0.010, B, dl, BMAX)
+    assert np.all(bt1[:, 3:] == 0) and np.all(tau1[:, 3:] == 0)
+    np.testing.assert_array_equal(bt0, bt1[:, :3])
+    np.testing.assert_array_equal(tau0, tau1[:, :3])
+    np.testing.assert_array_equal(e0, e1)
+    np.testing.assert_array_equal(mu0, mu1)
+
+
+def test_channel_pad_keeps_active_stream(dataset):
+    """Padded rate columns never touch the rng stream: the active columns
+    of a pad_to draw are bit-equal to the unpadded draw."""
+    cell_a, cell_b = Cell.make(7), Cell.make(7)
+    d = cell_a.drop_users(3)
+    d2 = cell_b.drop_users(3)
+    up0, down0 = cell_a.avg_rate_updown_rows(d, 5)
+    up1, down1 = cell_b.avg_rate_updown_rows(d2, 5, pad_to=6)
+    assert up1.shape == (5, 6)
+    np.testing.assert_array_equal(up0, up1[:, :3])
+    np.testing.assert_array_equal(down0, down1[:, :3])
+    assert np.all(up1[:, 3:] == cell_b.cfg.bandwidth_hz)
+    # follow-up draws consume identical streams afterwards too
+    np.testing.assert_array_equal(cell_a.avg_rate(d), cell_b.avg_rate(d2))
+
+
+def test_plan_horizons_batch_fuses_across_fleet_sizes():
+    """Proposed-policy planning for different-K schedulers runs as one
+    masked lockstep solve, bit-identical to solo planning — and the
+    scheduler state advances exactly as the per-call path would."""
+    mk = lambda: [FeelScheduler(devices=list(_fleet(k)), n_params=37000,  # noqa
+                                policy="proposed", b_max=BMAX, seed=s)
+                  for k in (3, 5, 9) for s in (0, 1)]
+    fused, solo = mk(), mk()
+    hs_fused = plan_horizons_batch(fused, 7)
+    hs_solo = [s.plan_horizon(7) for s in solo]
+    for a, b in zip(hs_fused, hs_solo):
+        np.testing.assert_array_equal(a.batch, b.batch)
+        np.testing.assert_array_equal(a.tau_up, b.tau_up)
+        np.testing.assert_array_equal(a.tau_down, b.tau_down)
+        np.testing.assert_array_equal(a.latency, b.latency)
+        np.testing.assert_array_equal(a.lr, b.lr)
+        np.testing.assert_array_equal(a.global_batch, b.global_batch)
+    for a, b in zip(fused, solo):
+        assert a._b_cache == b._b_cache and a._period == b._period
