@@ -1,0 +1,170 @@
+"""Open- vs closed-loop ξ re-planning — the accuracy and calibration
+figure behind ``replan=``.
+
+Two runs of the same GPU-fleet FEEL scenario (interior B*, the paper's
+GPU scenario where batch economics are non-trivial):
+
+* **open loop** — the whole horizon planned up front with the prior ξ
+  (the paper's known-constant treatment; PR-1..4 behaviour);
+* **closed loop** — ``replan=R``: the horizon executes as R-period
+  chunks, each chunk's realized loss decays feeding the per-row ξ
+  estimator before the next chunk is planned (Algorithm 1 with live
+  feedback, warm-started B* grids).
+
+Two results are reported:
+
+1. **Accuracy at equal wall-clock** (simulated seconds).  The headline
+   here is an *invariance*: Algorithm-1's decisions are ξ-scale-free
+   (the fixed-B allocation depends only on ΔL·E and ΔL·μ, which the
+   constraints pin jointly, and the outer argmin of T(B)/(ξ√B) drops
+   ξ), so pure ξ re-estimation reproduces the open-loop trajectory and
+   the closed-loop curve is ≥ the open-loop curve trivially — closed-
+   loop feedback is *free*.  The realized-decay cap (the decision-
+   relevant half: credit no candidate more decay than recently
+   realized) only steps in when the √B extrapolation is unsupported;
+   on a well-specified scenario it leaves the plan untouched.
+2. **Calibration**: per-chunk predicted decay ΔL̂ = ξ̂√B against the
+   realized decay.  Open loop stays at the prior forever (here a
+   mis-specified ξ₀, as any fresh run is); closed loop converges onto
+   the realized series — the estimator's actual job, and the reason the
+   ledger's efficiency predictions become trustworthy mid-run.
+
+Emits ``BENCH_fig_replan.json``.  Run:
+``PYTHONPATH=src python -m benchmarks.fig_replan``
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.api import Experiment, ScenarioSpec
+from repro.api.lowering import BucketRun, group_rows
+from repro.core import DeviceProfile
+
+from repro.data.pipeline import ClassificationData
+
+REPLAN = 5
+PRIOR_XI = 0.05
+
+
+def _fleet():
+    """The paper's GPU scenario: flat-then-affine latency makes the
+    optimal batchsize interior (B* well above the floor), so re-planning
+    has a real decision space."""
+    return tuple(DeviceProfile(kind="gpu", gpu_t_low=0.02, gpu_slope=5e-4,
+                               gpu_b_th=16 + 4 * i) for i in range(4))
+
+
+def _acc_at(times, accs, t):
+    """Last evaluated accuracy at or before simulated second ``t``."""
+    i = np.searchsorted(times, t, side="right") - 1
+    return float(accs[i]) if i >= 0 else float("nan")
+
+
+def _closed_loop_trace(spec, data, test, periods):
+    """Drive the chunked closed loop at the lowering level, recording
+    the ξ estimate at each chunk's plan time (the calibration series)."""
+    bucket = group_rows([spec], replan=REPLAN)[0]
+    run = BucketRun(bucket, data, test, periods, REPLAN)
+    xi_at_plan = []
+    while not run.done:
+        if run.can_advance:
+            xi_at_plan.append(
+                [s.xi_est.xi for s in run._planner.schedulers])
+            run.advance()
+        else:
+            run.collect()
+    losses, accs, times, gb = run.result()
+    # per-period predicted decay: the ξ in force when that chunk was
+    # planned × √B of the period's plan
+    xi_series = np.concatenate([
+        np.repeat(np.asarray(xi)[:, None],
+                  min(REPLAN, periods - i * REPLAN), axis=1)
+        for i, xi in enumerate(xi_at_plan)], axis=1)
+    predicted = xi_series * np.sqrt(gb)
+    return (losses, accs, times, gb), predicted, run.realized_decays
+
+
+def main(fast: bool = True):
+    periods = 40 if fast else 100
+    seeds = tuple(range(2 if fast else 6))
+    full = ClassificationData.synthetic(n=800, dim=32, seed=0, spread=4.0)
+    data, test = full.split(160)
+    spec = ScenarioSpec(fleet=_fleet(), name="gpu4", partition="noniid",
+                        policy="proposed", b_max=128, base_lr=0.1,
+                        hidden=64, seeds=seeds)
+    exp = Experiment(data, test, [spec])
+
+    open_res = exp.run(periods)                       # prior ξ, one plan
+    closed_res = exp.run(periods, replan=REPLAN)      # live ξ feedback
+
+    # accuracy at equal wall-clock: sample both curves on the shared
+    # simulated-time budget
+    t_end = min(open_res.times[:, -1].min(), closed_res.times[:, -1].min())
+    grid_t = np.linspace(0.25 * t_end, t_end, 8)
+    acc_open = [float(np.mean([_acc_at(open_res.times[r], open_res.accs[r],
+                                       t) for r in range(open_res.rows)]))
+                for t in grid_t]
+    acc_closed = [float(np.mean([_acc_at(closed_res.times[r],
+                                         closed_res.accs[r], t)
+                                 for r in range(closed_res.rows)]))
+                  for t in grid_t]
+    # ≥ with a seed-noise tolerance; the ξ-invariance makes this an
+    # equality whenever the decay cap never binds
+    margin = float(np.min(np.array(acc_closed) - np.array(acc_open)))
+
+    # calibration: predicted ΔL̂ per period vs realized, one seed's trace
+    one = ScenarioSpec(fleet=_fleet(), name="gpu4", partition="noniid",
+                       policy="proposed", b_max=128, base_lr=0.1,
+                       hidden=64, seeds=(seeds[0],))
+    (_, _, _, gb_cl), predicted_cl, realized = _closed_loop_trace(
+        one, data, test, periods)
+    predicted_open = PRIOR_XI * np.sqrt(gb_cl)        # prior, never updated
+    late = realized.shape[1] // 2                     # converged half
+    scale = float(np.mean(np.abs(realized[:, late:]))) + 1e-12
+    err = lambda pred: float(np.mean(                 # noqa: E731
+        np.abs(pred[:, late:] - realized[:, late:]))) / scale
+    cal_open, cal_closed = err(predicted_open), err(predicted_cl)
+
+    report = {
+        "periods": periods, "n_seeds": len(seeds), "replan": REPLAN,
+        "prior_xi": PRIOR_XI,
+        "global_batch_open": int(open_res.global_batch[0, 0]),
+        "global_batch_closed": int(closed_res.global_batch[0, 0]),
+        "equal_wallclock_grid_s": [float(t) for t in grid_t],
+        "acc_open": acc_open, "acc_closed": acc_closed,
+        "min_margin_closed_minus_open": margin,
+        "closed_ge_open_at_equal_wallclock": bool(margin >= -1e-9),
+        "calibration_err_open": cal_open,
+        "calibration_err_closed": cal_closed,
+        "calibration_gain": cal_open / max(cal_closed, 1e-12),
+        "note": "Algorithm-1 decisions are xi-scale-invariant, so pure "
+                "xi re-estimation is free (identical trajectories); the "
+                "closed loop's measurable win is calibration — predicted "
+                "per-period decay converges onto realized decay — plus "
+                "the decay-cap guard for unsupported sqrt(B) credit.",
+    }
+    with open("BENCH_fig_replan.json", "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"{'t (s)':>8} {'acc open':>9} {'acc closed':>10}")
+    for t, ao, ac in zip(grid_t, acc_open, acc_closed):
+        print(f"{t:>8.2f} {ao:>9.3f} {ac:>10.3f}")
+    print(f"calibration |pred-real|/real (late half): "
+          f"open={cal_open:.2f} closed={cal_closed:.2f} "
+          f"({cal_open / max(cal_closed, 1e-12):.1f}x better)")
+
+    assert margin >= -1e-9, (
+        f"closed-loop accuracy fell below open-loop: margin={margin}")
+    return [(f"fig_replan/replan{REPLAN}_{len(seeds)}seed_{periods}p",
+             0.0,
+             f"acc_closed_final={acc_closed[-1]:.3f};"
+             f"acc_open_final={acc_open[-1]:.3f};"
+             f"min_margin={margin:+.4f};"
+             f"calib_gain={cal_open / max(cal_closed, 1e-12):.1f}x")]
+
+
+if __name__ == "__main__":
+    for r in main(fast=True):
+        print(",".join(map(str, r)))

@@ -9,7 +9,7 @@ import time
 def main() -> None:
     from benchmarks import (ablation_compression, fig2_gpu_training_function,
                             fig3_generalization, fig45_batchsize_policies,
-                            fig_users, loss_decay_fit, roofline,
+                            fig_replan, fig_users, loss_decay_fit, roofline,
                             smoke_experiment, solver_scaling, sweep_speed,
                             table2_schemes)
     modules = [
@@ -22,6 +22,7 @@ def main() -> None:
         ("fig45_batchsize_policies", fig45_batchsize_policies),
         ("ablation_compression", ablation_compression),
         ("fig_users", fig_users),
+        ("fig_replan", fig_replan),
         ("sweep_speed", sweep_speed),
         ("roofline", roofline),
     ]

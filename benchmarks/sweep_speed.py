@@ -1,4 +1,4 @@
-"""Sweep engine wall-clock: 4-way comparison emitting ``BENCH_sweep.json``.
+"""Sweep engine wall-clock: 6-rung comparison emitting ``BENCH_sweep.json``.
 
 The main grid is a scenario *family* — 2 CPU fleets × {iid, noniid} × 2
 base learning rates, all under the proposed Algorithm-1 policy — i.e. the
@@ -33,6 +33,20 @@ overhead):
                   unhidden — collection is the cheapest one.  Both
                   executors produce bit-identical Results (test-enforced);
                   best-of-2 walls damp CI scheduling noise.
+  chunked_pipeline — rung 6: intra-bucket chunked pipelining on the SAME
+                  single-bucket grid as rung 3 (where host planning —
+                  channel MC draws + Algorithm-1 bisections — and device
+                  execution are both substantial).  Bucket-serial: one
+                  monolithic plan → dispatch → collect (the host plans
+                  ~5s before the device starts).  Chunked-pipelined:
+                  ``AsyncExecutor(chunk_periods=C)`` executes the bucket
+                  as C-period chunks carrying the engine state, so the
+                  host plans chunk c+1 while the device scans chunk c —
+                  results bit-identical (test-enforced), wall-clock
+                  bounded below by max(plan, device) instead of their
+                  sum.  On 2-core CI the overlap is contended (numpy and
+                  XLA share cores; CPU async dispatch depth is shallow),
+                  so the recorded ratio undersells accelerator meshes.
   users_padded  — rung 5: the paper's "impact of number of users" sweep,
                   ``grid(base, users=[5, 6, 7, 8])`` × 8 seeds at a short
                   horizon (the interactive-sweep regime, where per-K
@@ -54,7 +68,9 @@ overhead):
 
 Acceptance bars: bucket_vmap >= 2x over PR 1's per-cell loop;
 bucket_async >= 1.2x over SerialExecutor on the >= 3-bucket grid;
-users_padded >= 1.5x over per-K serial on the 4-size K-sweep.
+users_padded >= 1.5x over per-K serial on the 4-size K-sweep;
+chunked_pipeline >= 1.1x over the bucket-serial monolithic lowering on
+the planning-heavy single-bucket grid (2-core CI floor).
 """
 from __future__ import annotations
 
@@ -86,6 +102,8 @@ MB_HIDDEN = [128, 96, 64, 48]
 US_USERS = [5, 6, 7, 8]
 US_HIDDEN = 80
 US_PERIODS = 12
+# rung 6: chunk size for intra-bucket pipelining (5 chunks over PERIODS)
+CHUNK = 10
 
 
 def _fleet(tag):
@@ -297,6 +315,14 @@ def main(fast: bool = True):
     t_mb_serial = _time_executor(exp_mb, SerialExecutor)
     t_mb_async = _time_executor(exp_mb, AsyncExecutor)
 
+    # rung 6: intra-bucket chunked pipelining vs the bucket-serial
+    # monolithic lowering, on rung 3's planning-heavy single bucket
+    exp_ck = Experiment(data, test, _bucket_specs())
+    exp_ck.run(PERIODS, executor=AsyncExecutor(chunk_periods=CHUNK))
+    t_ck_serial = _time_executor(exp_ck, SerialExecutor)
+    t_ck_chunked = _time_executor(
+        exp_ck, lambda: AsyncExecutor(chunk_periods=CHUNK))
+
     # rung 5: K-sweep — padded bucket (ONE cold compile + fused planning)
     # vs per-K serial lowering (one cold compile + one planning pass per
     # fleet size), both at the short interactive horizon
@@ -340,6 +366,13 @@ def main(fast: bool = True):
         "users_padded_s": t_us_padded,
         "users_per_k_serial_s": t_us_perk,
         "speedup_users_padded_vs_per_k": t_us_perk / t_us_padded,
+        "chunked_pipeline": {
+            "chunk_periods": CHUNK, "periods": PERIODS,
+            "grid": "rung-3 single bucket", "walls": "best of 2",
+        },
+        "bucket_serial_monolithic_s": t_ck_serial,
+        "bucket_chunked_pipelined_s": t_ck_chunked,
+        "speedup_chunked_vs_bucket_serial": t_ck_serial / t_ck_chunked,
     }
     with open("BENCH_sweep.json", "w") as f:
         json.dump(report, f, indent=2)
@@ -360,7 +393,11 @@ def main(fast: bool = True):
              f"speedup_async={t_mb_serial / t_mb_async:.2f}x"),
             (f"sweep_speed/users_padded_{us_tag}", t_us_padded * 1e6,
              f"wall={t_us_padded:.2f}s;per_k={t_us_perk:.2f}s;"
-             f"speedup_padded={t_us_perk / t_us_padded:.2f}x")]
+             f"speedup_padded={t_us_perk / t_us_padded:.2f}x"),
+            (f"sweep_speed/chunked_pipeline_{tag}_c{CHUNK}",
+             t_ck_chunked * 1e6,
+             f"wall={t_ck_chunked:.2f}s;serial={t_ck_serial:.2f}s;"
+             f"speedup_chunked={t_ck_serial / t_ck_chunked:.2f}x")]
 
 
 if __name__ == "__main__":

@@ -27,7 +27,14 @@ that serves that family at hardware speed:
   planning overlaps bucket *N*'s device execution), and
   :class:`MeshExecutor` (batch axis sharded over
   ``launch.mesh.make_batch_mesh``).  Bit-identical by construction and
-  by test.
+  by test.  All executors take ``chunk_periods=``: horizons execute as
+  period-chunks through resumable scans
+  (``lowering.BucketRun`` / ``fed.engine.EngineState``), pipelining
+  chunk *c+1*'s host planning behind chunk *c*'s device execution —
+  bit-identical to the monolithic scan at any chunk size.  Specs with
+  ``replan=R`` (or ``Experiment.run(replan=R)``) close the Algorithm-1
+  loop: each chunk's realized loss decays update the per-row ξ
+  estimator before the next chunk is planned.
 * :class:`Results` / :class:`ResultsBuilder` (``results.py``) — named
   (fleet, partition, policy, scheme, seed, period, …axis) coordinates
   with ``sel``/``speed``/``final_acc`` reductions, explicit NaN handling,

@@ -22,6 +22,22 @@ in wall-clock and device layout:
   (``launch.mesh.make_batch_mesh``), created lazily over all available
   devices when none is given.
 
+Chunked horizons (``chunk_periods=``)
+-------------------------------------
+Every executor also pipelines *within* a bucket: ``chunk_periods=C``
+executes each bucket as C-period chunks through
+:class:`~repro.api.lowering.BucketRun`, carrying the engine scan state
+between chunks.  Under :class:`AsyncExecutor` the host plans chunk *c+1*
+(bisections, channel MC) while the device executes chunk *c* — so even a
+single-bucket experiment overlaps host and device work.  Chunking with ξ
+frozen is a pure scheduling policy: results are bit-identical to the
+monolithic scan at any chunk size (test-enforced).  Buckets whose specs
+set ``replan=`` are *closed-loop*: they chunk at the replan interval
+regardless of ``chunk_periods`` and must collect chunk *c* (feeding its
+realized decays to the ξ estimators) before planning chunk *c+1* — under
+:class:`AsyncExecutor`, other buckets' device work still hides behind
+that feedback stall.
+
 Executors yield ``(bucket, (losses, accs, times, global_batch))`` in
 bucket order as results become available, which is what lets
 ``Experiment.stream`` hand back incrementally collected ``Results``.
@@ -29,10 +45,10 @@ bucket order as results become available, which is what lets
 from __future__ import annotations
 
 from collections import deque
-from typing import Iterator, Optional, Sequence, Tuple
+from typing import Iterator, Optional, Sequence, Tuple, Union
 
-from repro.api.lowering import (Bucket, collect_bucket, dispatch_bucket,
-                                plan_bucket)
+from repro.api.lowering import (Bucket, BucketRun, collect_bucket,
+                                dispatch_bucket, plan_bucket)
 from repro.launch.mesh import ensure_batch_mesh, make_batch_mesh
 
 BucketSeries = Tuple[Bucket, tuple]
@@ -41,11 +57,24 @@ BucketSeries = Tuple[Bucket, tuple]
 class Executor:
     """Composition policy over the plan/dispatch/collect bucket phases."""
 
-    def __init__(self, mesh=None):
+    def __init__(self, mesh=None, chunk_periods: Optional[int] = None):
+        if chunk_periods is not None and chunk_periods < 1:
+            raise ValueError(
+                f"chunk_periods must be >= 1, got {chunk_periods}")
         self.mesh = mesh
+        self.chunk_periods = chunk_periods
 
     def _resolve_mesh(self):
         return None if self.mesh is None else ensure_batch_mesh(self.mesh)
+
+    def _chunk_for(self, bucket: Bucket) -> Optional[int]:
+        """The bucket's chunk size, or ``None`` for one monolithic scan.
+        A closed-loop bucket chunks at its replan interval (the feedback
+        boundary is semantic, not a tuning knob); otherwise the
+        executor's ``chunk_periods`` applies."""
+        if bucket.replan is not None:
+            return bucket.replan
+        return self.chunk_periods
 
     def execute(self, buckets: Sequence[Bucket], data, test,
                 periods: int) -> Iterator[BucketSeries]:
@@ -55,43 +84,92 @@ class Executor:
 
 
 class SerialExecutor(Executor):
-    """One bucket at a time, blocking at each collection (reference)."""
+    """One bucket at a time, blocking at each collection (reference).
+
+    With ``chunk_periods`` (or closed-loop buckets) the reference
+    schedule is strictly sequential per chunk too: plan chunk *c*,
+    dispatch it, collect it, then plan chunk *c+1* — no overlap anywhere,
+    which is exactly what makes it the semantics oracle the pipelined
+    runtimes are tested against.
+    """
 
     def execute(self, buckets, data, test, periods):
         mesh = self._resolve_mesh()
         for bucket in buckets:
-            handle = dispatch_bucket(plan_bucket(bucket, data, periods),
-                                     data, test, mesh=mesh)
-            yield bucket, collect_bucket(handle)
+            chunk = self._chunk_for(bucket)
+            if chunk is None:
+                handle = dispatch_bucket(plan_bucket(bucket, data, periods),
+                                         data, test, mesh=mesh)
+                yield bucket, collect_bucket(handle)
+            else:
+                run = BucketRun(bucket, data, test, periods, chunk,
+                                mesh=mesh)
+                yield bucket, run.run_serial()
 
 
 class AsyncExecutor(Executor):
-    """Cross-bucket pipelining: plan+dispatch buckets back-to-back,
-    collect afterwards.
+    """Cross-bucket (and, with ``chunk_periods``, intra-bucket)
+    pipelining: plan+dispatch back-to-back, collect afterwards.
 
     Because jax dispatch is asynchronous, dispatching bucket *N* returns
     as soon as the program is enqueued — bucket *N+1*'s host planning
     (pure NumPy) then runs concurrently with *N*'s device execution, and
-    the only blocking happens at collection.  Results are bit-identical
-    to :class:`SerialExecutor` (test-enforced): every phase is a pure
-    function of its bucket, so scheduling order cannot change values.
+    the only blocking happens at collection.  Chunked buckets extend the
+    same overlap inside a bucket: every open-loop chunk is planned and
+    dispatched as soon as the previous one is enqueued, so the host
+    plans chunk *c+1* while the device executes chunk *c* — a
+    single-bucket experiment no longer serializes planning before
+    execution.  Closed-loop buckets collect each chunk before planning
+    the next (the ξ feedback is the point); the already-enqueued chunks
+    of *other* buckets keep the device busy through that stall.  Results
+    are bit-identical to :class:`SerialExecutor` (test-enforced): every
+    phase is a pure function of its bucket and the carried state, so
+    scheduling order cannot change values.
 
     ``max_in_flight`` bounds how many dispatched buckets' device values
     stay resident at once: once the window is full, the oldest bucket is
     collected (blocking) before the next one is planned and dispatched.
-    The default (``None``) keeps every bucket in flight — today's
-    behaviour, fine at current scales; thousand-bucket studies should
-    cap the backlog.  ``max_in_flight=1`` degenerates to the serial
-    schedule.  The cap is a scheduling policy only: capped and uncapped
-    runs are bit-identical (test-enforced).
+    A chunked bucket counts as one in-flight unit (its chunks replace —
+    not multiply — the monolithic residency).  The default (``None``)
+    keeps every bucket in flight — fine at current scales;
+    thousand-bucket studies should cap the backlog.  ``max_in_flight=1``
+    degenerates to the serial schedule across buckets while keeping
+    intra-bucket chunk pipelining.  The cap is a scheduling policy only:
+    capped and uncapped runs are bit-identical (test-enforced).
     """
 
-    def __init__(self, mesh=None, max_in_flight: Optional[int] = None):
-        super().__init__(mesh=mesh)
+    def __init__(self, mesh=None, max_in_flight: Optional[int] = None,
+                 chunk_periods: Optional[int] = None):
+        super().__init__(mesh=mesh, chunk_periods=chunk_periods)
         if max_in_flight is not None and max_in_flight < 1:
             raise ValueError(
                 f"max_in_flight must be >= 1, got {max_in_flight}")
         self.max_in_flight = max_in_flight
+
+    def _start(self, bucket, data, test, periods, mesh):
+        chunk = self._chunk_for(bucket)
+        if chunk is None:
+            return dispatch_bucket(plan_bucket(bucket, data, periods),
+                                   data, test, mesh=mesh)
+        run = BucketRun(bucket, data, test, periods, chunk, mesh=mesh)
+        run.advance()                     # chunk 0 in flight immediately
+        return run
+
+    @staticmethod
+    def _plan_ahead(pending) -> None:
+        """Push every in-flight chunked bucket as far as its guard
+        allows (open-loop chunks dispatch immediately; closed-loop
+        buckets wait for their collect)."""
+        for item in pending:
+            if isinstance(item, BucketRun):
+                while item.can_advance:
+                    item.advance()
+
+    @staticmethod
+    def _finish(item: Union[BucketRun, object]) -> BucketSeries:
+        if isinstance(item, BucketRun):
+            return item.bucket, item.drain()
+        return item.bucket, collect_bucket(item)
 
     def execute(self, buckets, data, test, periods):
         mesh = self._resolve_mesh()
@@ -99,14 +177,11 @@ class AsyncExecutor(Executor):
         pending: deque = deque()
         for bucket in buckets:
             if len(pending) >= cap:
-                handle = pending.popleft()
-                yield handle.bucket, collect_bucket(handle)
-            pending.append(
-                dispatch_bucket(plan_bucket(bucket, data, periods),
-                                data, test, mesh=mesh))
+                yield self._finish(pending.popleft())
+            pending.append(self._start(bucket, data, test, periods, mesh))
+            self._plan_ahead(pending)
         while pending:
-            handle = pending.popleft()
-            yield handle.bucket, collect_bucket(handle)
+            yield self._finish(pending.popleft())
 
 
 class MeshExecutor(SerialExecutor):
@@ -115,8 +190,9 @@ class MeshExecutor(SerialExecutor):
     mesh is given.  For sharding *and* cross-bucket overlap, pass a mesh
     to :class:`AsyncExecutor` instead."""
 
-    def __init__(self, mesh=None, max_devices: Optional[int] = None):
-        super().__init__(mesh=mesh)
+    def __init__(self, mesh=None, max_devices: Optional[int] = None,
+                 chunk_periods: Optional[int] = None):
+        super().__init__(mesh=mesh, chunk_periods=chunk_periods)
         self.max_devices = max_devices
 
     def _resolve_mesh(self):

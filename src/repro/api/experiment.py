@@ -47,22 +47,32 @@ class Experiment:
     test: ClassificationData
     specs: Sequence[ScenarioSpec]
 
-    def lower(self) -> List[Bucket]:
+    def lower(self, replan: Optional[int] = None) -> List[Bucket]:
         """The bucketed row plan (introspection / tests): which rows share
         a compiled program, in execution order.  Duplicate (spec, seed)
-        rows collapse onto one computed row (``Row.indices`` fans out)."""
-        return group_rows(self.specs)
+        rows collapse onto one computed row (``Row.indices`` fans out).
+        ``replan`` applies the run-level closed-loop override (see
+        :meth:`run`)."""
+        return group_rows(self.specs, replan=replan)
 
-    def run(self, periods: int,
-            executor: Optional[Executor] = None) -> Results:
-        """Run the whole grid and return the complete ``Results``."""
+    def run(self, periods: int, executor: Optional[Executor] = None,
+            replan: Optional[int] = None) -> Results:
+        """Run the whole grid and return the complete ``Results``.
+
+        ``replan=R`` turns every FEEL-family bucket closed-loop for this
+        run: horizons execute as R-period chunks and each chunk's
+        realized loss decays update the ξ estimator before the next chunk
+        is planned (Algorithm 1 with live feedback — overriding any
+        per-spec ``ScenarioSpec.replan``).  Dev-family buckets have no ξ
+        loop and ignore the override.
+        """
         builder = None
-        for builder in self._collected(periods, executor):
+        for builder in self._collected(periods, executor, replan):
             pass
         return builder.build()
 
-    def stream(self, periods: int,
-               executor: Optional[Executor] = None) -> Iterator[Results]:
+    def stream(self, periods: int, executor: Optional[Executor] = None,
+               replan: Optional[int] = None) -> Iterator[Results]:
         """Yield a cumulative partial ``Results`` after each bucket
         collection (the final yield is the complete result).
 
@@ -70,15 +80,16 @@ class Experiment:
         is already dispatched before the first yield, so consuming the
         stream slowly does not serialize the device work.
         """
-        for builder in self._collected(periods, executor):
+        for builder in self._collected(periods, executor, replan):
             yield builder.partial()
 
-    def _collected(self, periods: int,
-                   executor: Optional[Executor]) -> Iterator[ResultsBuilder]:
+    def _collected(self, periods: int, executor: Optional[Executor],
+                   replan: Optional[int] = None
+                   ) -> Iterator[ResultsBuilder]:
         """Drive the executor, yielding the builder after each bucket
         lands (``run`` assembles once at the end; ``stream`` snapshots a
         partial per yield)."""
-        buckets = self.lower()
+        buckets = self.lower(replan=replan)
         if not buckets:
             raise ValueError("Experiment has no specs")
         if executor is None:

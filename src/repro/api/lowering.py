@@ -42,11 +42,31 @@ index blocks are zero-padded to the bucket's ``k_pad`` and a per-row
 where padded users contribute zero weight, zero batch and are excluded
 from every parameter average — padded rows are bit-identical to solo
 unpadded runs (test-enforced).
+
+Chunked horizons (:class:`BucketRun`)
+-------------------------------------
+The phases also run *per chunk*: a bucket's horizon splits into
+``chunk``-period pieces, each planned (host), dispatched (device, with
+the engine's explicit :class:`~repro.fed.engine.EngineState` carried
+between chunks) and collected independently.  Planner state — scheduler
+rng streams / ``_b_cache`` / ``_period``, batcher rng streams, per-row
+time offsets — persists across chunks, and every chunked accumulation
+(the time ledger's seeded cumsum, the carried scan state) is arranged so
+that with ξ frozen the chunked run is **bit-identical** to the monolithic
+one (test-enforced across executors and meshes).  Because planning now
+happens *between* chunks, a bucket whose specs set ``replan=`` closes the
+Algorithm-1 loop: chunk *c*'s realized loss decays feed each row's ξ
+estimator (``observe_series``) before chunk *c+1* is planned — the
+paper's adaptive re-planning, with warm-started B* grids
+(``plan_horizons_batch(..., warm_start=True)``).  Closed-loop rows each
+own their scheduler (realized decays are per-trajectory, so the
+``_plan_key`` horizon dedup does not apply).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import Dict, List, Sequence, Tuple
+from collections import deque
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -89,9 +109,15 @@ class Bucket:
     see ``spec.bucket_key``): the plan/dispatch phases pad every row's
     user axis to :attr:`k_pad` and thread a per-row active mask, so the
     compiled shape is one (padded) family for the whole bucket.
+
+    ``replan`` is the bucket's closed-loop ξ interval (``None`` = open
+    loop): it comes from the rows' specs (structural, so all rows agree)
+    or from a run-level override, and executors must execute such a
+    bucket as ``replan``-period chunks via :class:`BucketRun`.
     """
     key: tuple
     rows: List[Row]
+    replan: Optional[int] = None
 
     @property
     def kind(self) -> str:
@@ -110,31 +136,56 @@ class Bucket:
         return mask
 
 
-def group_rows(specs: Sequence[ScenarioSpec]) -> List[Bucket]:
+def group_rows(specs: Sequence[ScenarioSpec],
+               replan: Optional[int] = None) -> List[Bucket]:
     """Flatten specs × seeds into rows, grouped into first-seen-order
     buckets by shape compatibility.
 
     Duplicate (spec, seed) pairs — the same spec declared twice —
     deduplicate onto one row carrying every output index, so an
     experiment never runs one trajectory twice.
+
+    ``replan`` overrides every FEEL-family spec's own ``replan`` for this
+    lowering (the ``Experiment.run(replan=...)`` convenience — one knob
+    for a whole grid).  Dev-family specs have no ξ loop and silently keep
+    open-loop execution, so a mixed grid accepts the override.
     """
+    if replan is not None and (not isinstance(replan, int)
+                               or isinstance(replan, bool) or replan < 1):
+        raise ValueError(
+            f"replan must be a positive int (periods per closed-loop "
+            f"chunk), got {replan!r}")
     entries: Dict[tuple, List[list]] = {}
     seen: Dict[tuple, list] = {}
+    replans: Dict[tuple, Optional[int]] = {}
     index = 0
     for spec in specs:
-        key = spec.bucket_key()
+        if spec.is_dev_scheme:
+            eff = None
+            eff_spec = spec
+        else:
+            eff = spec.replan if replan is None else replan
+            # dedup and group on the spec AS EXECUTED: under a run-level
+            # override, specs differing only in replan are one trajectory
+            eff_spec = (spec if eff == spec.replan
+                        else replace(spec, replan=eff))
+        key = eff_spec.bucket_key()
+        replans[key] = eff
         for seed in spec.seeds:
-            row_key = (spec, seed)
+            row_key = (eff_spec, seed)
             if row_key in seen:
                 seen[row_key].append(index)
             else:
+                # Row keeps the first-seen ORIGINAL spec (coords and
+                # Study.axis_coords lookups are keyed by declared specs)
                 entry = [spec, seed, [index]]
                 seen[row_key] = entry[2]
                 entries.setdefault(key, []).append(entry)
             index += 1
     return [Bucket(key=key,
                    rows=[Row(spec=s, seed=sd, indices=tuple(ix))
-                         for s, sd, ix in rows])
+                         for s, sd, ix in rows],
+                   replan=replans[key])
             for key, rows in entries.items()]
 
 
@@ -217,102 +268,171 @@ class BucketHandle:
 
     ``losses``/``accs`` are (possibly padded) device arrays whose
     computation has been *dispatched* but not necessarily finished —
-    :func:`collect_bucket` blocks and slices.
+    :func:`collect_bucket` blocks and slices.  ``decays`` (FEEL family)
+    are the realized per-period loss decays — the closed-loop ξ feedback
+    signal — and ``state`` is the engine carry after this dispatch, which
+    the chunked path resumes from without blocking.
     """
     bucket: Bucket
     losses: object               # (n+pad, P) device array
     accs: object                 # (n+pad, P) device array
     times: np.ndarray
     global_batch: np.ndarray
+    decays: object = None        # (n+pad, P) device array (feel only)
+    state: object = None         # engine.EngineState after this chunk
 
 
 # ---------------------------------------------------------------------------
-# phase 1: plan (pure host NumPy)
+# phase 1: plan (pure host NumPy) — stateful planners shared by the
+# monolithic path (one plan() covering the whole horizon) and the chunked
+# path (one plan() per chunk, rng streams / time offsets carried)
 # ---------------------------------------------------------------------------
 
 
-def _plan_feel(bucket: Bucket, data, periods: int) -> BucketPlan:
-    rows = bucket.rows
-    spec0 = rows[0].spec
-    input_dim = data.x.shape[1]
-    n_params = _n_params(spec0, input_dim)
+class _FeelPlanner:
+    """Host planning state for one FEEL bucket, resumable chunk by chunk.
 
-    # one scheduler (and one planned horizon) per unique plan key
-    plan_keys = [_plan_key(r) for r in rows]
-    unique: Dict[tuple, int] = {}
-    schedulers = []
-    for r, key in zip(rows, plan_keys):
-        if key in unique:
-            continue
-        unique[key] = len(schedulers)
-        schedulers.append(FeelScheduler(
-            devices=r.spec.fleet, n_params=n_params,
-            policy=r.spec.effective_policy, b_max=r.spec.b_max,
-            base_lr=r.spec.base_lr, compression=r.spec.compression,
-            cell_cfg=r.spec.cell, seed=r.seed))
-    planned = plan_horizons_batch(schedulers, periods)
+    ``per_row=False`` (open loop): one scheduler — and one planned
+    horizon — per unique ``_plan_key`` (scheduler-identical rows modulo
+    partition/base_lr share a plan; lr rebuilt per row).  Successive
+    ``plan()`` calls continue every rng stream and time offset, so N
+    chunked plans are bit-identical to one monolithic plan.
 
-    # per-row planning runs at the row's TRUE fleet size (identical rng
-    # streams and ledgers to a solo run); only the finished schedules are
-    # zero-padded to the bucket's K so one program fits every row
-    k_pad = bucket.k_pad
-    schedules = []
-    for r, key in zip(rows, plan_keys):
-        parts = _partition(r.spec, data, r.seed)
-        batcher = FederatedBatcher(parts, r.spec.b_max, r.seed)
-        sched = schedulers[unique[key]]
-        horizon = planned[unique[key]]
-        if r.spec.base_lr != sched.base_lr:
-            horizon = _rescale_lr(horizon, r.spec.base_lr, sched.ref_batch)
-        schedules.append(engine.pad_schedule(engine.build_schedule(
-            sched, batcher, r.spec.fleet, periods, r.spec.local_steps,
-            horizon=horizon), k_pad))
-    return BucketPlan(
-        bucket=bucket, input_dim=input_dim,
-        times=np.stack([s.times for s in schedules]),
-        global_batch=np.stack([s.global_batch for s in schedules]),
-        payload={"schedules": schedules, "active": bucket.active_mask()})
+    ``per_row=True`` (closed loop): every row owns its scheduler and ξ
+    estimator — realized decays are per-trajectory, so horizon sharing
+    would feed one EWMA from diverging series.  ``observe()`` lands chunk
+    *c*'s decays before ``plan()`` produces chunk *c+1*.
+    """
+
+    def __init__(self, bucket: Bucket, data, per_row: bool = False):
+        rows = bucket.rows
+        self.bucket = bucket
+        self.per_row = per_row
+        self.input_dim = data.x.shape[1]
+        n_params = _n_params(rows[0].spec, self.input_dim)
+
+        def make_scheduler(r: Row) -> FeelScheduler:
+            return FeelScheduler(
+                devices=r.spec.fleet, n_params=n_params,
+                policy=r.spec.effective_policy, b_max=r.spec.b_max,
+                base_lr=r.spec.base_lr, compression=r.spec.compression,
+                cell_cfg=r.spec.cell, seed=r.seed)
+
+        self.schedulers: List[FeelScheduler] = []
+        self._sched_of: List[int] = []
+        if per_row:
+            for r in rows:
+                self._sched_of.append(len(self.schedulers))
+                self.schedulers.append(make_scheduler(r))
+        else:
+            unique: Dict[tuple, int] = {}
+            for r in rows:
+                key = _plan_key(r)
+                if key not in unique:
+                    unique[key] = len(self.schedulers)
+                    self.schedulers.append(make_scheduler(r))
+                self._sched_of.append(unique[key])
+        self.batchers = [
+            FederatedBatcher(_partition(r.spec, data, r.seed),
+                             r.spec.b_max, r.seed) for r in rows]
+        self._offsets = np.zeros(len(rows))
+
+    def plan(self, periods: int, warm_start: bool = False) -> BucketPlan:
+        rows = self.bucket.rows
+        # per_row IS the closed loop: the decay-cap steer only applies
+        # once rows own their estimators (and only after feedback landed)
+        planned = plan_horizons_batch(self.schedulers, periods,
+                                      warm_start=warm_start,
+                                      closed_loop=self.per_row)
+        # per-row planning runs at the row's TRUE fleet size (identical
+        # rng streams and ledgers to a solo run); only the finished
+        # schedules are zero-padded to the bucket's K so one program fits
+        # every row
+        k_pad = self.bucket.k_pad
+        schedules = []
+        for i, r in enumerate(rows):
+            sched = self.schedulers[self._sched_of[i]]
+            horizon = planned[self._sched_of[i]]
+            if r.spec.base_lr != sched.base_lr:
+                horizon = _rescale_lr(horizon, r.spec.base_lr,
+                                      sched.ref_batch)
+            s = engine.build_schedule(
+                sched, self.batchers[i], r.spec.fleet, periods,
+                r.spec.local_steps, horizon=horizon,
+                time_offset=float(self._offsets[i]))
+            self._offsets[i] = s.times[-1]
+            schedules.append(engine.pad_schedule(s, k_pad))
+        return BucketPlan(
+            bucket=self.bucket, input_dim=self.input_dim,
+            times=np.stack([s.times for s in schedules]),
+            global_batch=np.stack([s.global_batch for s in schedules]),
+            payload={"schedules": schedules,
+                     "active": self.bucket.active_mask()})
+
+    def observe(self, decays: np.ndarray, global_batch: np.ndarray):
+        """Feed one collected chunk's realized per-period loss decays —
+        (n, P_c) row-major — into each row's ξ estimator."""
+        assert self.per_row, "closed-loop feedback needs per-row schedulers"
+        for i in range(len(self.bucket.rows)):
+            self.schedulers[i].observe_series(decays[i], global_batch[i])
 
 
-def _plan_dev(bucket: Bucket, data, periods: int) -> BucketPlan:
-    rows = bucket.rows
-    spec0 = rows[0].spec
-    input_dim = data.x.shape[1]
-    n_params = _n_params(spec0, input_dim)
-    batch = spec0.dev_epoch_batch
-    k_pad = bucket.k_pad
+class _DevPlanner:
+    """Host planning state for one dev-family bucket (chunk-resumable;
+    no ξ loop — ``observe`` does not exist by design)."""
 
-    horizons = []
-    for r in rows:
-        parts = _partition(r.spec, data, r.seed)
-        sched = DevScheduler(
-            devices=r.spec.fleet, parts=parts, batch=batch,
-            # model-based FL uploads the raw parameters: d·p bits
-            payload_bits=32.0 * n_params,
-            upload=(r.spec.scheme == "model_fl"),
-            seed=r.seed, cell=Cell.make(r.seed, r.spec.cell))
-        horizons.append(sched.plan_horizon(periods))
-    n = len(rows)
-    # rows plan at their true K; pad idx user rows with index 0 (the
-    # active mask keeps those devices out of every parameter average)
-    idx = np.zeros((n, periods, k_pad, batch), np.int64)
-    for i, (r, h) in enumerate(zip(rows, horizons)):
-        idx[i, :, :r.spec.k] = h.idx
-    return BucketPlan(
-        bucket=bucket, input_dim=input_dim,
-        times=np.stack([h.times for h in horizons]),
-        global_batch=np.stack([
-            np.full(periods, batch * r.spec.k, np.int64) for r in rows]),
-        payload={"idx": idx,
-                 "lr": np.array([r.spec.base_lr for r in rows],
-                                np.float32),
-                 "active": bucket.active_mask()})
+    def __init__(self, bucket: Bucket, data, per_row: bool = False):
+        rows = bucket.rows
+        spec0 = rows[0].spec
+        self.bucket = bucket
+        self.input_dim = data.x.shape[1]
+        self.batch = spec0.dev_epoch_batch
+        n_params = _n_params(spec0, self.input_dim)
+        self.schedulers = [
+            DevScheduler(
+                devices=r.spec.fleet, parts=_partition(r.spec, data, r.seed),
+                batch=self.batch,
+                # model-based FL uploads the raw parameters: d·p bits
+                payload_bits=32.0 * n_params,
+                upload=(r.spec.scheme == "model_fl"),
+                seed=r.seed, cell=Cell.make(r.seed, r.spec.cell))
+            for r in rows]
+        self._offsets = np.zeros(len(rows))
+
+    def plan(self, periods: int, warm_start: bool = False) -> BucketPlan:
+        rows = self.bucket.rows
+        k_pad = self.bucket.k_pad
+        horizons = []
+        for i, s in enumerate(self.schedulers):
+            h = s.plan_horizon(periods, time_offset=float(self._offsets[i]))
+            self._offsets[i] = h.times[-1]
+            horizons.append(h)
+        n = len(rows)
+        # rows plan at their true K; pad idx user rows with index 0 (the
+        # active mask keeps those devices out of every parameter average)
+        idx = np.zeros((n, periods, k_pad, self.batch), np.int64)
+        for i, (r, h) in enumerate(zip(rows, horizons)):
+            idx[i, :, :r.spec.k] = h.idx
+        return BucketPlan(
+            bucket=self.bucket, input_dim=self.input_dim,
+            times=np.stack([h.times for h in horizons]),
+            global_batch=np.stack([
+                np.full(periods, self.batch * r.spec.k, np.int64)
+                for r in rows]),
+            payload={"idx": idx,
+                     "lr": np.array([r.spec.base_lr for r in rows],
+                                    np.float32),
+                     "active": self.bucket.active_mask()})
+
+
+def _make_planner(bucket: Bucket, data, per_row: bool = False):
+    cls = _FeelPlanner if bucket.kind == "feel" else _DevPlanner
+    return cls(bucket, data, per_row=per_row)
 
 
 def plan_bucket(bucket: Bucket, data, periods: int) -> BucketPlan:
     """Host-side planning for one bucket (no device work dispatched)."""
-    planner = _plan_feel if bucket.kind == "feel" else _plan_dev
-    return planner(bucket, data, periods)
+    return _make_planner(bucket, data).plan(periods)
 
 
 # ---------------------------------------------------------------------------
@@ -320,62 +440,74 @@ def plan_bucket(bucket: Bucket, data, periods: int) -> BucketPlan:
 # ---------------------------------------------------------------------------
 
 
-def _dispatch_feel(plan: BucketPlan, data, test, mesh) -> BucketHandle:
+def _dispatch_feel(plan: BucketPlan, data, test, mesh,
+                   state=None) -> BucketHandle:
     rows = plan.bucket.rows
     spec0 = rows[0].spec
     schedules = plan.payload["schedules"]
     active = plan.payload["active"]
     k_pad = plan.bucket.k_pad
 
-    params0 = _init_params_batch(rows, plan.input_dim)
-    residual0 = tree_map(
-        lambda p: jnp.zeros((p.shape[0], k_pad) + p.shape[1:], p.dtype),
-        params0)
-
     n = len(rows)
     pad = 0 if mesh is None else pad_batch(n, mesh)
+    if state is None:
+        params0 = _init_params_batch(rows, plan.input_dim)
+        residual0 = tree_map(
+            lambda p: jnp.zeros((p.shape[0], k_pad) + p.shape[1:], p.dtype),
+            params0)
+        if pad:
+            params0, residual0 = _pad_rows((params0, residual0), n, pad)
+        state = engine.EngineState(params=params0, residual=residual0)
     if pad:
-        params0, residual0, active = _pad_rows(
-            (params0, residual0, active), n, pad)
+        active = _pad_rows(active, n, pad)
         schedules = [schedules[i % n] for i in range(n + pad)]
-    _, _, (losses, accs, _) = engine.run_trajectory_batch(
-        params0, residual0, schedules, data, test,
+    state, (losses, accs, decays) = engine.resume_trajectory_batch(
+        state, schedules, data, test,
         local_steps=spec0.local_steps, compress=spec0.compress,
         ratio=spec0.compression, mesh=mesh, active=active)
     return BucketHandle(bucket=plan.bucket, losses=losses, accs=accs,
-                        times=plan.times, global_batch=plan.global_batch)
+                        times=plan.times, global_batch=plan.global_batch,
+                        decays=decays, state=state)
 
 
-def _dispatch_dev(plan: BucketPlan, data, test, mesh) -> BucketHandle:
+def _dispatch_dev(plan: BucketPlan, data, test, mesh,
+                  state=None) -> BucketHandle:
     rows = plan.bucket.rows
     spec0 = rows[0].spec
     k_pad = plan.bucket.k_pad
-
-    p0 = _init_params_batch(rows, plan.input_dim)
-    dev_params0 = tree_map(
-        lambda a: jnp.broadcast_to(
-            a[:, None], (a.shape[0], k_pad) + a.shape[1:]), p0)
     idx, lr = plan.payload["idx"], plan.payload["lr"]
     active = plan.payload["active"]
 
     n = len(rows)
     pad = 0 if mesh is None else pad_batch(n, mesh)
+    if state is None:
+        p0 = _init_params_batch(rows, plan.input_dim)
+        dev_params0 = tree_map(
+            lambda a: jnp.broadcast_to(
+                a[:, None], (a.shape[0], k_pad) + a.shape[1:]), p0)
+        if pad:
+            dev_params0 = _pad_rows(dev_params0, n, pad)
+        state = engine.EngineState(params=dev_params0)
     if pad:
-        dev_params0, idx, lr, active = _pad_rows(
-            (dev_params0, idx, lr, active), n, pad)
-    _, (losses, accs) = engine.run_dev_trajectory_batch(
-        dev_params0, idx, lr, data, test,
+        idx, lr, active = _pad_rows((idx, lr, active), n, pad)
+    state, (losses, accs) = engine.resume_dev_trajectory_batch(
+        state, idx, lr, data, test,
         average=(spec0.scheme == "model_fl"), mesh=mesh, active=active)
     return BucketHandle(bucket=plan.bucket, losses=losses, accs=accs,
-                        times=plan.times, global_batch=plan.global_batch)
+                        times=plan.times, global_batch=plan.global_batch,
+                        state=state)
 
 
-def dispatch_bucket(plan: BucketPlan, data, test, mesh=None) -> BucketHandle:
+def dispatch_bucket(plan: BucketPlan, data, test, mesh=None,
+                    state=None) -> BucketHandle:
     """Enqueue one planned bucket's device program; returns immediately
-    with in-flight device values (jax dispatch is asynchronous)."""
+    with in-flight device values (jax dispatch is asynchronous).
+
+    ``state`` resumes from a previous chunk's engine carry (chunked
+    horizons); ``None`` initializes a fresh trajectory."""
     dispatcher = (_dispatch_feel if plan.bucket.kind == "feel"
                   else _dispatch_dev)
-    return dispatcher(plan, data, test, mesh)
+    return dispatcher(plan, data, test, mesh, state=state)
 
 
 # ---------------------------------------------------------------------------
@@ -391,3 +523,144 @@ def collect_bucket(handle: BucketHandle):
     losses = np.asarray(handle.losses)[:n]
     accs = np.asarray(handle.accs)[:n]
     return losses, accs, handle.times, handle.global_batch
+
+
+# ---------------------------------------------------------------------------
+# chunked horizons: the per-chunk phase loop as a resumable state machine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BucketRun:
+    """Chunked, resumable execution of one bucket — the intra-bucket
+    pipeline.
+
+    The horizon splits into ``chunk``-period pieces; each piece runs the
+    plan → dispatch → collect phases with all host state (scheduler /
+    batcher rng streams, time offsets) and device state (the engine's
+    :class:`~repro.fed.engine.EngineState` carry) threaded through.  The
+    executor composes three operations:
+
+    * :meth:`advance` — plan the next chunk (host NumPy) and dispatch its
+      device program (non-blocking).  Because jax dispatch is
+      asynchronous, calling ``advance`` while the previous chunk is still
+      executing overlaps chunk *c+1*'s bisections and channel Monte-Carlo
+      behind chunk *c*'s device work.
+    * :meth:`collect` — block on the oldest in-flight chunk and bank its
+      series.  When the bucket is closed-loop (``bucket.replan``), this is
+      also where the chunk's realized loss decays feed every row's ξ
+      estimator — so the *next* ``advance`` re-plans Algorithm 1 with the
+      updated estimate (warm-started B* grids).
+    * :attr:`can_advance` — scheduling guard: closed-loop buckets must
+      collect chunk *c* before planning chunk *c+1* (the feedback is the
+      point); open-loop buckets may run arbitrarily far ahead.
+
+    With ξ frozen (open loop) any chunk size — and any interleaving of
+    ``advance``/``collect`` the guard admits — is bit-identical to the
+    monolithic three-phase path (test-enforced).
+    """
+    bucket: Bucket
+    data: object
+    test: object
+    periods: int
+    chunk: int
+    mesh: object = None
+    planned: int = 0
+    dispatched: int = 0
+    collected: int = 0
+    _planner: object = None
+    _state: object = None
+    _pending: deque = field(default_factory=deque)
+    _chunks: list = field(default_factory=list)
+    _decays: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        self.chunk = min(self.chunk, self.periods)
+        self.closed_loop = (self.bucket.replan is not None
+                            and self.bucket.kind == "feel")
+        self._planner = _make_planner(self.bucket, self.data,
+                                      per_row=self.closed_loop)
+
+    @property
+    def done(self) -> bool:
+        return self.collected >= self.periods
+
+    @property
+    def can_advance(self) -> bool:
+        """Whether the next chunk can be planned+dispatched right now
+        (without a blocking collect first)."""
+        if self.dispatched >= self.periods:
+            return False
+        return not (self.closed_loop and self._pending)
+
+    def advance(self) -> None:
+        """Plan and dispatch the next chunk (host work + async enqueue)."""
+        if not self.can_advance:
+            raise RuntimeError(
+                "cannot advance: horizon fully dispatched, or a "
+                "closed-loop chunk awaits collection")
+        p_c = min(self.chunk, self.periods - self.planned)
+        warm = self.closed_loop and self.planned > 0
+        plan = self._planner.plan(p_c, warm_start=warm)
+        self.planned += p_c
+        handle = dispatch_bucket(plan, self.data, self.test,
+                                 mesh=self.mesh, state=self._state)
+        self._state = handle.state
+        self._pending.append((p_c, handle))
+        self.dispatched += p_c
+
+    def collect(self) -> None:
+        """Block on the oldest in-flight chunk; bank its host series and
+        (closed loop) feed its realized decays to the ξ estimators."""
+        if not self._pending:
+            raise RuntimeError("no chunk in flight to collect")
+        p_c, handle = self._pending.popleft()
+        n = len(self.bucket.rows)
+        losses = np.asarray(handle.losses)[:n]
+        accs = np.asarray(handle.accs)[:n]
+        if self.closed_loop:
+            decays = np.asarray(handle.decays)[:n]
+            self._decays.append(decays)
+            self._planner.observe(decays, handle.global_batch)
+        self._chunks.append((losses, accs, handle.times,
+                             handle.global_batch))
+        self.collected += p_c
+
+    @property
+    def realized_decays(self) -> Optional[np.ndarray]:
+        """(n, collected) realized per-period loss decays banked so far
+        (closed-loop runs only — ``None`` open loop)."""
+        if not self._decays:
+            return None
+        return np.concatenate(self._decays, axis=1)
+
+    def result(self):
+        """The full-horizon ``(losses, accs, times, global_batch)`` —
+        chunk series concatenated along the period axis."""
+        if not self.done:
+            raise RuntimeError(
+                f"bucket not fully collected: {self.collected} of "
+                f"{self.periods} periods")
+        return tuple(np.concatenate([c[j] for c in self._chunks], axis=1)
+                     for j in range(4))
+
+    def run_serial(self):
+        """The reference schedule: strictly plan → dispatch → collect one
+        chunk at a time.  Returns :meth:`result`."""
+        while not self.done:
+            if self.can_advance:
+                self.advance()
+            self.collect()
+        return self.result()
+
+    def drain(self):
+        """Finish the bucket with maximal plan-ahead: dispatch whatever
+        the closed-loop guard admits, collect otherwise.  Returns
+        :meth:`result`."""
+        while not self.done:
+            while self.can_advance:
+                self.advance()
+            self.collect()
+        return self.result()

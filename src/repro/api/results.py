@@ -68,6 +68,7 @@ class Results:
     times: np.ndarray                  # (rows, periods) cumulative seconds
     global_batch: np.ndarray           # (rows, periods)
     n_buckets: int = 1                 # compiled programs this run lowered to
+    complete: bool = True              # False for streamed partials
 
     @property
     def rows(self) -> int:
@@ -99,6 +100,17 @@ class Results:
         *equality*, not membership — ``sel(seeds=(0, 1))`` selects the
         rows swept with exactly that seed set; wrap it in a list
         (``sel(seeds=[(0, 1), (2, 3)])``) for membership.
+
+        Fails loudly instead of returning silently-empty selections: an
+        unknown coordinate name raises ``KeyError``, and a value that
+        matches no row of its own column (out-of-grid — e.g. a radius
+        that was never swept, a typo'd policy) raises ``ValueError``.  An
+        empty *intersection* of individually-valid values is still a
+        legitimate (empty) selection — and so is any no-match selection
+        on a streamed *partial* (``complete=False``): a valid value whose
+        bucket simply hasn't collected yet must not crash the stream
+        consumer, so partials return the empty selection instead of
+        raising.
         """
         mask = np.ones(self.rows, bool)
         for name, want in coords.items():
@@ -108,17 +120,23 @@ class Results:
             col = self.coords[name]
             if isinstance(want, tuple) and \
                     any(isinstance(c, tuple) for c in col):
-                mask &= np.array([c == want for c in col], bool)
+                here = np.array([c == want for c in col], bool)
             elif isinstance(want, (list, tuple, set, frozenset,
                                    np.ndarray)):
-                mask &= np.array([c in want for c in col], bool)
+                here = np.array([c in want for c in col], bool)
             else:
-                mask &= np.asarray(col == want, bool)
+                here = np.asarray(col == want, bool)
+            if not here.any() and self.complete:
+                raise ValueError(
+                    f"sel({name}={want!r}) matches no row: value not in "
+                    f"this Results' {name!r} coordinate "
+                    f"(have {tuple(dict.fromkeys(col.tolist()))!r})")
+            mask &= here
         return Results(
             coords={k: v[mask] for k, v in self.coords.items()},
             losses=self.losses[mask], accs=self.accs[mask],
             times=self.times[mask], global_batch=self.global_batch[mask],
-            n_buckets=self.n_buckets)
+            n_buckets=self.n_buckets, complete=self.complete)
 
     def unique(self, name: str) -> Tuple:
         """Unique values of one coordinate, first-seen (row) order —
@@ -187,7 +205,8 @@ class ResultsBuilder:
         return Results(
             coords={k: v[sel] for k, v in self.coords.items()},
             losses=stack[0], accs=stack[1], times=stack[2],
-            global_batch=stack[3], n_buckets=self.n_buckets)
+            global_batch=stack[3], n_buckets=self.n_buckets,
+            complete=self.collected_rows == self.n_rows)
 
     def build(self) -> Results:
         """The complete ``Results``; raises if any bucket is missing."""

@@ -22,7 +22,11 @@ trajectory matches:
   shapes;
 * ``local_steps``, ``compress`` and ``compression`` — scan-body structure
   (static python branching / top-k fraction inside the jitted step);
-* model architecture (``hidden``, ``depth``) — parameter pytree shapes.
+* model architecture (``hidden``, ``depth``) — parameter pytree shapes;
+* ``replan`` (FEEL family) — the closed-loop ξ re-plan interval: the
+  horizon executes as ``replan``-period chunked scans with estimator
+  feedback between chunks, and every row of a bucket must chunk on the
+  same boundary.
 
 The fleet is deliberately NOT part of the key: fleet size and composition
 are *sweepable* axes, not structural ones.  The lowering pads every
@@ -42,7 +46,7 @@ differing in those still share one bucket and one trace.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
@@ -73,6 +77,7 @@ class ScenarioSpec:
     seeds: Tuple[int, ...] = (0,)
     hidden: int = 256
     depth: int = 3
+    replan: Optional[int] = None         # closed-loop ξ re-plan interval
 
     def __post_init__(self):
         object.__setattr__(self, "fleet", tuple(self.fleet))
@@ -86,6 +91,17 @@ class ScenarioSpec:
                 f"policy {self.policy!r} not in {tuple(POLICIES)}")
         if not self.seeds:
             raise ValueError("seeds must be non-empty")
+        if self.replan is not None:
+            if self.is_dev_scheme:
+                raise ValueError(
+                    "replan= is the FEEL family's closed-loop ξ interval; "
+                    f"the {self.scheme!r} scheme has no batchsize policy "
+                    "to re-plan")
+            if not isinstance(self.replan, int) or \
+                    isinstance(self.replan, bool) or self.replan < 1:
+                raise ValueError(
+                    f"replan must be a positive int (periods per "
+                    f"closed-loop chunk), got {self.replan!r}")
 
     # ---- derived lowering attributes -------------------------------------
     @property
@@ -128,13 +144,19 @@ class ScenarioSpec:
         jitted step); with compression off it affects nothing but the
         *planned* payload bits, so compress-off specs merge regardless of
         ratio — a ``grid(base, compression=[...], compress=[True,
-        False])`` ablation costs one program for the whole off column."""
+        False])`` ablation costs one program for the whole off column.
+
+        ``replan`` is structural for the FEEL family: a closed-loop spec
+        executes its horizon as ``replan``-period chunked scans (the chunk
+        boundary is where ξ feedback lands), and a bucket's rows must
+        chunk together — one device program per chunk covers the whole
+        bucket."""
         if self.is_dev_scheme:
             return ("dev", self.scheme, self.dev_epoch_batch,
                     self.hidden, self.depth)
         return ("feel", self.b_max, self.local_steps,
                 self.compress, self.compression if self.compress else None,
-                self.hidden, self.depth)
+                self.hidden, self.depth, self.replan)
 
 
 jax.tree_util.register_static(ScenarioSpec)

@@ -32,14 +32,46 @@ def lr_scale(base_lr: float, global_batch: float, ref_batch: float) -> float:
 
 @dataclass
 class XiEstimator:
-    """EWMA estimate of ξ from observed per-period loss decays."""
+    """EWMA estimate of ξ from observed per-period loss decays.
+
+    A scalar ξ is *decision-inert* for Algorithm 1: the fixed-B
+    subproblems depend on ΔL only through the products ΔL·E and ΔL·μ
+    (which the frame/batch constraints pin jointly — the allocation for a
+    given B is the same at any ξ), and the outer search minimizes
+    T(B)/(ξ√B) whose argmin drops ξ.  So re-estimating ξ alone can never
+    change a plan; it only calibrates predicted-efficiency reporting.
+
+    What realized decays *can* teach the planner is where the √B credit
+    stops being supported: per-period decay saturates once B exceeds the
+    task's useful batch (and as training converges), while the model
+    extrapolates ξ√B forever.  ``delta`` tracks the realized per-period
+    decay (same EWMA), and :meth:`decay_cap` exposes ``cap_headroom·δ̂``
+    as a ceiling on the decay the planner may credit to *any* candidate
+    B — the closed-loop chunked path plans with
+    ΔL_eff(B) = min(ξ√B, cap), which clips oversized B* precisely when
+    the extrapolation is unsupported and reduces to the paper's model
+    otherwise (cap is ``None`` until feedback arrives).
+    """
     xi: float = 0.05
     beta: float = 0.9
+    cap_headroom: float = 2.0
+    delta: float = field(default=float("nan"))
     _n: int = field(default=0)
 
     def update(self, observed_decay: float, global_batch: float) -> float:
         if global_batch > 0 and np.isfinite(observed_decay):
             sample = max(observed_decay, 0.0) / np.sqrt(global_batch)
             self.xi = self.beta * self.xi + (1 - self.beta) * sample
+            d = max(observed_decay, 0.0)
+            self.delta = (d if not np.isfinite(self.delta)
+                          else self.beta * self.delta + (1 - self.beta) * d)
             self._n += 1
         return self.xi
+
+    @property
+    def decay_cap(self):
+        """ΔL ceiling for closed-loop planning, or ``None`` before any
+        feedback (the open-loop model, uncapped)."""
+        if not np.isfinite(self.delta):
+            return None
+        return self.cap_headroom * self.delta

@@ -99,14 +99,34 @@ class FeelScheduler:
         for d, g in zip(loss_decays, global_batches):
             self.xi_est.update(float(d), float(g))
 
-    def plan_horizon(self, periods: int) -> PlanHorizon:
+    def plan_horizon(self, periods: int, warm_start: bool = False,
+                     closed_loop: bool = False) -> PlanHorizon:
         """Plan ``periods`` consecutive periods open-loop and stack them.
 
         Channel fading is re-drawn per period (same rng stream as repeated
         ``plan()`` calls); ξ is frozen at its current estimate for the whole
         horizon instead of drifting with realized decays — the paper treats
         ξ as a known constant, and this is what makes the trajectory
-        pre-plannable and therefore scan/vmap-compilable.
+        pre-plannable and therefore scan/vmap-compilable.  Closed-loop
+        callers (chunked re-planning, ``api.lowering.BucketRun``) call this
+        once per chunk with ``observe_series`` feedback in between — the
+        chunked calls consume the same rng streams and, with ξ untouched,
+        stay bit-identical to one monolithic call (test-enforced).
+
+        ``warm_start`` narrows the outer B* candidate grid around the
+        previous solution (``_b_cache``) — re-planning chunk *c+1* rarely
+        moves B* far from chunk *c*'s optimum, so the warm grid is denser
+        where it matters and ~3x cheaper.  It changes which candidates are
+        evaluated, so it is opt-in and only the closed-loop path (whose
+        results carry no bit-identity contract) enables it.
+
+        ``closed_loop`` lets the realized-decay feedback actually steer
+        B*: a scalar ξ cancels from every Algorithm-1 decision (see
+        :class:`repro.core.efficiency.XiEstimator`), so the estimator's
+        ``decay_cap`` — "credit no candidate more per-period decay than
+        recently realized" — is applied to the outer B* search.  Off (the
+        default, and always before any feedback has arrived) the planner
+        is exactly the paper's open-loop model.
 
         The proposed policy routes through the lockstep-vectorized solver
         (one batched bisection for the whole horizon instead of P scalar
@@ -114,7 +134,8 @@ class FeelScheduler:
         per-period closed forms.
         """
         if self.policy == "proposed":
-            return self._plan_horizon_proposed(periods)
+            return self._plan_horizon_proposed(periods, warm_start,
+                                               closed_loop)
         if self.policy in ("online", "full", "random"):
             return self._plan_horizon_fixed(periods)
         plans = [self.plan() for _ in range(periods)]
@@ -160,7 +181,8 @@ class FeelScheduler:
             lr=self.base_lr * np.sqrt(gb / self.ref_batch),
             latency=latency, global_batch=gb.astype(np.int64))
 
-    def _plan_horizon_proposed(self, periods: int) -> PlanHorizon:
+    def _plan_horizon_proposed(self, periods: int, warm_start: bool = False,
+                               closed_loop: bool = False) -> PlanHorizon:
         from repro.core.solver import optimize_batch_rows, solve_period_rows
         c = self.cell.cfg
         K = len(self.devices)
@@ -176,10 +198,17 @@ class FeelScheduler:
         B = np.empty(periods)
         carry = self._b_cache
         if reopt.any():
+            warm = warm_start and self._b_cache is not None
+            b_prev = (np.full(int(reopt.sum()), self._b_cache)
+                      if warm else None)
+            cap = self.xi_est.decay_cap if closed_loop else None
             b_star = optimize_batch_rows(
                 self.devices, rates_up[reopt], rates_down[reopt],
                 self.payload_bits, c.frame_up_s, c.frame_down_s, xi,
-                self.b_max)
+                self.b_max, b_prev=b_prev,
+                n_candidates=33 if warm else 97,
+                dl_cap=(None if cap is None
+                        else np.full(int(reopt.sum()), cap)))
             j = 0
             for p in range(periods):
                 if reopt[p]:
@@ -233,11 +262,18 @@ class FeelScheduler:
 
 
 def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
-                        periods: int) -> List[PlanHorizon]:
+                        periods: int, warm_start: bool = False,
+                        closed_loop: bool = False) -> List[PlanHorizon]:
     """Plan many schedulers' horizons with proposed-policy rows fused —
     across fleets of ANY size or composition.
 
-    Bit-identical to ``[s.plan_horizon(periods) for s in schedulers]``:
+    ``warm_start`` and ``closed_loop`` forward to every proposed-policy
+    solve (see :meth:`FeelScheduler.plan_horizon`): chunked closed-loop
+    re-planning narrows each reopt period's B* candidate grid around that
+    scheduler's previous solution and caps the decay credited to any
+    candidate at the scheduler's realized-decay ceiling.  Off (the
+    default), planning is bit-identical to
+    ``[s.plan_horizon(periods) for s in schedulers]``:
     each scheduler's own rng streams are consumed in exactly the per-call
     order, but Algorithm-1 / Theorem-2 bisections for every proposed-policy
     scheduler that shares (payload, frames, b_max) run as ONE lockstep
@@ -264,7 +300,9 @@ def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
     for key, idxs in groups.items():
         if len(idxs) == 1:
             i = idxs[0]
-            out[i] = schedulers[i].plan_horizon(periods)
+            out[i] = schedulers[i].plan_horizon(periods,
+                                                warm_start=warm_start,
+                                                closed_loop=closed_loop)
             continue
         scheds = [schedulers[i] for i in idxs]
         s0 = scheds[0]
@@ -290,10 +328,28 @@ def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
         B = np.empty((M, P))
         if reopt.any():
             rf = reopt.reshape(M * P)
+            b_prev = None
+            n_cand = 97
+            if warm_start:
+                # per-scheduler previous-solution hints (NaN = cold row)
+                prev = np.repeat(np.array(
+                    [np.nan if s._b_cache is None else s._b_cache
+                     for s in scheds]), P)[rf]
+                if np.isfinite(prev).any():
+                    b_prev = prev
+                    n_cand = 33
+            dl_cap = None
+            if closed_loop:
+                caps = np.repeat(np.array(
+                    [np.inf if s.xi_est.decay_cap is None
+                     else s.xi_est.decay_cap for s in scheds]), P)[rf]
+                if np.isfinite(caps).any():
+                    dl_cap = caps
             b_star = optimize_batch_rows(
                 flat_fleets.take(rf), flat_up[rf], flat_down[rf],
                 s0.payload_bits, c.frame_up_s, c.frame_down_s, xi_rows[rf],
-                s0.b_max)
+                s0.b_max, b_prev=b_prev, n_candidates=n_cand,
+                dl_cap=dl_cap)
             j = 0
             for m, s in enumerate(scheds):
                 carry = s._b_cache
@@ -380,7 +436,12 @@ class DevScheduler:
         self.rng = np.random.default_rng(self.seed)
         self._dist_km = self.cell.drop_users(len(self.parts))
 
-    def plan_horizon(self, periods: int) -> DevHorizon:
+    def plan_horizon(self, periods: int,
+                     time_offset: float = 0.0) -> DevHorizon:
+        """``time_offset`` seeds the cumulative time axis (chunked
+        horizons accumulate *from* the offset — the seeded cumsum is the
+        only form bit-identical to the monolithic ledger; 0.0 degenerates
+        to the plain cumsum bitwise)."""
         K = len(self.parts)
         c = self.cell.cfg
         idx = np.empty((periods, K, self.batch), np.int64)
@@ -407,6 +468,7 @@ class DevScheduler:
                           + (t_down + t_upd).max(1))
         else:
             per_period = np.full(periods, t_local.max())
-        return DevHorizon(idx=idx, times=np.cumsum(per_period),
+        times = np.cumsum(np.concatenate([[time_offset], per_period]))[1:]
+        return DevHorizon(idx=idx, times=times,
                           tau_up=tau_u, tau_down=tau_d,
                           rates_up=rates_up, rates_down=rates_down)

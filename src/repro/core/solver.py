@@ -559,7 +559,8 @@ def optimize_batch_rows(devices,
                         rates_up: np.ndarray, rates_down: np.ndarray,
                         s_bits: float, frame_up: float, frame_down: float,
                         xi, b_max: int,
-                        n_candidates: int = 97) -> np.ndarray:
+                        n_candidates: int = 97,
+                        b_prev=None, dl_cap=None) -> np.ndarray:
     """Outer 𝒫₁ for M rows at once: integer-grid argmin of E^U*+E^D* over B
     (the golden-section's job, but every row and every candidate evaluated
     in one lockstep solve; B is rounded to an integer downstream anyway).
@@ -569,11 +570,34 @@ def optimize_batch_rows(devices,
     and hi bounds scale with the row's active users); rows with narrower
     grids repeat their last candidate so the lockstep solve stays
     rectangular — a repeated candidate ties its original and argmin keeps
-    the first, so padding never changes a row's argmin."""
+    the first, so padding never changes a row's argmin.
+
+    ``b_prev`` (optional (M,) array, NaN = no hint) warm-starts a row's
+    grid from a previous solution: the candidates span
+    ``[b_prev/2, 2·b_prev]`` (clipped to the row's feasible range, falling
+    back to the full range when the hint is stale/outside it) — chunked
+    closed-loop re-planning pairs this with a reduced ``n_candidates``
+    because B* moves slowly between consecutive chunks.
+
+    ``dl_cap`` (optional (M,) array, NaN/inf = uncapped) caps the loss
+    decay credited to a candidate: the selection objective becomes
+    T_pred(B)/min(ξ√B, cap) instead of T_pred(B)/(ξ√B).  A scalar ξ
+    cancels from the uncapped argmin (see
+    :class:`repro.core.efficiency.XiEstimator`), so the cap is the term
+    that makes closed-loop feedback decision-relevant: candidates whose
+    √B extrapolation out-promises realized decay stop being credited and
+    B* falls back to the knee (cap/ξ)².  Only the argmin changes — the
+    per-B allocation (Theorem 1/2) is ΔL-scale-invariant and stays
+    exactly the paper's."""
     M = rates_up.shape[0]
     fr = as_fleet_rows(devices, M)
     lo_rows = _ssum(np.where(fr.active, fr.lo, 0.0))
     hi_rows = fr.k_active * b_max
+    if b_prev is not None:
+        hint = np.broadcast_to(np.asarray(b_prev, float), (M,))
+        ok = np.isfinite(hint) & (hint >= lo_rows) & (hint <= hi_rows)
+        lo_rows = np.where(ok, np.maximum(lo_rows, hint / 2.0), lo_rows)
+        hi_rows = np.where(ok, np.minimum(hi_rows, hint * 2.0), hi_rows)
     per_row = [np.unique(np.round(np.linspace(lo_rows[m], hi_rows[m],
                                               n_candidates)))
                for m in range(M)]
@@ -585,7 +609,15 @@ def optimize_batch_rows(devices,
         fr.repeat(C), np.repeat(rates_up, C, axis=0),
         np.repeat(rates_down, C, axis=0), s_bits, frame_up, frame_down,
         np.repeat(xi_rows, C), cand.reshape(-1), b_max)
-    best = np.argmin(sol["e_total"].reshape(M, C), axis=1)
+    obj = sol["e_total"].reshape(M, C)
+    if dl_cap is not None:
+        cap = np.broadcast_to(np.asarray(dl_cap, float), (M,))[:, None]
+        cap = np.where(np.isfinite(cap) & (cap > 0), cap, np.inf)
+        # e_total = T_pred/ΔL with ΔL = ξ√B; re-denominate by the capped
+        # decay so over-promising candidates stop looking efficient
+        dl = xi_rows[:, None] * np.sqrt(cand)
+        obj = obj * dl / np.minimum(dl, cap)
+    best = np.argmin(obj, axis=1)
     return cand[np.arange(M), best]
 
 

@@ -19,6 +19,16 @@ module compiles the whole trajectory into ONE jitted program:
 treatment of ξ) and is applied post-hoc from the realized decay series, so
 the trajectory is a pure function of the pre-generated schedule — which is
 exactly what makes it scan-compilable and vmap-able.
+
+The scan is *resumable*: the carry is an explicit :class:`EngineState`
+(params + SBC residuals for the FEEL family, per-device params for the
+dev family) that every ``run_*`` function accepts in and hands back out,
+so a horizon may run as N chunked scans — each consuming one slice of the
+schedule — bit-identical to one monolithic scan (the per-period step is a
+pure function of carry and inputs, and ``lax.scan`` never re-associates
+across steps; test-enforced).  That is what lets ``api.lowering`` plan
+chunk *c+1* while chunk *c* executes, and re-plan with a ξ estimate
+updated from chunk *c*'s realized decays (closed-loop Algorithm 1).
 """
 from __future__ import annotations
 
@@ -81,8 +91,37 @@ class Schedule:
         }
 
 
+def slice_schedule(schedule: Schedule, lo: int, hi: int) -> Schedule:
+    """The ``[lo, hi)`` period window of a schedule (chunked execution).
+
+    ``times`` keeps its absolute cumulative values — a sliced schedule's
+    ledger is the matching window of the monolithic ledger, so chunked
+    results concatenate back bit-identically.
+    """
+    return Schedule(idx=schedule.idx[lo:hi], weight=schedule.weight[lo:hi],
+                    batch=schedule.batch[lo:hi], lr=schedule.lr[lo:hi],
+                    times=schedule.times[lo:hi],
+                    global_batch=schedule.global_batch[lo:hi])
+
+
+@dataclass
+class EngineState:
+    """Explicit scan carry, in and out of every trajectory function.
+
+    ``params`` are the global model parameters (FEEL family) or the
+    per-device parameter stacks (dev family, where ``residual`` stays
+    ``None``); ``residual`` is the SBC error-feedback state.  Leaves are
+    (possibly batched, possibly sharded) device arrays and may still be
+    in flight — resuming a scan from an uncollected state is exactly how
+    chunked dispatch pipelines without host round-trips.
+    """
+    params: object
+    residual: object = None
+
+
 def build_schedule(scheduler, batcher, devices, periods: int,
-                   local_steps: int = 1, horizon=None) -> Schedule:
+                   local_steps: int = 1, horizon=None,
+                   time_offset: float = 0.0) -> Schedule:
     """Pre-generate one run's plans, sample indices and time axis.
 
     Consumes the scheduler/batcher rng streams in the same per-period order
@@ -90,6 +129,11 @@ def build_schedule(scheduler, batcher, devices, periods: int,
     fresh simulation reproduces the seed's sampling sequence exactly.
     ``horizon`` short-circuits planning when the caller already planned it
     (e.g. ``core.scheduler.plan_horizons_batch`` across a whole bucket).
+    ``time_offset`` seeds the cumulative time axis for chunked horizons:
+    the cumsum accumulates *from* the offset (not adds it afterwards —
+    float addition is non-associative, and only the seeded form is
+    bit-identical to the monolithic ledger; offset 0.0 degenerates to the
+    plain cumsum bitwise since ``0.0 + x == x``).
     """
     if horizon is None:
         horizon = scheduler.plan_horizon(periods)
@@ -105,10 +149,11 @@ def build_schedule(scheduler, batcher, devices, periods: int,
         per_period += (local_steps - 1) * np.array(
             [max(float(d.local_grad_latency(b))
                  for d, b in zip(devices, bp)) for bp in horizon.batch])
+    times = np.cumsum(np.concatenate([[time_offset], per_period]))[1:]
     return Schedule(idx=idx, weight=w,
                     batch=horizon.batch.astype(np.float32),
                     lr=horizon.lr.astype(np.float32),
-                    times=np.cumsum(per_period),
+                    times=times,
                     global_batch=horizon.global_batch)
 
 
@@ -325,6 +370,27 @@ def run_dev_trajectory(dev_params0, idx: np.ndarray, lr: float, data, test,
               jnp.asarray(test.x), jnp.asarray(test.y))
 
 
+def resume_trajectory_batch(state: EngineState, schedules: Sequence[Schedule],
+                            data, test, *, local_steps: int = 1,
+                            compress: bool = True, ratio: float = 0.005,
+                            mesh=None, active=None):
+    """Advance a batched FEEL trajectory by one schedule chunk.
+
+    ``state`` is the carry from the previous chunk (or a fresh
+    :class:`EngineState` of stacked init params + ``zero_residual``-style
+    residuals).  Returns ``(EngineState, (losses, accs, decays))`` — a
+    horizon run as N chunked calls is bit-identical to one monolithic
+    :func:`run_trajectory_batch` (test-enforced).  The returned state's
+    leaves may be in flight: resuming from them pipelines chunk *c+1*
+    behind chunk *c* without blocking.
+    """
+    params, residual, series = run_trajectory_batch(
+        state.params, state.residual, schedules, data, test,
+        local_steps=local_steps, compress=compress, ratio=ratio,
+        mesh=mesh, active=active)
+    return EngineState(params=params, residual=residual), series
+
+
 def run_dev_trajectory_batch(dev_params0, idx: np.ndarray, lr: np.ndarray,
                              data, test, *, average: bool, mesh=None,
                              active=None):
@@ -347,3 +413,19 @@ def run_dev_trajectory_batch(dev_params0, idx: np.ndarray, lr: np.ndarray,
         batched, data_args = _shard_batch_args(mesh, batched, data_args)
     fn = _dev_trajectory_fn(bool(average), batched=True)
     return fn(*batched, *data_args)
+
+
+def resume_dev_trajectory_batch(state: EngineState, idx: np.ndarray,
+                                lr: np.ndarray, data, test, *,
+                                average: bool, mesh=None, active=None):
+    """Advance a batched dev-family trajectory by one index chunk.
+
+    The dev carry is the per-device parameter stack alone (``residual``
+    stays ``None``).  Returns ``(EngineState, (losses, accs))``; chunked
+    calls are bit-identical to one monolithic
+    :func:`run_dev_trajectory_batch` (test-enforced).
+    """
+    dev_params, series = run_dev_trajectory_batch(
+        state.params, idx, lr, data, test, average=average, mesh=mesh,
+        active=active)
+    return EngineState(params=dev_params), series

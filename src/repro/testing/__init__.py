@@ -1,0 +1,7 @@
+"""Test-support utilities shipped with the library.
+
+``repro.testing.proptest`` provides the property-testing surface the
+test suite uses: the real ``hypothesis`` package when it is installed,
+or a minimal API-compatible fallback driver when it is not — so the
+property tests *run* everywhere instead of skipping on lean images.
+"""

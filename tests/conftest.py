@@ -1,0 +1,10 @@
+"""Suite-wide fixtures/config.
+
+Loads the property-testing profile from ``HYPOTHESIS_PROFILE`` (default
+/ dev / ci) for both real hypothesis and the ``repro.testing.proptest``
+fallback — CI's quick property job runs the ``ci`` profile with more
+examples; tests that pin ``max_examples`` keep their pinned count.
+"""
+from repro.testing.proptest import load_profile_from_env
+
+load_profile_from_env()

@@ -1,0 +1,427 @@
+"""Chunked-horizon pipelined execution: the frozen-ξ chunk-equivalence
+matrix (chunk sizes 1..H × Serial/Async executors × the 8-device mesh,
+all bit-identical to the monolithic scan), the resumable EngineState
+contract at the engine level, closed-loop ξ re-planning (the replan=
+surface, per-chunk estimator feedback, the ξ-invariance result, the
+decay-cap steer), and the AsyncExecutor(max_in_flight)+stream() ordering
+regression."""
+import numpy as np
+import pytest
+
+from repro.api import (AsyncExecutor, Experiment, MeshExecutor,
+                       ScenarioSpec, SerialExecutor)
+from repro.api.lowering import BucketRun, group_rows
+from repro.core import DeviceProfile
+from repro.core.solver import FleetRows, optimize_batch_rows
+from repro.data.pipeline import ClassificationData
+from repro.fed import engine
+
+# distinctive shapes (no other module uses dim=28/hidden=40/b_max=12) so
+# engine program caches never collide across test modules
+DIM, HIDDEN, BMAX = 28, 40, 12
+PERIODS = 5
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    full = ClassificationData.synthetic(n=360, dim=DIM, seed=0, spread=6.0)
+    return full.split(80)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                 for f in [0.7, 1.4, 2.1])
+
+
+def _spec(fleet, **kw):
+    kw.setdefault("name", "chk3")
+    kw.setdefault("b_max", BMAX)
+    kw.setdefault("base_lr", 0.15)
+    kw.setdefault("hidden", HIDDEN)
+    return ScenarioSpec(fleet=fleet, **kw)
+
+
+def _grid(fleet):
+    """Three shape buckets: a ragged FEEL bucket (two fleet sizes, two
+    policies, horizon-deduped lr twins), individual, model_fl."""
+    return ([_spec(fleet, partition=p, policy=pol, seeds=(0, 1))
+             for p in ("iid", "noniid") for pol in ("proposed", "full")]
+            + [_spec(fleet[:2], name="chk2", partition="noniid",
+                     policy="proposed", base_lr=0.1, seeds=(0,))]
+            + [_spec(fleet, scheme="individual", seeds=(0,)),
+               _spec(fleet, scheme="model_fl", seeds=(0,))])
+
+
+def _assert_bitwise(a, b):
+    np.testing.assert_array_equal(np.asarray(a.losses),
+                                  np.asarray(b.losses))
+    np.testing.assert_array_equal(np.asarray(a.accs), np.asarray(b.accs))
+    np.testing.assert_array_equal(a.times, b.times)
+    np.testing.assert_array_equal(a.global_batch, b.global_batch)
+
+
+# ---------------------------------------------------------------------------
+# the chunk-equivalence acceptance matrix (frozen ξ)
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_bit_identical_to_monolithic_matrix(dataset, fleet):
+    """ISSUE-5 acceptance: with ξ frozen, a horizon executed as chunked
+    scans is bit-identical (ledgers AND device series array_equal) to the
+    monolithic scan — for every chunk size 1..H, under both the serial
+    reference and the pipelined async executor, on a grid that covers
+    ragged FEEL buckets and both dev-family schemes."""
+    data, test = dataset
+    exp = Experiment(data, test, _grid(fleet))
+    assert len(exp.lower()) == 3
+    mono = exp.run(PERIODS)
+    for chunk in range(1, PERIODS + 1):
+        serial = exp.run(PERIODS,
+                         executor=SerialExecutor(chunk_periods=chunk))
+        _assert_bitwise(mono, serial)
+    for chunk, mif in ((1, None), (2, None), (3, 1), (PERIODS, 2)):
+        pipelined = exp.run(PERIODS, executor=AsyncExecutor(
+            chunk_periods=chunk, max_in_flight=mif))
+        _assert_bitwise(mono, pipelined)
+
+
+def test_chunked_stream_equals_monolithic_stream(dataset, fleet):
+    """Chunking is invisible to the streaming surface: same number of
+    cumulative partials (one per bucket), same final Results."""
+    data, test = dataset
+    exp = Experiment(data, test, _grid(fleet))
+    plain = list(exp.stream(PERIODS))
+    chunked = list(exp.stream(PERIODS, executor=AsyncExecutor(
+        chunk_periods=2)))
+    assert len(plain) == len(chunked) == 3
+    for a, b in zip(plain, chunked):
+        assert a.rows == b.rows
+    _assert_bitwise(plain[-1], chunked[-1])
+
+
+def test_chunked_mesh_subprocess():
+    """The chunk-equivalence matrix under a real 8-device host mesh
+    (forced device count, so this runs in a subprocess): chunked and
+    monolithic sharded runs are bit-identical, for MeshExecutor and the
+    async-with-mesh pipeline, closed loop included."""
+    import os
+    import subprocess
+    import sys
+    prog = """
+import numpy as np
+from repro.api import AsyncExecutor, Experiment, MeshExecutor, ScenarioSpec
+from repro.core import DeviceProfile
+from repro.data.pipeline import ClassificationData
+from repro.launch.mesh import make_batch_mesh
+full = ClassificationData.synthetic(n=300, dim=24, seed=0, spread=6.0)
+data, test = full.split(60)
+fleet = tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9) for f in (0.7, 2.1))
+wide = fleet + (DeviceProfile(kind="cpu", f_cpu=1.4e9),)
+specs = [ScenarioSpec(fleet=fleet, partition=p, policy="proposed", b_max=8,
+                      base_lr=0.15, hidden=32, seeds=(0,))
+         for p in ("iid", "noniid")]
+specs.append(ScenarioSpec(fleet=wide, name="K3", partition="iid",
+                          policy="proposed", b_max=8, base_lr=0.15,
+                          hidden=32, seeds=(0,)))   # ragged row: K2 -> K3
+specs.append(ScenarioSpec(fleet=fleet, scheme="individual", b_max=8,
+                          hidden=32, seeds=(0,)))
+mesh = make_batch_mesh()
+assert mesh.devices.size == 8, mesh.devices.size
+exp = Experiment(data, test, specs)
+mono = exp.run(periods=4, executor=MeshExecutor(mesh))
+for ex in (MeshExecutor(mesh, chunk_periods=1),
+           MeshExecutor(mesh, chunk_periods=3),
+           AsyncExecutor(mesh=mesh, chunk_periods=2),
+           AsyncExecutor(mesh=mesh, chunk_periods=2, max_in_flight=1)):
+    got = exp.run(periods=4, executor=ex)
+    assert np.array_equal(np.asarray(mono.losses), np.asarray(got.losses))
+    assert np.array_equal(np.asarray(mono.accs), np.asarray(got.accs))
+    assert np.array_equal(mono.times, got.times)
+    assert np.array_equal(mono.global_batch, got.global_batch)
+# closed loop under the mesh: serial == async, and the run completes
+cl_s = exp.run(periods=4, executor=MeshExecutor(mesh), replan=2)
+cl_a = exp.run(periods=4, executor=AsyncExecutor(mesh=mesh), replan=2)
+assert np.array_equal(np.asarray(cl_s.losses), np.asarray(cl_a.losses))
+assert np.array_equal(cl_s.times, cl_a.times)
+print("OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH", "")) if p)
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# engine level: the resumable EngineState contract in isolation
+# ---------------------------------------------------------------------------
+
+
+def test_engine_resume_state_bit_identity(dataset, fleet):
+    """N chunked scans with the explicit EngineState carry == one
+    monolithic scan, straight at the engine API (no lowering involved):
+    same series bits, same final carry bits — for the FEEL scan and the
+    dev-family scan."""
+    import jax
+    from repro.core import FeelScheduler
+    from repro.data.pipeline import FederatedBatcher, partition_noniid
+    from repro.fed import feel_model
+    data, test = dataset
+    k = len(fleet)
+    sched = FeelScheduler(devices=list(fleet), n_params=4000,
+                          policy="proposed", b_max=BMAX, seed=0)
+    parts = partition_noniid(data.y, k, seed=0)
+    batcher = FederatedBatcher(parts, BMAX, 0)
+    schedule = engine.build_schedule(sched, batcher, fleet, 6)
+    p0 = feel_model.init(jax.random.key(0), HIDDEN, depth=3, input_dim=DIM)
+    stack = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)  # noqa
+    params0 = stack(p0)
+    residual0 = jax.tree_util.tree_map(
+        lambda p: np.zeros((1, k) + p.shape, p.dtype), p0)
+
+    pm, rm, (lm, am, dm) = engine.run_trajectory_batch(
+        params0, residual0, [schedule], data, test, ratio=0.01)
+
+    state = engine.EngineState(params=params0, residual=residual0)
+    series = []
+    for lo, hi in ((0, 2), (2, 5), (5, 6)):
+        state, s = engine.resume_trajectory_batch(
+            state, [engine.slice_schedule(schedule, lo, hi)], data, test,
+            ratio=0.01)
+        series.append(s)
+    for j, mono in enumerate((lm, am, dm)):
+        got = np.concatenate([np.asarray(s[j]) for s in series], axis=1)
+        np.testing.assert_array_equal(np.asarray(mono), got)
+    for a, b in zip(jax.tree_util.tree_leaves((pm, rm)),
+                    jax.tree_util.tree_leaves((state.params,
+                                               state.residual))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # dev-family: same contract, params-only carry
+    idx = np.stack([np.stack([rng_part[:8] for rng_part in parts])
+                    for _ in range(6)])[None]       # (1, 6, K, 8)
+    dev0 = jax.tree_util.tree_map(
+        lambda a: np.broadcast_to(a[None, None], (1, k) + a.shape), p0)
+    lr = np.array([0.05], np.float32)
+    fm, (dl_, da_) = engine.run_dev_trajectory_batch(
+        dev0, idx, lr, data, test, average=True)
+    st = engine.EngineState(params=dev0)
+    dser = []
+    for lo, hi in ((0, 3), (3, 6)):
+        st, s = engine.resume_dev_trajectory_batch(
+            st, idx[:, lo:hi], lr, data, test, average=True)
+        dser.append(s)
+    for j, mono in enumerate((dl_, da_)):
+        got = np.concatenate([np.asarray(s[j]) for s in dser], axis=1)
+        np.testing.assert_array_equal(np.asarray(mono), got)
+    for a, b in zip(jax.tree_util.tree_leaves(fm),
+                    jax.tree_util.tree_leaves(st.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# closed loop: replan= surface, feedback, ξ-invariance, decay-cap steer
+# ---------------------------------------------------------------------------
+
+
+def test_replan_validation(fleet):
+    with pytest.raises(ValueError, match="replan"):
+        _spec(fleet, replan=0)
+    with pytest.raises(ValueError, match="replan"):
+        _spec(fleet, replan=True)
+    with pytest.raises(ValueError, match="batchsize policy"):
+        _spec(fleet, scheme="individual", replan=4)
+    with pytest.raises(ValueError, match="replan"):
+        group_rows([_spec(fleet)], replan=-1)
+    with pytest.raises(ValueError, match="chunk_periods"):
+        SerialExecutor(chunk_periods=0)
+    with pytest.raises(ValueError, match="chunk_periods"):
+        AsyncExecutor(chunk_periods=-2)
+
+
+def test_replan_is_structural_and_overridable(dataset, fleet):
+    """replan splits FEEL buckets (chunk boundaries are compiled-schedule
+    structure); the run-level override re-groups them; dev buckets keep
+    replan None under an override."""
+    data, test = dataset
+    specs = [_spec(fleet, partition="iid"),
+             _spec(fleet, partition="noniid", replan=2),
+             _spec(fleet, scheme="individual")]
+    exp = Experiment(data, test, specs)
+    buckets = exp.lower()
+    assert [b.replan for b in buckets] == [None, 2, None]
+    assert len(buckets) == 3                      # replan split the feel pair
+    merged = exp.lower(replan=4)
+    assert [b.replan for b in merged] == [4, None]
+    assert len(merged) == 2                       # one feel bucket again
+    assert merged[1].kind == "dev" and merged[1].replan is None
+
+
+def test_replan_override_dedupes_replan_twins(dataset, fleet):
+    """Specs differing ONLY in replan collapse onto one computed row
+    when a run-level override unifies them (dedup keys on the spec as
+    executed, not as declared) — an experiment never runs one trajectory
+    twice."""
+    from dataclasses import replace
+    data, test = dataset
+    s = _spec(fleet, partition="iid", policy="full", seeds=(0,))
+    twin = replace(s, replan=2)
+    exp = Experiment(data, test, [s, twin])
+    assert len(exp.lower()) == 2                  # no override: structural
+    merged = exp.lower(replan=2)
+    assert len(merged) == 1
+    assert [r.indices for r in merged[0].rows] == [(0, 1)]
+    res = exp.run(PERIODS, replan=2)
+    assert res.rows == 2                          # both outputs delivered
+    np.testing.assert_array_equal(np.asarray(res.losses[0]),
+                                  np.asarray(res.losses[1]))
+
+
+def test_stream_partial_sel_does_not_raise_on_uncollected(dataset, fleet):
+    """Fail-loudly sel() must not crash a stream consumer: on a partial,
+    a valid coordinate value whose bucket has not collected yet selects
+    empty; the final (complete) partial raises as usual."""
+    data, test = dataset
+    specs = [_spec(fleet, partition="iid", policy="full", seeds=(0,)),
+             _spec(fleet, scheme="individual", seeds=(0,))]
+    exp = Experiment(data, test, specs)
+    partials = list(exp.stream(PERIODS))
+    first, last = partials[0], partials[-1]
+    assert not first.complete and last.complete
+    early = first.sel(scheme="individual")        # valid, not yet arrived
+    assert early.rows == 0
+    assert last.sel(scheme="individual").rows == 1
+    with pytest.raises(ValueError, match="matches no row"):
+        last.sel(scheme="no-such-scheme")
+
+
+def test_closed_loop_feedback_reaches_estimators(dataset, fleet):
+    """Chunk c's realized decays land in every row's ξ estimator before
+    chunk c+1 is planned; per-row schedulers diverge from the shared
+    prior (closed-loop rows do NOT share horizons)."""
+    data, test = dataset
+    spec = _spec(fleet, partition="noniid", policy="proposed",
+                 seeds=(0, 1))
+    bucket = group_rows([spec], replan=2)[0]
+    run = BucketRun(bucket, data, test, PERIODS, 2)
+    assert run.closed_loop
+    xi0 = [s.xi_est.xi for s in run._planner.schedulers]
+    assert len(xi0) == 2                          # one scheduler per row
+    run.advance()
+    assert not run.can_advance                    # feedback gate
+    run.collect()
+    xi1 = [s.xi_est.xi for s in run._planner.schedulers]
+    assert all(a != b for a, b in zip(xi0, xi1))  # feedback landed
+    assert all(s.xi_est.decay_cap is not None
+               for s in run._planner.schedulers)
+    while not run.done:
+        if run.can_advance:
+            run.advance()
+        else:
+            run.collect()
+    losses, accs, times, gb = run.result()
+    assert losses.shape == (2, PERIODS) and times.shape == (2, PERIODS)
+    assert np.all(np.diff(times, axis=1) > 0)     # seeded-cumsum ledger
+
+
+def test_closed_loop_xi_invariance(dataset, fleet):
+    """The documented invariance: Algorithm-1 decisions are ξ-scale-free
+    (ΔL·E and ΔL·μ are pinned jointly; the outer argmin drops ξ), so on
+    a compute-dominated fleet — where the decay cap cannot bind below
+    the already-minimal B* — closed-loop re-planning reproduces every
+    open-loop DECISION exactly: identical batch plans (global_batch,
+    hence lr/schedules) and bit-identical device series.  Only the
+    predicted-latency ledger floats at ulp level (the bisection runs at
+    a rescaled ΔL; the fixed point is the same, its rounding is not).
+    Closed-loop ξ feedback is free."""
+    data, test = dataset
+    spec = _spec(fleet, partition="iid", policy="proposed", seeds=(0,))
+    exp = Experiment(data, test, [spec])
+    mono = exp.run(PERIODS)
+    for executor in (None, AsyncExecutor()):
+        closed = exp.run(PERIODS, executor=executor, replan=2)
+        np.testing.assert_array_equal(mono.global_batch,
+                                      closed.global_batch)
+        np.testing.assert_array_equal(np.asarray(mono.losses),
+                                      np.asarray(closed.losses))
+        np.testing.assert_array_equal(np.asarray(mono.accs),
+                                      np.asarray(closed.accs))
+        np.testing.assert_allclose(mono.times, closed.times, rtol=1e-12)
+
+
+def test_decay_cap_steers_b_star():
+    """The decision-relevant half of the closed loop: capping the decay
+    credited to a candidate clips B* to the knee (cap/ξ)² on a fleet
+    whose uncapped optimum is interior (GPU flat-region economics)."""
+    rng = np.random.default_rng(3)
+    fleet = tuple(DeviceProfile(kind="gpu", gpu_t_low=0.02, gpu_slope=5e-4,
+                                gpu_b_th=16 + 4 * i) for i in range(4))
+    fr = FleetRows.from_fleets([fleet])
+    up = rng.uniform(5e7, 3e8, size=(1, 4))
+    down = rng.uniform(5e7, 3e8, size=(1, 4))
+    s_bits, frame, xi = 0.005 * 64 * 1e6, 0.010, 0.05
+    open_b = optimize_batch_rows(fr, up, down, s_bits, frame, frame, xi,
+                                 128)
+    lo_sum = fr.lo.sum()                          # GPU floor: Σ B_th
+    assert open_b[0] > lo_sum + 1                 # interior optimum
+    # knee halfway between the feasible floor and the open optimum
+    knee_b = 0.5 * (lo_sum + open_b[0])
+    cap = xi * np.sqrt(knee_b)
+    capped = optimize_batch_rows(fr, up, down, s_bits, frame, frame, xi,
+                                 128, dl_cap=np.array([cap]))
+    assert capped[0] < open_b[0]
+    assert capped[0] <= knee_b * 1.1              # clipped to ~the knee
+    # an unbinding cap (or inf/nan) changes nothing, bitwise
+    for loose in (10.0 * xi * np.sqrt(open_b[0]), np.inf, np.nan):
+        same = optimize_batch_rows(fr, up, down, s_bits, frame, frame, xi,
+                                   128, dl_cap=np.array([loose]))
+        np.testing.assert_array_equal(open_b, same)
+
+
+# ---------------------------------------------------------------------------
+# regression: AsyncExecutor(max_in_flight) + stream() ordering
+# ---------------------------------------------------------------------------
+
+
+def test_stream_max_in_flight_partials_monotone(dataset, fleet):
+    """Satellite regression for the capped-backlog streaming path:
+    collection is oldest-first even when later (smaller) buckets finish
+    on-device before earlier (larger) ones, every partial is cumulative
+    (row set grows monotonically), and rows arrive sorted by output
+    index within each partial — so coordinates are monotone."""
+    data, test = dataset
+    # first bucket large/slow (8 rows), later buckets tiny/fast — the
+    # out-of-order-completion shape that would expose LIFO or dropped
+    # collections
+    specs = _grid(fleet)
+    exp = Experiment(data, test, specs)
+    full = exp.run(PERIODS)
+    order = {(s, int(sd)): i
+             for i, (s, sd) in enumerate(zip(full.coords["spec"],
+                                             full.coords["seed"]))}
+    for mif in (1, 2, None):
+        partials = list(exp.stream(
+            PERIODS, executor=AsyncExecutor(max_in_flight=mif)))
+        assert len(partials) == 3                 # one per bucket
+        prev_keys: list = []
+        for part in partials:
+            keys = [(s, int(sd)) for s, sd in zip(part.coords["spec"],
+                                                  part.coords["seed"])]
+            ranks = [order[k] for k in keys]
+            assert ranks == sorted(ranks)         # output-index order
+            assert set(prev_keys) <= set(keys)    # cumulative
+            assert len(keys) > len(prev_keys)
+            prev_keys = keys
+            # every delivered row carries the full run's exact values
+            sel = np.array(ranks)
+            np.testing.assert_array_equal(np.asarray(part.losses),
+                                          np.asarray(full.losses)[sel])
+            np.testing.assert_array_equal(part.times, full.times[sel])
+        assert len(prev_keys) == full.rows        # final partial complete

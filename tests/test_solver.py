@@ -1,17 +1,19 @@
 """Solver tests: Theorem 1/2 structure, Corollary bounds, Algorithm 1
-convergence, Lemma 2, and optimality over baseline policies — including
-hypothesis property tests over random device fleets / channels."""
+convergence, Lemma 2, optimality over baseline policies, and property
+tests over random device fleets / channels / masks — running on real
+``hypothesis`` when installed, or on ``repro.testing.proptest``'s
+API-compatible fallback otherwise (never skipped)."""
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need the optional hypothesis dep")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from repro.testing.proptest import given, settings, strategies as st
 
 from repro.core import (DeviceProfile, POLICIES, batch_closed_form,
                         e_up_bounds, gradient_bits, solve_downlink,
                         solve_period, solve_uplink, tau_closed_form)
 from repro.core.latency import uplink_latency
+from repro.core.solver import (FleetRows, optimize_batch_rows,
+                               solve_period_rows)
 
 FRAME = 0.010
 S_BITS = gradient_bits(1_000_000)
@@ -192,3 +194,121 @@ def test_period_solution_feasible(seed):
     assert k <= sol.global_batch <= 128 * k
     assert sol.latency > 0 and np.isfinite(sol.latency)
     assert sol.efficiency > 0
+
+
+# ---------------------------------------------------------------------------
+# FleetRows property tests: padding invariance + masked bisection
+# feasibility over random ragged fleets (the PR-4 bucket contract)
+# ---------------------------------------------------------------------------
+
+BMAX_ROWS = 128
+
+
+def _rand_fleet(rng, k):
+    devs = []
+    for _ in range(k):
+        if rng.integers(2):
+            devs.append(DeviceProfile(kind="cpu",
+                                      f_cpu=float(rng.uniform(0.3e9, 5e9))))
+        else:
+            devs.append(DeviceProfile(
+                kind="gpu", gpu_t_low=float(rng.uniform(0.005, 0.05)),
+                gpu_slope=float(rng.uniform(1e-4, 1e-3)),
+                gpu_b_th=int(rng.integers(8, 33))))
+    return tuple(devs)
+
+
+def _rand_rows(rng, n_fleets):
+    """Random ragged fleets + per-row rates/ξ/B drawn inside each row's
+    feasible batch range."""
+    sizes = [int(rng.integers(2, 7)) for _ in range(n_fleets)]
+    fleets = [_rand_fleet(rng, k) for k in sizes]
+    M, K = len(fleets), max(sizes)
+    up = rng.uniform(10e6, 300e6, size=(M, K))
+    down = rng.uniform(10e6, 300e6, size=(M, K))
+    xi = rng.uniform(0.01, 0.2, size=M)
+    B = np.array([rng.uniform(sum(d.batch_lo() for d in f),
+                              BMAX_ROWS * len(f)) for f in fleets])
+    return fleets, up, down, xi, B
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 10_000), extra=st.integers(1, 4),
+       n_fleets=st.integers(1, 3))
+def test_fleet_rows_padding_invariance(seed, extra, n_fleets):
+    """Padding a FleetRows problem to ANY K' >= K is array_equal on every
+    ledger (batch/τ/latency/efficiency): padded columns carry exactly
+    zero batch and slot share and never perturb an active column's bits,
+    whatever rate values ride in the masked columns."""
+    rng = np.random.default_rng(seed)
+    fleets, up, down, xi, B = _rand_rows(rng, n_fleets)
+    M, K = up.shape
+    Kp = K + extra
+
+    def pad(r):
+        # masked columns may carry any benign rate — it must not matter
+        return np.concatenate(
+            [r, rng.uniform(10e6, 300e6, size=(M, Kp - K))], axis=1)
+
+    base = solve_period_rows(FleetRows.from_fleets(fleets, k_pad=K),
+                             up, down, S_BITS, FRAME, FRAME, xi, B,
+                             BMAX_ROWS)
+    wide = solve_period_rows(FleetRows.from_fleets(fleets, k_pad=Kp),
+                             pad(up), pad(down), S_BITS, FRAME, FRAME,
+                             xi, B, BMAX_ROWS)
+    for name in ("batch", "tau_up", "tau_down"):
+        np.testing.assert_array_equal(base[name], wide[name][:, :K])
+        assert np.all(wide[name][:, K:] == 0.0)
+    np.testing.assert_array_equal(base["latency"], wide["latency"])
+    np.testing.assert_array_equal(base["e_total"], wide["e_total"])
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 10_000), extra=st.integers(0, 3))
+def test_fleet_rows_bisection_feasibility(seed, extra):
+    """Masked Algorithm-1/Theorem-2 rows stay feasible on random ragged
+    fleets: batches within [lo, b_max] on active users and exactly zero
+    on padded ones; slot shares non-negative, exactly zero on padded
+    columns, summing to at most one frame."""
+    rng = np.random.default_rng(seed)
+    fleets, up, down, xi, B = _rand_rows(rng, int(rng.integers(1, 4)))
+    M, K = up.shape
+    Kp = K + extra
+    up = np.concatenate([up, np.full((M, Kp - K), 1e8)], axis=1)
+    down = np.concatenate([down, np.full((M, Kp - K), 1e8)], axis=1)
+    fr = FleetRows.from_fleets(fleets, k_pad=Kp)
+    sol = solve_period_rows(fr, up, down, S_BITS, FRAME, FRAME, xi, B,
+                            BMAX_ROWS)
+    act = fr.active
+    assert np.all(sol["batch"][~act] == 0.0)
+    assert np.all(sol["batch"][act] >= fr.lo[act] - 1e-9)
+    assert np.all(sol["batch"][act] <= BMAX_ROWS + 1e-9)
+    for name in ("tau_up", "tau_down"):
+        tau = sol[name]
+        assert np.all(tau[~act] == 0.0)
+        assert np.all(tau >= -1e-15)
+        assert np.all(np.isfinite(tau[act]))
+        # allocated slot shares sum to <= 1 frame (== after normalization)
+        assert np.all(tau.sum(axis=1) <= FRAME * (1 + 1e-6))
+    assert np.all(np.isfinite(sol["latency"])) and np.all(
+        sol["latency"] > 0)
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_optimize_batch_rows_warm_start_feasible(seed):
+    """The warm-started candidate grid stays inside the row's feasible
+    range and returns a batch the full grid also contains."""
+    rng = np.random.default_rng(seed)
+    fleets, up, down, xi, _ = _rand_rows(rng, 2)
+    fr = FleetRows.from_fleets(fleets)
+    cold = optimize_batch_rows(fr, up, down, S_BITS, FRAME, FRAME, xi,
+                               BMAX_ROWS)
+    warm = optimize_batch_rows(fr, up, down, S_BITS, FRAME, FRAME, xi,
+                               BMAX_ROWS, b_prev=cold, n_candidates=33)
+    lo = np.array([sum(d.batch_lo() for d in f) for f in fleets])
+    hi = np.array([BMAX_ROWS * len(f) for f in fleets])
+    for b in (cold, warm):
+        assert np.all(b >= lo - 1e-9) and np.all(b <= hi + 1e-9)
+    # the warm grid brackets the cold optimum, so it must stay close
+    assert np.all(warm >= cold / 2 - 1) and np.all(warm <= cold * 2 + 1)

@@ -236,3 +236,123 @@ def test_compress_off_merges_ratios_into_one_bucket(dataset, fleet):
     t_small = off.sel(compression=0.01).times[0, -1]
     t_big = off.sel(compression=0.1).times[0, -1]
     assert t_big > t_small                        # payload moved the ledger
+
+
+# ---------------------------------------------------------------------------
+# property tests: grid expand -> Results.sel round-trip (real hypothesis
+# when installed, repro.testing.proptest fallback otherwise) + the
+# fail-loudly sel contract
+# ---------------------------------------------------------------------------
+
+from math import prod  # noqa: E402
+
+from repro.api.results import COORD_NAMES, Results  # noqa: E402
+from repro.testing.proptest import given, settings, strategies as st  # noqa: E402,E501
+
+_AXIS_POOL = ("b_max", "base_lr", "cell.radius_m", "users", "compression")
+
+
+def _draw_axes(rng, n_axes):
+    """A random axis dict: distinct fields, unique values per axis."""
+    picks = rng.choice(len(_AXIS_POOL), size=n_axes, replace=False)
+    axes = {}
+    for i in picks:
+        name = _AXIS_POOL[i]
+        n_vals = int(rng.integers(1, 4))
+        if name == "b_max":
+            vals = sorted(int(x) for x in rng.choice(
+                np.arange(8, 65), size=n_vals, replace=False))
+        elif name == "base_lr":
+            vals = [round(float(x), 3) for x in rng.choice(
+                np.linspace(0.01, 0.3, 30), size=n_vals, replace=False)]
+        elif name == "cell.radius_m":
+            vals = [float(x) for x in rng.choice(
+                np.arange(100.0, 900.0, 50.0), size=n_vals, replace=False)]
+        elif name == "users":
+            vals = sorted(int(x) for x in rng.choice(
+                np.arange(2, 9), size=n_vals, replace=False))
+        else:                                      # compression
+            vals = [round(float(x), 4) for x in rng.choice(
+                np.linspace(0.001, 0.2, 40), size=n_vals, replace=False)]
+        axes[name] = vals
+    return axes
+
+
+def _coords_results(study, seeds):
+    """A Results over the study's REAL lowered coordinates (built by
+    Experiment._coords — no device work, series are zeros)."""
+    exp = Experiment(data=None, test=None, specs=study)
+    buckets = exp.lower()
+    coords = exp._coords(buckets)
+    n = exp._n_rows(buckets)
+    z = np.zeros((n, 3))
+    return Results(coords=coords, losses=z, accs=z, times=z,
+                   global_batch=z, n_buckets=len(buckets))
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 100_000), n_axes=st.integers(1, 3))
+def test_grid_sel_roundtrip_property(seed, n_axes):
+    """Random axis dicts: expansion is the full product; every swept
+    value is recoverable through sel() on its Results coordinate; the
+    per-value selections partition the rows; the full axis-coordinate
+    combination isolates exactly one spec's seed rows."""
+    fleet = tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                  for f in [0.7, 2.1])
+    rng = np.random.default_rng(seed)
+    axes = _draw_axes(rng, n_axes)
+    base = _base(fleet, seeds=(0, 1))
+    study = grid(base, **axes)
+    assert len(study) == prod(len(v) for v in axes.values())
+    res = _coords_results(study, seeds=(0, 1))
+    assert res.rows == 2 * len(study)
+
+    for name, values in axes.items():
+        coord = "num_users" if name == "users" else name.replace(".", "_")
+        # every swept value is a recoverable coordinate, in declaration
+        # order, and the per-value selections partition the rows
+        assert res.unique(coord) == tuple(values)
+        total = 0
+        for v in values:
+            sub = res.sel(**{coord: v})
+            assert set(sub.coords[coord]) == {v}
+            total += sub.rows
+        assert total == res.rows
+
+    # the full combination isolates exactly one spec's seed rows
+    spec = study[int(rng.integers(len(study)))]
+    sub = res.sel(**dict(study.axis_coords(spec)))
+    assert sub.rows == 2
+    assert set(sub.coords["spec"]) == {spec}
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_sel_fails_loudly_property(seed):
+    """The PR-3 'fail loudly' contract: a non-coordinate raises KeyError,
+    an out-of-grid value (on swept AND built-in coordinates) raises
+    ValueError — no silently-empty selections."""
+    fleet = tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                  for f in [0.7, 2.1])
+    rng = np.random.default_rng(seed)
+    axes = _draw_axes(rng, int(rng.integers(1, 3)))
+    study = grid(_base(fleet), **axes)
+    res = _coords_results(study, seeds=(0,))
+    with pytest.raises(KeyError):
+        res.sel(definitely_not_a_coordinate=1)
+    for name, values in axes.items():
+        coord = "num_users" if name == "users" else name.replace(".", "_")
+        with pytest.raises(ValueError, match="matches no row"):
+            res.sel(**{coord: -12345})
+        with pytest.raises(ValueError, match="matches no row"):
+            res.sel(**{coord: [-12345, -54321]})   # collection form too
+    with pytest.raises(ValueError, match="matches no row"):
+        res.sel(policy="not-a-policy")
+    with pytest.raises(ValueError, match="matches no row"):
+        res.sel(seed=99999)
+    # empty INTERSECTION of individually-valid values stays allowed
+    first = next(iter(axes))
+    coord = "num_users" if first == "users" else first.replace(".", "_")
+    v = axes[first][0]
+    sub = res.sel(**{coord: v})
+    assert set(sub.coords[coord]) == {v}

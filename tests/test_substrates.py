@@ -1,5 +1,6 @@
 """Substrate tests: channels, compression, data pipeline, optimizers,
-checkpointing — unit + hypothesis property tests."""
+checkpointing — unit + property tests (real ``hypothesis`` when
+installed, ``repro.testing.proptest`` fallback otherwise)."""
 import os
 
 import jax
@@ -7,9 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need the optional hypothesis dep")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from repro.testing.proptest import given, settings, strategies as st
 
 from repro.channels.model import Cell, path_loss_db
 from repro.compression.sbc import compress_dense, compressed_bits, sbc_tensor
