@@ -1,0 +1,23 @@
+"""Static analysis over lowered bucket programs.
+
+Three passes walk the closed jaxpr of every bucket program (FEEL and dev
+schemes, monolithic and chunked) and turn the repo's example-tested
+invariants into all-inputs guarantees:
+
+* :mod:`repro.analysis.taint` — abstract interpretation proving padded
+  user lanes are mask-dominated before any cross-user reduction;
+* :mod:`repro.analysis.determinism` — lint for non-bit-stable idioms
+  (pairwise-unrolled reductions, unseeded cumsum ledgers, PRNG key
+  collisions across streams);
+* :mod:`repro.analysis.compile_audit` — trace-ledger audit (one trace
+  per bucket, zero retraces across chunks/replan rounds), 64-bit leak
+  and folded-constant detection on the jaxpr itself.
+
+:mod:`repro.analysis.report` defines the shared finding/report
+datamodel; ``python -m repro.analysis.audit`` sweeps the benchmark
+grids and writes ``AUDIT_report.json``.
+"""
+from repro.analysis.report import (AuditError, AuditReport, Finding,
+                                   Severity)
+
+__all__ = ["AuditError", "AuditReport", "Finding", "Severity"]

@@ -21,7 +21,7 @@ are worth looking at before the last one retires.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 from typing import Iterator, List, Optional, Sequence
 
 import numpy as np
@@ -56,7 +56,7 @@ class Experiment:
         return group_rows(self.specs, replan=replan)
 
     def run(self, periods: int, executor: Optional[Executor] = None,
-            replan: Optional[int] = None) -> Results:
+            replan: Optional[int] = None, audit: bool = False) -> Results:
         """Run the whole grid and return the complete ``Results``.
 
         ``replan=R`` turns every FEEL-family bucket closed-loop for this
@@ -65,11 +65,52 @@ class Experiment:
         is planned (Algorithm 1 with live feedback — overriding any
         per-spec ``ScenarioSpec.replan``).  Dev-family buckets have no ξ
         loop and ignore the override.
+
+        ``audit=True`` runs the static-analysis passes alongside the
+        computation (see :mod:`repro.analysis`): the padding-taint
+        certificate and compile-hygiene checks over every bucket's
+        lowered program (probed under ``engine.suspend_trace_count`` —
+        no device work, but host planning runs once more per bucket),
+        the determinism lint, and a trace-ledger audit scoped to this
+        run proving zero retraces across chunks and replan rounds.  The
+        report attaches as ``Results.audit``; error-severity findings
+        raise :class:`repro.analysis.AuditError`.  Audit composes with
+        any executor — the passes inspect programs and ledgers, not the
+        execution schedule.
         """
+        if audit:
+            from repro.fed import engine as _engine
+            mark = len(_engine.trace_events())
         builder = None
         for builder in self._collected(periods, executor, replan):
             pass
-        return builder.build()
+        res = builder.build()
+        if audit:
+            report = self._audit(periods, replan, mark)
+            res = _dc_replace(res, audit=report)
+            report.raise_on_error()
+        return res
+
+    def _audit(self, periods: int, replan: Optional[int], mark: int):
+        """The ``run(audit=True)`` pass bundle (see :mod:`repro.analysis`)."""
+        from repro.analysis import compile_audit, determinism, taint
+        from repro.analysis.report import AuditReport
+        from repro.api import lowering
+        from repro.fed import engine as _engine
+
+        report = AuditReport()
+        compile_audit.audit_traces(_engine.trace_events()[mark:],
+                                   label="trace-ledger", report=report)
+        for bucket in self.lower(replan=replan):
+            plan = lowering.plan_bucket(bucket, self.data, periods)
+            traced = lowering.trace_bucket(plan, self.data, self.test)
+            taint.analyze_jaxpr(traced.closed, traced.in_labels,
+                                traced.out_contracts,
+                                program=traced.program, report=report)
+            compile_audit.audit_jaxpr_hygiene(
+                traced.closed, program=traced.program, report=report)
+        determinism.lint_sources(report=report)
+        return report
 
     def stream(self, periods: int, executor: Optional[Executor] = None,
                replan: Optional[int] = None) -> Iterator[Results]:

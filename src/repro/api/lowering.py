@@ -511,6 +511,124 @@ def dispatch_bucket(plan: BucketPlan, data, test, mesh=None,
 
 
 # ---------------------------------------------------------------------------
+# phase 2b: probe (lower the bucket program WITHOUT running it — the
+# static-analysis entry point)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TracedBucket:
+    """One bucket program lowered for inspection, with taint labels.
+
+    ``closed`` is the closed jaxpr of the exact jitted program the
+    dispatch phase would run; ``in_labels`` / ``out_contracts`` are the
+    padding-taint annotations aligned with its flattened inputs/outputs
+    (see :mod:`repro.analysis.taint`).  Built by :func:`trace_bucket`
+    under ``engine.suspend_trace_count`` so probing never pollutes the
+    trace ledger the compile audit certifies.
+    """
+    program: str
+    closed: object               # jax.core.ClosedJaxpr
+    in_labels: list
+    out_contracts: dict
+    bucket: Bucket
+    periods: int
+
+
+def _flat_labels(label_tree) -> list:
+    return jax.tree_util.tree_leaves(label_tree)
+
+
+def trace_bucket(plan: BucketPlan, data, test) -> TracedBucket:
+    """Lower one planned bucket's device program to a labeled jaxpr.
+
+    Mirrors the dispatch phase's argument assembly exactly (fresh-state
+    form, no mesh — sharding does not change program semantics), then
+    traces with ``jax.make_jaxpr`` instead of executing.  The labels
+    state the padded-lane facts the schedule construction guarantees:
+
+    * FEEL: ``residual0`` and ``active`` hold exact zeros on padded
+      lanes; ``idx``/``weight``/``batch`` padded lanes are *variant* —
+      deliberately weaker than ``pad_schedule`` provides, so the
+      certificate also covers hand-built (garbage) schedules and rests
+      only on the program's own ``w*=active`` / ``bk*=active`` masking;
+    * dev: per-device params are variant on padded lanes, ``active`` is
+      zero; the program's masked means must do all the work.
+
+    The FEEL output contract pins the SBC ``residual`` carry to
+    ``Known(0)`` on padded lanes — the inductive step that extends the
+    single-program certificate across chunked/replanned horizons (the
+    next chunk's ``residual0`` label is exactly this output's contract).
+    """
+    from repro.analysis.taint import LaneLabel, NO_LABEL, OutContract
+
+    rows = plan.bucket.rows
+    spec0 = rows[0].spec
+    k_pad = plan.bucket.k_pad
+    periods = plan.times.shape[1]
+    name = f"{plan.bucket.key}/P{periods}"
+    with engine.suspend_trace_count():
+        if plan.bucket.kind == "feel":
+            schedules = plan.payload["schedules"]
+            active = engine.host_to_device(plan.payload["active"])
+            params0 = _init_params_batch(rows, plan.input_dim)
+            residual0 = tree_map(
+                lambda p: jnp.zeros((p.shape[0], k_pad) + p.shape[1:],
+                                    p.dtype), params0)
+            xs = engine.stack_schedules(schedules)
+            data_args = engine.host_to_device(
+                (data.x, data.y, test.x, test.y))
+            fn = engine.trajectory_program(
+                spec0.local_steps, spec0.compress, spec0.compression)
+            closed = jax.make_jaxpr(fn)(
+                params0, residual0, active, xs, *data_args)
+            labels = (
+                tree_map(lambda _: NO_LABEL, params0),
+                tree_map(lambda _: LaneLabel(1, 0.0), residual0),
+                LaneLabel(1, 0.0),
+                {"idx": LaneLabel(2), "weight": LaneLabel(2),
+                 "batch": LaneLabel(2), "lr": NO_LABEL},
+                NO_LABEL, NO_LABEL, NO_LABEL, NO_LABEL)
+            n_leaves = len(jax.tree_util.tree_leaves(params0))
+            # outputs: (params, residual, (losses, accs, decays))
+            contracts = {n_leaves + i: OutContract(axis=1, value=0.0)
+                         for i in range(n_leaves)}
+        else:
+            idx, lr = plan.payload["idx"], plan.payload["lr"]
+            active = plan.payload["active"]
+            p0 = _init_params_batch(rows, plan.input_dim)
+            dev_params0 = tree_map(
+                lambda a: jnp.broadcast_to(
+                    a[:, None], (a.shape[0], k_pad) + a.shape[1:]), p0)
+            idx = engine.host_to_device(np.asarray(idx))
+            batched = (dev_params0, idx, *engine.host_to_device(
+                (np.asarray(lr), active)))
+            data_args = engine.host_to_device(
+                (data.x, data.y, test.x, test.y))
+            fn = engine.dev_trajectory_program(
+                average=(spec0.scheme == "model_fl"))
+            closed = jax.make_jaxpr(fn)(*batched, *data_args)
+            labels = (
+                tree_map(lambda _: LaneLabel(1, "variant"), dev_params0),
+                LaneLabel(2), NO_LABEL, LaneLabel(1, 0.0),
+                NO_LABEL, NO_LABEL, NO_LABEL, NO_LABEL)
+            contracts = {}
+    return TracedBucket(program=name, closed=closed,
+                        in_labels=_flat_labels(labels),
+                        out_contracts=contracts, bucket=plan.bucket,
+                        periods=periods)
+
+
+def audit_bucket_taint(plan: BucketPlan, data, test, report=None):
+    """Run the padding-taint pass over one planned bucket's program."""
+    from repro.analysis import taint
+    traced = trace_bucket(plan, data, test)
+    return taint.analyze_jaxpr(
+        traced.closed, traced.in_labels, traced.out_contracts,
+        program=traced.program, report=report)
+
+
+# ---------------------------------------------------------------------------
 # phase 3: collect (block, slice padding, hand back host arrays)
 # ---------------------------------------------------------------------------
 

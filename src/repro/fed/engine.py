@@ -32,9 +32,10 @@ updated from chunk *c*'s realized decays (closed-loop Algorithm 1).
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass
 from functools import lru_cache, partial
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -48,12 +49,108 @@ tree_map = jax.tree_util.tree_map
 # Incremented inside the traced bodies below, i.e. exactly once per jit
 # trace.  ``api.Experiment`` buckets assert on this: a whole grid of
 # shape-compatible scenarios must cost ONE trace, not one per cell.
-_TRACES = {"n": 0}
+# ``events`` is the structured ledger behind the count: one TraceEvent per
+# trace, carrying the program-cache key and the abstract argument
+# signature, so ``analysis.compile_audit`` can prove not just *how many*
+# traces happened but that no (key, signature) pair ever traced twice —
+# a duplicate is a retrace the jit cache should have absorbed.
+_TRACES = {"n": 0, "events": [], "suspended": 0}
+
+
+class TraceEvent(NamedTuple):
+    """One jit trace of a trajectory program.
+
+    ``kind`` names the program family (``feel`` / ``dev``); ``key`` is the
+    ``lru_cache`` key that selects the compiled program (static config);
+    ``signature`` is the flattened (shape, dtype) tuple of the traced
+    arguments.  Two events with identical (kind, key, signature) mean the
+    same program traced twice for the same abstract inputs — a retrace.
+    """
+    kind: str
+    key: tuple
+    signature: tuple
 
 
 def trace_count() -> int:
     """Total number of trajectory-program traces so far in this process."""
     return _TRACES["n"]
+
+
+def trace_events() -> tuple:
+    """The structured trace ledger (one :class:`TraceEvent` per trace)."""
+    return tuple(_TRACES["events"])
+
+
+@contextlib.contextmanager
+def suspend_trace_count():
+    """Hide traces from the ledger while the context is active.
+
+    The audit probes (``api.lowering.trace_bucket``) call ``jax.make_jaxpr``
+    on the very programs whose trace discipline the ledger certifies;
+    tracing for *inspection* must not look like a retrace, so probes run
+    under this context.
+    """
+    _TRACES["suspended"] += 1
+    try:
+        yield
+    finally:
+        _TRACES["suspended"] -= 1
+
+
+def _record_trace(kind: str, key: tuple, args) -> None:
+    """Called from INSIDE traced bodies, i.e. exactly once per jit trace."""
+    if _TRACES["suspended"]:
+        return
+    _TRACES["n"] += 1
+    sig = tuple((tuple(a.shape), str(a.dtype))
+                for a in jax.tree_util.tree_leaves(args))
+    _TRACES["events"].append(TraceEvent(kind=kind, key=key, signature=sig))
+
+
+# ---------------------------------------------------------------------------
+# host -> device dtype boundary
+# ---------------------------------------------------------------------------
+#
+# Host planners (core/scheduler.py, channels/model.py) deliberately work in
+# numpy float64 — the latency ledgers are cumulative sums where 32-bit
+# drift would change simulated-time results — but device programs are
+# strictly 32-bit.  ``host_to_device`` below is the ONE sanctioned
+# crossing: every jitted trajectory entry point funnels its array inputs
+# through it, and ``assert_device_safe`` (also called by the
+# compile-hygiene pass on lowered jaxprs) enforces that nothing 64-bit
+# leaks past it.  ``times``/``global_batch`` never cross: they are
+# host-side ledgers joined to device series only after collection.
+
+_DEVICE_DTYPES = {"f": jnp.float32, "i": jnp.int32, "u": jnp.uint32,
+                  "b": jnp.bool_, "c": jnp.complex64}
+
+
+def host_to_device(tree):
+    """Cast a pytree of host (numpy) arrays to device-safe dtypes.
+
+    Floats → float32, ints → int32, bools pass through.  This is the
+    single documented host↔device boundary; planners stay float64 on the
+    host side and nothing 64-bit crosses it.
+    """
+    def cast(a):
+        a = jnp.asarray(a)
+        kind = np.dtype(a.dtype).kind
+        target = _DEVICE_DTYPES.get(kind)
+        if target is not None and a.dtype != target:
+            a = a.astype(target)
+        return a
+    return tree_map(cast, tree)
+
+
+def assert_device_safe(tree, where: str = "jit boundary"):
+    """Raise if any leaf about to enter a jitted program is 64-bit."""
+    for leaf in jax.tree_util.tree_leaves(tree):
+        dtype = np.dtype(getattr(leaf, "dtype", np.asarray(leaf).dtype))
+        if dtype.itemsize == 8 and dtype.kind in "fiuc":
+            raise TypeError(
+                f"64-bit array ({dtype}) reached {where}; host planners "
+                "must cross through engine.host_to_device first")
+    return tree
 
 
 def _shard_batch_args(mesh, batched_args, replicated_args):
@@ -82,13 +179,18 @@ class Schedule:
         return self.idx.shape[0]
 
     def stacked_xs(self):
-        """The per-period scan inputs as a dict of arrays."""
-        return {
-            "idx": jnp.asarray(self.idx, jnp.int32),
-            "weight": jnp.asarray(self.weight, jnp.float32),
-            "batch": jnp.asarray(self.batch, jnp.float32),
-            "lr": jnp.asarray(self.lr, jnp.float32),
-        }
+        """The per-period scan inputs, crossed through the device boundary.
+
+        The scheduler plans in float64 (host precision); this is where the
+        plan becomes device data — one cast, via :func:`host_to_device`.
+        ``times``/``global_batch`` stay host-side and never cross.
+        """
+        return host_to_device({
+            "idx": self.idx,
+            "weight": self.weight,
+            "batch": self.batch,
+            "lr": self.lr,
+        })
 
 
 def slice_schedule(schedule: Schedule, lo: int, hi: int) -> Schedule:
@@ -236,8 +338,9 @@ def _period_step(data_x, data_y, test_x, test_y, active, local_steps,
 @lru_cache(maxsize=None)
 def _trajectory_fn(local_steps: int, compress: bool, ratio: float,
                    batched: bool):
+    key = (local_steps, compress, ratio, batched)
+
     def run(params0, residual0, active, xs, data_x, data_y, test_x, test_y):
-        _TRACES["n"] += 1                        # host side effect: traces
         step = partial(_period_step, data_x, data_y, test_x, test_y,
                        active, local_steps, compress, ratio)
         (params, residual), series = jax.lax.scan(
@@ -246,7 +349,31 @@ def _trajectory_fn(local_steps: int, compress: bool, ratio: float,
 
     if batched:
         run = jax.vmap(run, in_axes=(0, 0, 0, 0, None, None, None, None))
-    return jax.jit(run)
+
+    def traced(params0, residual0, active, xs, *data):
+        # host side effect at trace time: ledger entry (exactly one/trace).
+        # Must sit OUTSIDE the vmap so the signature keeps the batch axis
+        # (inside, distinct-N programs would collide into one triple).
+        _record_trace("feel", key, (params0, residual0, active, xs, *data))
+        return run(params0, residual0, active, xs, *data)
+
+    return jax.jit(traced)
+
+
+def trajectory_program(local_steps: int = 1, compress: bool = True,
+                       ratio: float = 0.005, batched: bool = True):
+    """The (cached) jitted FEEL trajectory program for a static config.
+
+    Public accessor for introspection — ``analysis``' probes call
+    ``jax.make_jaxpr`` on this under :func:`suspend_trace_count`.
+    """
+    return _trajectory_fn(local_steps, compress, float(ratio), batched)
+
+
+def dev_trajectory_program(average: bool, batched: bool = True):
+    """The (cached) jitted dev-family program (see
+    :func:`trajectory_program`)."""
+    return _dev_trajectory_fn(bool(average), batched)
 
 
 def run_trajectory(params0, residual0, schedule: Schedule, data, test, *,
@@ -263,10 +390,10 @@ def run_trajectory(params0, residual0, schedule: Schedule, data, test, *,
     if active is None:
         active = jnp.ones(schedule.idx.shape[1], jnp.float32)
     fn = _trajectory_fn(local_steps, compress, float(ratio), False)
-    return fn(params0, residual0, jnp.asarray(active, jnp.float32),
-              schedule.stacked_xs(),
-              jnp.asarray(data.x), jnp.asarray(data.y),
-              jnp.asarray(test.x), jnp.asarray(test.y))
+    args = (params0, residual0, host_to_device(active),
+            schedule.stacked_xs(), *host_to_device(
+                (data.x, data.y, test.x, test.y)))
+    return fn(*assert_device_safe(args, "run_trajectory"))
 
 
 def stack_schedules(schedules: Sequence[Schedule]):
@@ -300,13 +427,14 @@ def run_trajectory_batch(params0, residual0, schedules: Sequence[Schedule],
         active = jnp.ones((len(schedules), schedules[0].idx.shape[1]),
                           jnp.float32)
     else:
-        active = jnp.asarray(active, jnp.float32)
-    data_args = (jnp.asarray(data.x), jnp.asarray(data.y),
-                 jnp.asarray(test.x), jnp.asarray(test.y))
+        active = host_to_device(active)
+    data_args = host_to_device((data.x, data.y, test.x, test.y))
     if mesh is not None:
         (params0, residual0, active, xs), data_args = _shard_batch_args(
             mesh, (params0, residual0, active, xs), data_args)
     fn = _trajectory_fn(local_steps, compress, float(ratio), True)
+    assert_device_safe((params0, residual0, active, xs, data_args),
+                       "run_trajectory_batch")
     return fn(params0, residual0, active, xs, *data_args)
 
 
@@ -342,15 +470,22 @@ def _dev_step(data_x, data_y, test_x, test_y, lr, average, active,
 
 @lru_cache(maxsize=None)
 def _dev_trajectory_fn(average: bool, batched: bool = False):
+    key = (average, batched)
+
     def run(dev_params0, idx, lr, active, data_x, data_y, test_x, test_y):
-        _TRACES["n"] += 1
         step = partial(_dev_step, data_x, data_y, test_x, test_y, lr,
                        average, active)
         return jax.lax.scan(step, dev_params0, idx)
 
     if batched:
         run = jax.vmap(run, in_axes=(0, 0, 0, 0, None, None, None, None))
-    return jax.jit(run)
+
+    def traced(dev_params0, idx, lr, active, *data):
+        # trace-time ledger entry — outside the vmap, see _trajectory_fn
+        _record_trace("dev", key, (dev_params0, idx, lr, active, *data))
+        return run(dev_params0, idx, lr, active, *data)
+
+    return jax.jit(traced)
 
 
 def run_dev_trajectory(dev_params0, idx: np.ndarray, lr: float, data, test,
@@ -364,10 +499,10 @@ def run_dev_trajectory(dev_params0, idx: np.ndarray, lr: float, data, test,
     if active is None:
         active = jnp.ones(idx.shape[1], jnp.float32)
     fn = _dev_trajectory_fn(bool(average))
-    return fn(dev_params0, jnp.asarray(idx, jnp.int32),
-              jnp.float32(lr), jnp.asarray(active, jnp.float32),
-              jnp.asarray(data.x), jnp.asarray(data.y),
-              jnp.asarray(test.x), jnp.asarray(test.y))
+    args = (dev_params0, *host_to_device((np.asarray(idx),
+                                          np.float32(lr), active,
+                                          data.x, data.y, test.x, test.y)))
+    return fn(*assert_device_safe(args, "run_dev_trajectory"))
 
 
 def resume_trajectory_batch(state: EngineState, schedules: Sequence[Schedule],
@@ -402,16 +537,15 @@ def run_dev_trajectory_batch(dev_params0, idx: np.ndarray, lr: np.ndarray,
     users, excluded from every parameter average).  ``mesh`` shards N
     across devices as in :func:`run_trajectory_batch`.
     """
-    idx = jnp.asarray(idx, jnp.int32)
+    idx = host_to_device(np.asarray(idx))
     if active is None:
         active = jnp.ones((idx.shape[0], idx.shape[2]), jnp.float32)
-    batched = (dev_params0, idx, jnp.asarray(lr, jnp.float32),
-               jnp.asarray(active, jnp.float32))
-    data_args = (jnp.asarray(data.x), jnp.asarray(data.y),
-                 jnp.asarray(test.x), jnp.asarray(test.y))
+    batched = (dev_params0, idx, *host_to_device((np.asarray(lr), active)))
+    data_args = host_to_device((data.x, data.y, test.x, test.y))
     if mesh is not None:
         batched, data_args = _shard_batch_args(mesh, batched, data_args)
     fn = _dev_trajectory_fn(bool(average), batched=True)
+    assert_device_safe((batched, data_args), "run_dev_trajectory_batch")
     return fn(*batched, *data_args)
 
 

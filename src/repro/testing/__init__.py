@@ -4,4 +4,51 @@
 test suite uses: the real ``hypothesis`` package when it is installed,
 or a minimal API-compatible fallback driver when it is not — so the
 property tests *run* everywhere instead of skipping on lean images.
+
+``repro.testing.no_retrace`` is the compile-discipline guard: a context
+manager asserting exactly how many jit traces a block may cost (default
+zero), replacing ad-hoc ``engine.trace_count()`` before/after pairs.
 """
+from __future__ import annotations
+
+import contextlib
+
+from repro.fed import engine
+
+__all__ = ["no_retrace"]
+
+
+@contextlib.contextmanager
+def no_retrace(expect: int = 0):
+    """Assert the block traces exactly ``expect`` trajectory programs.
+
+    ``expect=0`` (the default) guards warm paths — chunked resumption,
+    replan rounds, cache hits across a grid — where any trace is a
+    retrace bug.  ``expect=n`` pins a cold path's trace budget (e.g. one
+    trace for a fresh bucket).  On top of the count, the structured
+    ledger is checked for duplicate (kind, key, signature) events across
+    the WHOLE process history: a duplicate means jax traced the same
+    program twice for the same abstract inputs, which the count alone
+    can miss when one legitimate cold trace masks one retrace.
+
+    Usage::
+
+        with no_retrace():            # warm path: zero traces allowed
+            run.advance()
+        with no_retrace(expect=1):    # cold path: exactly one trace
+            exp.run(periods=3)
+    """
+    before = engine.trace_count()
+    yield
+    got = engine.trace_count() - before
+    assert got == expect, (
+        f"expected exactly {expect} jit trace(s) in block, got {got}; "
+        f"trace events: {engine.trace_events()[before:]}")
+    events = engine.trace_events()
+    seen = {}
+    for i, ev in enumerate(events):
+        dup = seen.get(ev)
+        assert dup is None, (
+            f"duplicate trace (retrace) of {ev.kind} program: event #{i} "
+            f"repeats event #{dup}: key={ev.key}")
+        seen[ev] = i

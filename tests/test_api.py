@@ -18,6 +18,7 @@ from repro.core.scheduler import plan_horizons_batch
 from repro.data.pipeline import ClassificationData, partition_noniid
 from repro.fed import engine
 from repro.fed.sweep import SweepCell, run_seed_batch, run_sweep
+from repro.testing import no_retrace
 from repro.fed.trainer import FeelSimulation, RunResult, run_scheme
 from repro.launch.mesh import make_batch_mesh
 
@@ -107,16 +108,14 @@ def test_grid_compiles_to_single_program_per_bucket(dataset, fleet):
     data, test = dataset
     grid = [_spec(fleet, partition=p, policy=pol, seeds=(0, 1))
             for p in ("iid", "noniid") for pol in ("proposed", "online")]
-    before = engine.trace_count()
-    res = Experiment(data, test, grid).run(periods=4)
+    with no_retrace(expect=1):                    # 4 cells, one program
+        res = Experiment(data, test, grid).run(periods=4)
     assert res.n_buckets == 1
-    assert engine.trace_count() - before == 1     # 4 cells, one program
 
     other = [_spec(fleet, partition="noniid", policy="random",
                    base_lr=0.3, seeds=tuple(range(3, 11)))]  # 8 rows again
-    before = engine.trace_count()
-    Experiment(data, test, other).run(periods=4)
-    assert engine.trace_count() - before == 0     # same shapes: cache hit
+    with no_retrace():                            # same shapes: cache hit
+        Experiment(data, test, other).run(periods=4)
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,7 @@ from repro.core.solver import FleetRows, solve_uplink_rows
 from repro.channels.model import Cell
 from repro.data.pipeline import ClassificationData
 from repro.fed import engine
+from repro.testing import no_retrace
 
 # distinctive shapes (no other test module uses dim=28 / hidden=56 /
 # b_max=20) so the lru-cached engine programs are fresh and the
@@ -114,9 +115,8 @@ def test_users_grid_is_one_bucket_one_trace(dataset):
     buckets = exp.lower()
     assert len(buckets) == 1
     assert buckets[0].k_pad == 8
-    before = engine.trace_count()
-    res = exp.run(periods=4)
-    assert engine.trace_count() - before == 1     # 3 fleet sizes, 1 program
+    with no_retrace(expect=1):                    # 3 fleet sizes, 1 program
+        res = exp.run(periods=4)
     assert res.n_buckets == 1
     assert res.rows == 6
     # num_users is a selectable Results coordinate
