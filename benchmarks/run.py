@@ -10,8 +10,8 @@ def main() -> None:
     from benchmarks import (ablation_compression, fig2_gpu_training_function,
                             fig3_generalization, fig45_batchsize_policies,
                             fig_replan, fig_users, loss_decay_fit, roofline,
-                            smoke_experiment, solver_scaling, sweep_speed,
-                            table2_schemes)
+                            serve_load, smoke_experiment, solver_scaling,
+                            sweep_speed, table2_schemes)
     modules = [
         ("fig2_gpu_training_function", fig2_gpu_training_function),
         ("solver_scaling", solver_scaling),
@@ -25,6 +25,7 @@ def main() -> None:
         ("fig_replan", fig_replan),
         ("sweep_speed", sweep_speed),
         ("roofline", roofline),
+        ("serve_load", serve_load),
     ]
     print("name,us_per_call,derived")
     failures = 0

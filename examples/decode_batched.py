@@ -1,0 +1,18 @@
+"""Batched LLM token-decode demo: prefill a prompt batch then decode
+continuations with the KV/SSM cache — the laptop-scale version of the
+decode_32k / long_500k dry-run shapes.  Tries one arch per cache family.
+
+This is the model-zoo *decode* demo (``repro.launch.serve`` driver), not
+the FEEL experiment service — for streaming scenario requests through a
+long-running service see ``repro.serve`` and ``examples/quickstart.py``.
+
+Run:  PYTHONPATH=src python examples/decode_batched.py
+"""
+from repro.launch import serve as serve_cli
+
+for arch in ["qwen1.5-4b",        # dense GQA: ring-buffer KV cache
+             "minicpm3-4b",       # MLA: compressed latent cache
+             "mamba2-2.7b",       # SSM: O(1) recurrent state
+             "zamba2-7b"]:        # hybrid: SSM state + shared-attn KV
+    serve_cli.main(["--arch", arch, "--batch", "2", "--prompt-len", "8",
+                    "--gen", "16", "--ctx", "64"])

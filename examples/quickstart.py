@@ -1,5 +1,5 @@
 """Quickstart: one FEEL training period solved end-to-end, then a tiny
-declarative geometry study.
+declarative geometry study, then the streaming experiment service.
 
 Part 1 drops K heterogeneous edge devices into a cell, samples the
 wireless channel (eq. 5-6), solves 𝒫₁ (Theorems 1+2 / Algorithm 1) and
@@ -7,7 +7,10 @@ prints the optimal batchsizes, TDMA slots, and the learning-efficiency
 comparison against the paper's baseline policies.  Part 2 declares a
 ``grid`` study sweeping the wireless cell radius × data partition and
 runs it as one compiled program via ``repro.api.Experiment`` — the swept
-radius comes back as a named ``Results`` coordinate.
+radius comes back as a named ``Results`` coordinate.  Part 3 sweeps
+fleet size.  Part 4 runs the same specs through ``repro.serve``: submit
+scenario requests to a long-running service and stream chunked results
+back, with warm-cache admissions and preemptive scheduling.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -79,3 +82,34 @@ for k in kres.unique("num_users"):
     print(f"  K={k}  final acc {cell.final_acc.mean():.3f}"
           f"±{cell.final_acc.std():.3f}  "
           f"sim time {cell.times[:, -1].mean():.1f}s")
+
+# ---- part 4: the streaming experiment service ------------------------------
+# instead of a grid known up front, submit ScenarioSpecs to a running
+# service over time: arrivals micro-batch into compiled-program groups
+# (same bucket_key rule as the static lowering), repeat shapes admit
+# warm from the persistent compile cache, and hot requests preempt long
+# background horizons at chunk boundaries — the resumable chunked scans
+# of PR 5 make a suspended run just parked state, so the preempted run
+# finishes bit-identical to an uninterrupted one (test-enforced).
+from repro.serve import ExperimentService                 # noqa: E402
+
+svc = ExperimentService(data, test, chunk_periods=5)
+background = svc.submit(base, periods=20, priority=5)     # long horizon
+svc.step()                        # admitted; first chunk runs
+hot = svc.submit(ScenarioSpec(fleet=tuple(devices), name="hot",
+                              policy="proposed", b_max=64, base_lr=0.1,
+                              hidden=128, seeds=(2, 3), compression=0.1),
+                 periods=10, priority=0)   # same program shape: admits
+                                           # warm, and preempts
+while not (background.done and hot.done):
+    svc.step()                        # admit due arrivals + run one chunk
+    if not hot.done:
+        part = hot.partial()          # complete=False mid-stream view
+        print(f"  hot request: {part.losses.shape[1]}/10 periods "
+              f"streamed (complete={part.complete})")
+print(f"\nservice: {svc.stats.admissions} admissions, "
+      f"{svc.stats.preemptions} preemption(s), cache hit rate "
+      f"{svc.stats.cache_hit_rate:.0%}, warm-admission traces "
+      f"{svc.stats.warm_admission_traces}")
+print(f"background final acc {background.result().final_acc.mean():.3f} "
+      f"— bit-identical to the uninterrupted Experiment run")

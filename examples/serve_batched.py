@@ -1,14 +1,24 @@
-"""Batched serving demo: prefill a prompt batch then decode continuations
-with the KV/SSM cache — the laptop-scale version of the decode_32k /
-long_500k dry-run shapes.  Tries one arch per cache family.
+"""Deprecated name — this demo moved to ``examples/decode_batched.py``.
+
+It was never the experiment *service* (that is ``repro.serve``); it is
+the batched LLM token-decode demo, and the new name says so.  This shim
+keeps old invocations working.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
-from repro.launch import serve as serve_cli
+import runpy
+import sys
+import warnings
 
-for arch in ["qwen1.5-4b",        # dense GQA: ring-buffer KV cache
-             "minicpm3-4b",       # MLA: compressed latent cache
-             "mamba2-2.7b",       # SSM: O(1) recurrent state
-             "zamba2-7b"]:        # hybrid: SSM state + shared-attn KV
-    serve_cli.main(["--arch", arch, "--batch", "2", "--prompt-len", "8",
-                    "--gen", "16", "--ctx", "64"])
+warnings.warn(
+    "examples/serve_batched.py is deprecated: the batched decode demo "
+    "is now examples/decode_batched.py (repro.serve is the FEEL "
+    "experiment service, a different thing).",
+    DeprecationWarning, stacklevel=2)
+
+if __name__ == "__main__":
+    sys.argv[0] = sys.argv[0].replace("serve_batched.py",
+                                      "decode_batched.py")
+    runpy.run_module("examples.decode_batched"
+                     if __package__ else "decode_batched",
+                     run_name="__main__")

@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.api.executor import Executor, SerialExecutor
 from repro.api.lowering import Bucket, group_rows
-from repro.api.results import COORD_NAMES, Results, ResultsBuilder
+from repro.api.results import (COORD_NAMES, Results, ResultsBuilder,
+                               assign_row_coords, empty_coords)
 from repro.api.spec import ScenarioSpec
 from repro.data.pipeline import ClassificationData
 
@@ -158,19 +159,12 @@ class Experiment:
         axis_coords = getattr(self.specs, "axis_coords", None)
         extra = [n for n in getattr(self.specs, "coord_names", ())
                  if n not in COORD_NAMES] if axis_coords else []
-        coords = {name: np.empty(n_rows, object)
-                  for name in (*COORD_NAMES, *extra)}
-        coords["seed"] = np.empty(n_rows, np.int64)
+        coords = empty_coords(n_rows, extra=extra)
         for bucket in buckets:
             for row in bucket.rows:
                 axes = axis_coords(row.spec) if axis_coords else {}
                 for i in row.indices:
-                    coords["fleet"][i] = row.spec.name or f"K{row.spec.k}"
-                    coords["partition"][i] = row.spec.partition
-                    coords["policy"][i] = row.spec.effective_policy
-                    coords["scheme"][i] = row.spec.scheme
-                    coords["seed"][i] = row.seed
-                    coords["spec"][i] = row.spec
+                    assign_row_coords(coords, i, row.spec, row.seed)
                     for name in extra:
                         if name in axes:
                             coords[name][i] = axes[name]

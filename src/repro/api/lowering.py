@@ -436,6 +436,63 @@ def plan_bucket(bucket: Bucket, data, periods: int) -> BucketPlan:
 
 
 # ---------------------------------------------------------------------------
+# compiled-program identity (the serve-layer compile cache key)
+# ---------------------------------------------------------------------------
+
+
+def chunk_lengths(periods: int, chunk: Optional[int]) -> Tuple[int, ...]:
+    """The per-chunk period counts a ``chunk``-chunked horizon dispatches:
+    ``chunk_lengths(7, 3) == (3, 3, 1)`` — one compiled program per
+    *distinct* length (``None`` → one monolithic chunk)."""
+    if chunk is None:
+        return (periods,)
+    chunk = min(max(1, chunk), periods)
+    out = [chunk] * (periods // chunk)
+    if periods % chunk:
+        out.append(periods % chunk)
+    return tuple(out)
+
+
+def program_key(bucket: Bucket, n_rows: int, periods: int,
+                data, test) -> tuple:
+    """Hashable identity of the compiled program one dispatch would run.
+
+    Two dispatches with equal keys hit the same jitted executable (zero
+    new traces — the warm-admission contract ``repro.serve``'s
+    :class:`~repro.serve.ProgramCache` keeps counters on); two dispatches
+    with different keys *may* still share one (the key is deliberately an
+    over-approximation, never the reverse).  Soundness rests on
+    ``bucket.key`` carrying every static-config knob of the engine's
+    program caches (scheme family, ``b_max``/epoch batch = the slot
+    width, ``local_steps``, compression, model dims, ``replan``) while
+    the remaining axes of the abstract trace signature are exactly
+    ``n_rows`` (the padded batch axis), ``k_pad``, the chunk's period
+    count, and the dataset/test shapes — all named here.  Dtypes never
+    vary: every input crosses ``engine.host_to_device``.
+
+    ``n_rows`` is the batch axis *as dispatched* (mesh-padded when the
+    executor pads the bucket to a device mesh).
+    """
+    return (bucket.key, int(n_rows), bucket.k_pad, int(periods),
+            tuple(data.x.shape), tuple(data.y.shape),
+            tuple(test.x.shape), tuple(test.y.shape))
+
+
+def bucket_program_keys(bucket: Bucket, n_rows: int, periods: int,
+                        chunk: Optional[int], data, test) -> Tuple[tuple, ...]:
+    """Every distinct :func:`program_key` a chunked run of this bucket
+    will dispatch (first-use order, deduplicated): one per distinct
+    chunk length."""
+    out, seen = [], set()
+    for p_c in chunk_lengths(periods, chunk):
+        key = program_key(bucket, n_rows, p_c, data, test)
+        if key not in seen:
+            seen.add(key)
+            out.append(key)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
 # phase 2: dispatch (enqueue the device program, return without blocking)
 # ---------------------------------------------------------------------------
 
@@ -729,9 +786,12 @@ class BucketRun:
         self._pending.append((p_c, handle))
         self.dispatched += p_c
 
-    def collect(self) -> None:
+    def collect(self) -> tuple:
         """Block on the oldest in-flight chunk; bank its host series and
-        (closed loop) feed its realized decays to the ξ estimators."""
+        (closed loop) feed its realized decays to the ξ estimators.
+        Returns the banked ``(losses, accs, times, global_batch)`` chunk —
+        each ``(n, P_c)`` — so streaming consumers (``repro.serve``) can
+        forward per-chunk results without reaching into the run."""
         if not self._pending:
             raise RuntimeError("no chunk in flight to collect")
         p_c, handle = self._pending.popleft()
@@ -742,9 +802,26 @@ class BucketRun:
             decays = np.asarray(handle.decays)[:n]
             self._decays.append(decays)
             self._planner.observe(decays, handle.global_batch)
-        self._chunks.append((losses, accs, handle.times,
-                             handle.global_batch))
+        chunk = (losses, accs, handle.times, handle.global_batch)
+        self._chunks.append(chunk)
         self.collected += p_c
+        return chunk
+
+    def park(self) -> list:
+        """Suspend the run at the current chunk boundary: collect every
+        in-flight chunk (returned, oldest first, so the caller can still
+        stream them) and fence the engine carry
+        (:meth:`~repro.fed.engine.EngineState.block_until_ready`).  A
+        parked run holds only finished host/device buffers — resuming it
+        later (plain :meth:`advance`) is bit-identical to never having
+        parked, because chunked execution is interleaving-invariant by
+        construction."""
+        banked = []
+        while self._pending:
+            banked.append(self.collect())
+        if self._state is not None:
+            self._state.block_until_ready()
+        return banked
 
     @property
     def realized_decays(self) -> Optional[np.ndarray]:

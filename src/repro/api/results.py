@@ -46,6 +46,29 @@ import numpy as np
 COORD_NAMES = ("fleet", "partition", "policy", "scheme", "seed", "spec")
 
 
+def empty_coords(n_rows: int, extra=()) -> Dict[str, np.ndarray]:
+    """Allocate the per-row coordinate columns for ``n_rows`` output rows:
+    the standard :data:`COORD_NAMES` plus any ``extra`` (study-axis)
+    names.  Shared by ``Experiment`` and the ``repro.serve`` per-request
+    views, so every ``Results`` producer agrees on column layout."""
+    coords = {name: np.empty(n_rows, object)
+              for name in (*COORD_NAMES, *extra)}
+    coords["seed"] = np.empty(n_rows, np.int64)
+    return coords
+
+
+def assign_row_coords(coords: Dict[str, np.ndarray], i: int,
+                      spec, seed: int) -> None:
+    """Fill output row ``i``'s standard coordinates from its originating
+    spec — the single definition of how a ``ScenarioSpec`` labels a row."""
+    coords["fleet"][i] = spec.name or f"K{spec.k}"
+    coords["partition"][i] = spec.partition
+    coords["policy"][i] = spec.effective_policy
+    coords["scheme"][i] = spec.scheme
+    coords["seed"][i] = seed
+    coords["spec"][i] = spec
+
+
 def time_to_target(accs, times, target_acc: float):
     """Simulated seconds until accuracy first reaches ``target_acc``.
 

@@ -216,9 +216,35 @@ class EngineState:
     (possibly batched, possibly sharded) device arrays and may still be
     in flight — resuming a scan from an uncollected state is exactly how
     chunked dispatch pipelines without host round-trips.
+
+    Because the carry is explicit, a *suspended* trajectory is nothing
+    but a parked ``EngineState`` (plus the host planner's rng/offset
+    state): the serving layer (``repro.serve``) preempts a long horizon
+    at a chunk boundary by simply holding onto this state and resumes it
+    later bit-identically.  :meth:`block_until_ready` is the park
+    operation — it fences the in-flight device work so a suspended run
+    holds finished buffers rather than a growing dispatch queue while
+    other requests use the device.
     """
     params: object
     residual: object = None
+
+    def block_until_ready(self) -> "EngineState":
+        """Fence the carry: block until every in-flight leaf has been
+        computed (the parked-state lifecycle used when a run is
+        preempted).  Values are unchanged — parking is purely a
+        synchronization point, never a semantic one."""
+        jax.block_until_ready((self.params, self.residual))
+        return self
+
+    @property
+    def is_ready(self) -> bool:
+        """Whether every leaf has finished computing (best-effort: hosts
+        arrays without an ``is_ready`` probe count as ready)."""
+        return all(bool(leaf.is_ready()) if hasattr(leaf, "is_ready")
+                   else True
+                   for leaf in jax.tree_util.tree_leaves(
+                       (self.params, self.residual)))
 
 
 def build_schedule(scheduler, batcher, devices, periods: int,

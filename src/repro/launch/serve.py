@@ -1,5 +1,10 @@
-"""Batched serving driver: prefill a prompt batch, then decode with the
-KV/SSM cache (the decode_32k / long_500k path at laptop scale)."""
+"""Batched LLM token-decode driver: prefill a prompt batch, then decode
+with the KV/SSM cache (the decode_32k / long_500k path at laptop scale).
+
+Despite the filename this is *token decoding* for the model zoo, not the
+FEEL experiment service — that is ``repro.serve`` (streaming scenario
+admissions, compile cache, preemptive chunk scheduling).  Demo entry
+point: ``examples/decode_batched.py``."""
 from __future__ import annotations
 
 import argparse

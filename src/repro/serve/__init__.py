@@ -1,0 +1,41 @@
+"""Experiment-as-a-service: streaming scenario arrivals, online
+bucketing, a persistent compile cache, and chunk-granular preemptive
+scheduling.
+
+The static :class:`~repro.api.Experiment` answers "run this grid"; this
+package answers "keep running whatever arrives".  A long-running
+:class:`ExperimentService` accepts :class:`~repro.api.ScenarioSpec`
+requests over time and streams each request's ``Results`` back chunk by
+chunk, built from three serving-specific mechanisms layered on the
+existing lowering:
+
+* **online bucketing** (``admission.py``) — arrivals micro-batch into
+  compiled-program groups keyed on ``spec.bucket_key()`` (the same
+  structural rule static lowering buckets on) within a tunable batching
+  window;
+* **persistent compile cache** (``program_cache.py``) — an index over
+  every dispatched :func:`~repro.api.lowering.program_key`; repeat
+  bucket shapes admit *warm* and skip compilation entirely (zero new
+  ``TraceEvent``s in the PR-6 ledger, test-enforced);
+* **chunk-granular preemption** (``scheduler.py``) — PR 5's resumable
+  :class:`~repro.api.lowering.BucketRun` makes every chunk boundary a
+  preemption point: hot requests take the device from long-horizon
+  background runs, which later resume *bit-identically* (suspended runs
+  are just parked :class:`~repro.fed.engine.EngineState`).
+
+``stats.py`` carries the counters and latency percentiles
+(``benchmarks/serve_load.py`` → ``BENCH_serve.json``).
+
+Naming note: ``launch/serve.py`` and ``examples/decode_batched.py`` are
+the *LLM token-decode* demos for the model zoo — unrelated to this
+package, which is the FEEL experiment service.
+"""
+from repro.serve.admission import AdmissionQueue, PendingRequest
+from repro.serve.program_cache import ProgramCache
+from repro.serve.scheduler import PreemptiveScheduler, ServiceRun
+from repro.serve.service import ExperimentService, Ticket
+from repro.serve.stats import RequestRecord, ServiceStats
+
+__all__ = ["AdmissionQueue", "ExperimentService", "PendingRequest",
+           "PreemptiveScheduler", "ProgramCache", "RequestRecord",
+           "ServiceRun", "ServiceStats", "Ticket"]

@@ -1,0 +1,94 @@
+"""The persistent compiled-program cache index.
+
+The compiled executables themselves live in the engine's program caches
+(``fed.engine``'s ``lru_cache``'d program constructors + each program's
+jit cache, keyed on static config × abstract argument signature) — jax
+already guarantees that dispatching a previously-seen shape skips
+compilation entirely.  What the engine layer does *not* know is the
+serving question: **will this admission compile or not, and how often do
+we win?**  :class:`ProgramCache` is that index: it tracks every
+:func:`~repro.api.lowering.program_key` ever dispatched and classifies
+each admission warm (all of its chunk programs seen before → zero new
+``TraceEvent``s in the PR-6 ledger, test-enforced) or cold, feeding the
+hit/miss counters ``ServiceStats`` reports.
+
+Persistence has two scopes:
+
+* **process scope** (default): the registry is class-shared, so every
+  service instance in a process sees programs warmed by any other — a
+  restarted service object re-admits known shapes warm because the jit
+  caches it fronts are process-level too.
+* **disk scope** (``persist_dir=``): best-effort enablement of jax's
+  own compilation cache, which persists *compiled XLA executables*
+  across processes.  The key registry stays process-scoped on purpose —
+  in a fresh process a known shape still costs one trace (jax re-traces
+  before consulting the XLA cache), so pre-marking disk-cached keys as
+  warm would break the warm ⇒ zero-``TraceEvent`` contract.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Tuple
+
+__all__ = ["ProgramCache"]
+
+
+class ProgramCache:
+    """Hit/miss index over dispatched program shapes (see module doc)."""
+
+    _SHARED: Dict[tuple, int] = {}
+
+    def __init__(self, shared: bool = True,
+                 persist_dir: Optional[str] = None):
+        self._seen: Dict[tuple, int] = (ProgramCache._SHARED if shared
+                                        else {})
+        self.hits = 0
+        self.misses = 0
+        if persist_dir is not None:
+            self._enable_disk_cache(persist_dir)
+
+    @staticmethod
+    def _enable_disk_cache(path: str) -> bool:
+        """Point jax's compilation cache at ``path`` (best-effort: older
+        jax builds without the knob are tolerated silently)."""
+        try:
+            import jax
+            jax.config.update("jax_compilation_cache_dir", str(path))
+            return True
+        except Exception:                                 # noqa: BLE001
+            return False
+
+    def __len__(self) -> int:
+        return len(self._seen)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._seen
+
+    def admit(self, keys: Iterable[tuple]) -> Tuple[int, int]:
+        """Record one admission's program keys; returns ``(hits,
+        misses)`` over the keys (a key both looked up and inserted here
+        counts once).  ``misses == 0`` is the *warm admission* contract:
+        every program this bucket will dispatch has already been traced
+        and compiled in this process, so running it must add zero
+        ``TraceEvent``s to the engine ledger."""
+        hits = misses = 0
+        for key in keys:
+            if key in self._seen:
+                self._seen[key] += 1
+                hits += 1
+            else:
+                self._seen[key] = 1
+                misses += 1
+        self.hits += hits
+        self.misses += misses
+        return hits, misses
+
+    def use_count(self, key: tuple) -> int:
+        """How many admissions have dispatched ``key`` (0 = never)."""
+        return self._seen.get(key, 0)
+
+    @classmethod
+    def clear_shared(cls) -> None:
+        """Drop the process-shared registry (tests only — the jit caches
+        it fronts are NOT cleared, so a cleared index under-reports
+        warmth but never breaks the warm ⇒ no-trace contract)."""
+        cls._SHARED.clear()

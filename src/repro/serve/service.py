@@ -1,0 +1,306 @@
+"""The experiment service: streaming scenario arrivals in, chunked
+results out.
+
+:class:`ExperimentService` is the long-running counterpart of the static
+:class:`~repro.api.Experiment`: instead of a grid known up front, it
+accepts :class:`~repro.api.ScenarioSpec` requests *over time*
+(:meth:`submit` → :class:`Ticket`) and streams each request's results
+back chunk by chunk.  The moving parts, each its own module:
+
+* :class:`~repro.serve.admission.AdmissionQueue` — online bucketing:
+  compatible arrivals (same ``bucket_key`` + horizon) inside the batching
+  window merge into one compiled-program micro-batch;
+* :class:`~repro.serve.program_cache.ProgramCache` — the persistent
+  compile-cache index: admissions whose every chunk-program shape was
+  dispatched before are *warm* and must record zero new ``TraceEvent``s
+  in the PR-6 engine ledger (test-enforced);
+* :class:`~repro.serve.scheduler.PreemptiveScheduler` — chunk-granular
+  preemption over PR 5's resumable :class:`~repro.api.lowering.BucketRun`:
+  a long horizon parks at a chunk boundary when a hotter request arrives
+  and later resumes bit-identically (suspended runs are just parked
+  state);
+* :class:`~repro.serve.stats.ServiceStats` — counters and latency
+  percentiles (the ``BENCH_serve.json`` surface).
+
+The service is single-threaded and *step-driven*: :meth:`step` performs
+due admissions and runs at most one chunk of the hottest active run.
+Time comes from an injected clock (``repro.testing.VirtualClock`` /
+``WallClock``), so tests and the load generator drive arrival tapes and
+measure latency without a single ``time.sleep``.  Drive it like::
+
+    svc = ExperimentService(data, test, chunk_periods=2, window=0.01)
+    t = svc.submit(spec, periods=40)          # returns immediately
+    while not t.done:
+        svc.step()                            # admit + one chunk
+        view = t.partial()                    # complete=False Results
+    final = t.result()                        # bit-identical to the
+                                              # Experiment twin
+
+NOT the LLM decode demo: ``launch/serve.py`` / ``examples/
+decode_batched.py`` serve *token decoding* for the model-zoo side of the
+repo; this package is the FEEL experiment service the ROADMAP's
+experiment-as-a-service item names.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.api import lowering
+from repro.api.results import Results, assign_row_coords, empty_coords
+from repro.api.spec import ScenarioSpec
+from repro.fed import engine
+from repro.launch.mesh import ensure_batch_mesh, pad_batch
+from repro.serve.admission import AdmissionQueue, PendingRequest
+from repro.serve.program_cache import ProgramCache
+from repro.serve.scheduler import PreemptiveScheduler, ServiceRun
+from repro.serve.stats import RequestRecord, ServiceStats
+from repro.testing.clock import WallClock
+
+__all__ = ["ExperimentService", "Ticket"]
+
+
+class Ticket:
+    """One submitted request's streaming result surface.
+
+    The service delivers results chunk by chunk as the scheduler runs the
+    request's bucket; :meth:`partial` exposes everything delivered so far
+    as a ``complete=False`` :class:`~repro.api.results.Results` view (the
+    same named-coordinate surface the static API returns — ``sel`` /
+    ``speed`` / ``final_acc`` all work mid-stream), and :meth:`result`
+    returns the complete view once :attr:`done`.
+    """
+
+    def __init__(self, spec: ScenarioSpec, periods: int, priority: int,
+                 record: RequestRecord):
+        self.spec = spec
+        self.periods = periods
+        self.priority = priority
+        self.record = record
+        self.n_rows = len(spec.seeds)
+        self._coords = empty_coords(self.n_rows)
+        for i, seed in enumerate(spec.seeds):
+            assign_row_coords(self._coords, i, spec, seed)
+        self._chunks: List[tuple] = []
+        self.collected = 0
+
+    @property
+    def done(self) -> bool:
+        return self.collected >= self.periods
+
+    @property
+    def admitted(self) -> bool:
+        return self.record.admitted_at is not None
+
+    def _deliver(self, chunk: tuple, p_c: int) -> None:
+        self._chunks.append(chunk)
+        self.collected += p_c
+
+    def _series(self) -> tuple:
+        if not self._chunks:
+            z = np.zeros((self.n_rows, 0))
+            return z, z, z.astype(np.float64), z.astype(np.int64)
+        return tuple(np.concatenate([c[j] for c in self._chunks], axis=1)
+                     for j in range(4))
+
+    def partial(self) -> Results:
+        """Everything delivered so far (``complete`` flips once the full
+        horizon has streamed in; before that, a zero-period view is a
+        legitimate selection surface, never an error)."""
+        losses, accs, times, gb = self._series()
+        return Results(coords=self._coords, losses=losses, accs=accs,
+                       times=times, global_batch=gb, n_buckets=1,
+                       complete=self.done)
+
+    def result(self) -> Results:
+        """The complete per-request ``Results``; raises while chunks are
+        still outstanding."""
+        if not self.done:
+            raise RuntimeError(
+                f"request not complete: {self.collected} of "
+                f"{self.periods} periods delivered")
+        return self.partial()
+
+
+class ExperimentService:
+    """Long-running FEEL experiment service (see module docstring).
+
+    ``chunk_periods`` is the scheduling granularity: horizons execute as
+    resumable chunks of this many periods (closed-loop ``replan=`` specs
+    chunk at their replan interval instead, exactly like the static
+    executors), and every chunk boundary is a preemption point.
+    ``window`` / ``max_batch`` tune the admission micro-batcher;
+    ``audit=True`` runs the PR-6 static passes (padding taint + compile
+    hygiene) over every *cold* admission's program before it dispatches,
+    accumulating into :attr:`audit_report` (error findings raise).
+    """
+
+    def __init__(self, data, test, *, chunk_periods: int = 1,
+                 window: float = 0.0, max_batch: Optional[int] = None,
+                 clock=None, cache: Optional[ProgramCache] = None,
+                 mesh=None, audit: bool = False):
+        if chunk_periods < 1:
+            raise ValueError(
+                f"chunk_periods must be >= 1, got {chunk_periods}")
+        self.data = data
+        self.test = test
+        self.chunk_periods = chunk_periods
+        self.clock = clock if clock is not None else WallClock()
+        self.cache = cache if cache is not None else ProgramCache()
+        self.mesh = None if mesh is None else ensure_batch_mesh(mesh)
+        self.audit = audit
+        self.audit_report = None
+        self.stats = ServiceStats()
+        self._admission = AdmissionQueue(window=window, max_batch=max_batch)
+        self._scheduler = PreemptiveScheduler(stats=self.stats)
+        self._seq = 0
+
+    # ---- request surface --------------------------------------------------
+    def submit(self, spec: ScenarioSpec, periods: int,
+               priority: int = 0) -> Ticket:
+        """Enqueue one scenario request; returns its :class:`Ticket`
+        immediately (admission happens on a later :meth:`step`, once the
+        batching window admits the request's group).  Lower ``priority``
+        numbers are hotter — they take the next chunk slot from any
+        cooler run already in flight."""
+        if not isinstance(spec, ScenarioSpec):
+            raise TypeError(f"submit expects a ScenarioSpec, got "
+                            f"{type(spec).__name__}")
+        if periods < 1:
+            raise ValueError(f"periods must be >= 1, got {periods}")
+        now = self.clock.now()
+        record = RequestRecord(
+            ticket_id=self._seq, label=spec.label, periods=periods,
+            priority=priority, submitted_at=now)
+        ticket = Ticket(spec, periods, priority, record)
+        self.stats.on_submit(record)
+        self._admission.push(PendingRequest(
+            ticket=ticket, spec=spec, periods=periods, priority=priority,
+            submitted_at=now, seq=self._seq))
+        self._seq += 1
+        return ticket
+
+    def reset_stats(self) -> ServiceStats:
+        """Start a fresh measurement window (e.g. after a warm-up phase):
+        replaces :attr:`stats` with a zeroed :class:`ServiceStats`.  The
+        compile cache, admission queue and active runs are untouched — only
+        the counters and latency records restart."""
+        self.stats = ServiceStats()
+        self._scheduler.stats = self.stats
+        return self.stats
+
+    # ---- service loop -----------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        """No queued arrivals and no admitted run with work left."""
+        return (self._admission.pending == 0
+                and not any(not r.done for r in self._scheduler.active))
+
+    def next_admission_at(self) -> Optional[float]:
+        """Earliest clock time a queued group becomes window-due (lets a
+        virtual-clock driver jump straight there)."""
+        return self._admission.next_due_at()
+
+    def step(self, flush: bool = False) -> bool:
+        """One service-loop turn: perform due admissions, then run one
+        chunk of the hottest active run.  Returns whether any work
+        happened (``False`` = idle at the current clock time).
+        ``flush=True`` admits every queued group regardless of the
+        batching window (drain semantics)."""
+        admitted = self._admit_due(flush=flush)
+        return self._run_one_chunk() or admitted
+
+    def drain(self) -> None:
+        """Flush the admission queue and run until every ticket is done."""
+        while not self.idle:
+            self.step(flush=True)
+
+    # ---- internals --------------------------------------------------------
+    def _admit_due(self, flush: bool) -> bool:
+        groups = self._admission.pop_due(self.clock.now(), flush=flush)
+        for group in groups:
+            self._admit(group)
+        return bool(groups)
+
+    def _admit(self, group: List[PendingRequest]) -> None:
+        now = self.clock.now()
+        buckets = lowering.group_rows([r.spec for r in group])
+        assert len(buckets) == 1, "admission groups on bucket_key"
+        bucket = buckets[0]
+        chunk = (bucket.replan if bucket.replan is not None
+                 else self.chunk_periods)
+        periods = group[0].periods
+
+        n = len(bucket.rows)
+        n_exec = n + (pad_batch(n, self.mesh) if self.mesh is not None
+                      else 0)
+        keys = lowering.bucket_program_keys(
+            bucket, n_exec, periods, chunk, self.data, self.test)
+        hits, misses = self.cache.admit(keys)
+        self.stats.on_admission([r.ticket.record for r in group], now,
+                                hits=hits, misses=misses)
+        if self.audit and misses:
+            self._audit_cold(bucket, min(chunk, periods))
+
+        run = lowering.BucketRun(bucket, self.data, self.test, periods,
+                                 chunk, mesh=self.mesh)
+        srun = ServiceRun(
+            run=run, requests=list(group),
+            priority=min(r.priority for r in group),
+            seq=min(r.seq for r in group), warm=(misses == 0),
+            trace_mark=engine.trace_count())
+        # fan-out map: output index -> computed row, then one take per
+        # request in its local row order (group_rows flattens the group's
+        # specs x seeds in submission order)
+        computed_of = {}
+        for j, row in enumerate(bucket.rows):
+            for i in row.indices:
+                computed_of[i] = j
+        offset = 0
+        for req in group:
+            take = np.array([computed_of[offset + l]
+                             for l in range(len(req.spec.seeds))], np.int64)
+            srun.deliveries.append((req.ticket, take))
+            offset += len(req.spec.seeds)
+        self._scheduler.add(srun)
+
+    def _audit_cold(self, bucket, chunk_len: int) -> None:
+        """PR-6 static passes over a cold admission's program (padding
+        taint + compile hygiene; probe-only — no device work, no ledger
+        pollution).  Error findings raise before anything dispatches."""
+        from repro.analysis import compile_audit, taint
+        from repro.analysis.report import AuditReport
+        if self.audit_report is None:
+            self.audit_report = AuditReport()
+        plan = lowering.plan_bucket(bucket, self.data, chunk_len)
+        traced = lowering.trace_bucket(plan, self.data, self.test)
+        taint.analyze_jaxpr(traced.closed, traced.in_labels,
+                            traced.out_contracts, program=traced.program,
+                            report=self.audit_report)
+        compile_audit.audit_jaxpr_hygiene(
+            traced.closed, program=traced.program,
+            report=self.audit_report)
+        self.audit_report.raise_on_error()
+
+    def _run_one_chunk(self) -> bool:
+        srun = self._scheduler.pick()
+        if srun is None:
+            return False
+        mark = engine.trace_count()
+        if srun.run.can_advance:
+            srun.run.advance()
+        p_before = srun.run.collected
+        chunk = srun.run.collect()
+        p_c = srun.run.collected - p_before
+        now = self.clock.now()
+        records = [r.ticket.record for r in srun.requests]
+        self.stats.on_chunk(records, now,
+                            traces=engine.trace_count() - mark,
+                            warm=srun.warm)
+        for ticket, take in srun.deliveries:
+            ticket._deliver(tuple(arr[take] for arr in chunk), p_c)
+        if srun.done:
+            self.stats.on_complete(records, now)
+            self._scheduler.remove(srun)
+        return True

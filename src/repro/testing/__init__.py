@@ -8,14 +8,24 @@ property tests *run* everywhere instead of skipping on lean images.
 ``repro.testing.no_retrace`` is the compile-discipline guard: a context
 manager asserting exactly how many jit traces a block may cost (default
 zero), replacing ad-hoc ``engine.trace_count()`` before/after pairs.
+
+``repro.testing.clock`` / ``repro.testing.arrivals`` are the serving
+layer's determinism fixtures: a manually-advanced :class:`VirtualClock`
+(service tests never ``time.sleep``) and seeded Poisson/burst
+arrival-process generators shared by ``tests/test_serve.py`` and
+``benchmarks/serve_load.py``.
 """
 from __future__ import annotations
 
 import contextlib
 
 from repro.fed import engine
+from repro.testing.arrivals import (assign_templates, burst_arrivals,
+                                    poisson_arrivals)
+from repro.testing.clock import VirtualClock, WallClock
 
-__all__ = ["no_retrace"]
+__all__ = ["VirtualClock", "WallClock", "assign_templates",
+           "burst_arrivals", "no_retrace", "poisson_arrivals"]
 
 
 @contextlib.contextmanager

@@ -1,0 +1,353 @@
+"""Experiment-as-a-service: streaming admissions, the online bucketer,
+the persistent compile-cache index (warm admissions ⇒ zero new
+TraceEvents), chunk-granular preemption with bit-identical resume, and
+the deterministic clock/arrival fixtures the serving tests run on."""
+import numpy as np
+import pytest
+
+from repro.api import Experiment, ScenarioSpec, SerialExecutor, lowering
+from repro.core import DeviceProfile
+from repro.data.pipeline import ClassificationData
+from repro.serve import (AdmissionQueue, ExperimentService, PendingRequest,
+                         ProgramCache)
+from repro.testing import (VirtualClock, WallClock, assign_templates,
+                           burst_arrivals, no_retrace, poisson_arrivals)
+
+# distinctive shapes (no other module uses dim=26/hidden=32/b_max=14) so
+# engine program caches never collide across test modules
+DIM, HIDDEN, BMAX = 26, 32, 14
+PERIODS = 4
+CHUNK = 2
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    full = ClassificationData.synthetic(n=320, dim=DIM, seed=0, spread=6.0)
+    return full.split(64)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                 for f in [0.7, 1.4, 2.1])
+
+
+def _spec(fleet, **kw):
+    kw.setdefault("name", "srv3")
+    kw.setdefault("b_max", BMAX)
+    kw.setdefault("base_lr", 0.15)
+    kw.setdefault("hidden", HIDDEN)
+    return ScenarioSpec(fleet=fleet, **kw)
+
+
+def _service(data, test, **kw):
+    """A deterministic service: virtual clock + isolated cache index, so
+    every test's hit/miss counters start from zero."""
+    kw.setdefault("chunk_periods", CHUNK)
+    kw.setdefault("clock", VirtualClock())
+    kw.setdefault("cache", ProgramCache(shared=False))
+    return ExperimentService(data, test, **kw)
+
+
+def _assert_bitwise(a, b):
+    np.testing.assert_array_equal(np.asarray(a.losses),
+                                  np.asarray(b.losses))
+    np.testing.assert_array_equal(np.asarray(a.accs), np.asarray(b.accs))
+    np.testing.assert_array_equal(a.times, b.times)
+    np.testing.assert_array_equal(a.global_batch, b.global_batch)
+
+
+# ---------------------------------------------------------------------------
+# deterministic fixtures: clocks + seeded arrival processes
+# ---------------------------------------------------------------------------
+
+
+def test_virtual_clock_and_arrival_fixtures():
+    t1 = poisson_arrivals(4.0, 20, seed=3, start=0.5)
+    np.testing.assert_array_equal(t1, poisson_arrivals(4.0, 20, seed=3,
+                                                       start=0.5))
+    assert not np.array_equal(t1, poisson_arrivals(4.0, 20, seed=4,
+                                                   start=0.5))
+    assert len(t1) == 20 and t1[0] > 0.5 and np.all(np.diff(t1) > 0)
+    with pytest.raises(ValueError, match="rate"):
+        poisson_arrivals(0.0, 5, seed=0)
+
+    b = burst_arrivals(bursts=3, size=4, spacing=2.0, intra=0.01, seed=1)
+    assert len(b) == 12 and np.all(np.diff(b) >= 0)
+    assert b[4] - b[3] > 1.0                  # inter-burst gap dominates
+    np.testing.assert_array_equal(
+        b, burst_arrivals(bursts=3, size=4, spacing=2.0, intra=0.01,
+                          seed=1))
+
+    tape = assign_templates(np.array([0.1, 0.2, 0.3]), ["x", "y"])
+    assert [t for _, t in tape] == ["x", "y", "x"]     # round-robin
+
+    clk = VirtualClock(start=1.0)
+    assert clk.advance(0.5) == 1.5
+    assert clk.advance_to(1.2) == 1.5         # never moves backwards
+    assert clk.advance_to(3.0) == 3.0
+    with pytest.raises(ValueError, match="negative"):
+        clk.advance(-0.1)
+    assert WallClock().now() >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# the online bucketer (pure host logic — no device work)
+# ---------------------------------------------------------------------------
+
+
+def _req(spec, periods, t, seq, priority=0):
+    return PendingRequest(ticket=None, spec=spec, periods=periods,
+                          priority=priority, submitted_at=t, seq=seq)
+
+
+def test_admission_queue_windows_merge_and_slice(fleet):
+    a = _spec(fleet, partition="iid", seeds=(0,))
+    b = _spec(fleet, partition="noniid", base_lr=0.3, seeds=(1,))
+    c = _spec(fleet, b_max=BMAX - 4, seeds=(0,))
+    q = AdmissionQueue(window=1.0)
+    q.push(_req(a, 4, 0.0, 0))
+    q.push(_req(b, 4, 0.2, 1))                # non-structural diffs merge
+    q.push(_req(c, 4, 0.1, 2))                # b_max splits
+    q.push(_req(a, 6, 0.3, 3))                # horizon splits
+    assert q.pending == 4
+    assert q.pop_due(0.5) == []               # everyone inside the window
+    assert q.next_due_at() == 1.0
+    assert [[r.seq for r in g] for g in q.pop_due(1.05)] == [[0, 1]]
+    assert [[r.seq for r in g] for g in q.pop_due(5.0)] == [[2], [3]]
+    assert q.pending == 0 and q.next_due_at() is None
+
+    # max_batch bounds the micro-batch SIZE: an oversize group slices
+    # into full batches; the remainder keeps waiting for its window
+    q = AdmissionQueue(window=10.0, max_batch=2)
+    for s in range(5):
+        q.push(_req(a, 4, float(s), s))
+    assert [[r.seq for r in g]
+            for g in q.pop_due(4.5)] == [[0, 1], [2, 3]]
+    assert q.pending == 1
+    assert q.pop_due(4.6) == []               # remainder not window-due
+    assert [[r.seq for r in g]
+            for g in q.pop_due(0.0, flush=True)] == [[4]]
+
+    with pytest.raises(ValueError, match="window"):
+        AdmissionQueue(window=-0.5)
+    with pytest.raises(ValueError, match="max_batch"):
+        AdmissionQueue(max_batch=0)
+
+
+def test_program_keys_and_chunk_lengths(dataset, fleet):
+    assert lowering.chunk_lengths(7, 3) == (3, 3, 1)
+    assert lowering.chunk_lengths(4, None) == (4,)
+    assert lowering.chunk_lengths(4, 9) == (4,)
+    data, test = dataset
+    b = lowering.group_rows([_spec(fleet, seeds=(0, 1))])[0]
+    keys = lowering.bucket_program_keys(b, 2, 7, 3, data, test)
+    assert len(keys) == 2                     # distinct chunk lengths 3, 1
+    keys44 = lowering.bucket_program_keys(b, 2, 4, 2, data, test)
+    assert len(keys44) == 1
+    # structural twins share program keys; row counts split them
+    b2 = lowering.group_rows([_spec(fleet, partition="iid", base_lr=0.3,
+                                    seeds=(5, 6))])[0]
+    assert lowering.bucket_program_keys(b2, 2, 4, 2, data, test) == keys44
+    assert lowering.bucket_program_keys(b, 3, 4, 2, data, test) != keys44
+
+
+def test_program_cache_index_scopes():
+    ProgramCache.clear_shared()
+    k1, k2 = ("tsrv-fake", 1), ("tsrv-fake", 2)
+    a, b = ProgramCache(), ProgramCache()
+    assert a.admit([k1, k2]) == (0, 2)
+    assert b.admit([k1]) == (1, 0)            # process-shared registry
+    assert b.use_count(k1) == 2 and k2 in b and len(b) == 2
+    iso = ProgramCache(shared=False)
+    assert iso.admit([k1]) == (0, 1)          # isolated index
+    assert len(iso) == 1 and a.use_count(k1) == 2
+    ProgramCache.clear_shared()
+    assert a.admit([k1]) == (0, 1)
+    ProgramCache.clear_shared()
+
+
+# ---------------------------------------------------------------------------
+# the service: streaming, warm admissions, preemption, fan-out
+# ---------------------------------------------------------------------------
+
+
+def test_service_streams_chunks_bit_identical_to_experiment(dataset,
+                                                            fleet):
+    """A submitted request streams in CHUNK-period increments and its
+    final Results are bit-identical (ledgers AND device series) to the
+    static Experiment running the same spec chunked."""
+    data, test = dataset
+    spec = _spec(fleet, partition="noniid", seeds=(0, 1))
+    svc = _service(data, test)
+    t = svc.submit(spec, periods=PERIODS)
+    assert not t.admitted and not t.done
+    with pytest.raises(RuntimeError, match="not complete"):
+        t.result()
+    growth = []
+    while not t.done:
+        assert svc.step()                     # work available every turn
+        part = t.partial()
+        assert part.complete == t.done
+        growth.append(part.losses.shape[1])
+        if not t.done:                        # valid-but-absent selects
+            assert part.sel(scheme="individual").rows == 0    # empty
+    assert growth == [CHUNK, PERIODS]         # one chunk per step
+    assert t.admitted and svc.idle
+    assert svc.stats.admissions == 1 and svc.stats.completed == 1
+    assert svc.stats.chunks == PERIODS // CHUNK
+
+    twin = Experiment(data, test, [spec]).run(
+        PERIODS, executor=SerialExecutor(chunk_periods=CHUNK))
+    res = t.result()
+    assert res.complete and res.rows == 2
+    _assert_bitwise(res, twin)
+    with pytest.raises(ValueError, match="matches no row"):
+        res.sel(scheme="no-such-scheme")
+
+
+def test_warm_admission_records_zero_traces(dataset, fleet):
+    """The compile-cache contract: an admission whose every program key
+    was dispatched before is warm — it must add ZERO new TraceEvents to
+    the engine ledger, and the stats must say so."""
+    data, test = dataset
+    svc = _service(data, test)
+    t0 = svc.submit(_spec(fleet, partition="noniid", seeds=(0, 1)),
+                    periods=PERIODS)
+    svc.drain()
+    assert t0.done
+    assert svc.stats.cold_admissions == 1 and svc.stats.cache_misses == 1
+
+    # structurally identical, every non-structural knob different
+    warm_spec = _spec(fleet, name="w2", partition="iid", base_lr=0.05,
+                      seeds=(5, 6))
+    with no_retrace():
+        t1 = svc.submit(warm_spec, periods=PERIODS)
+        svc.drain()
+    assert t1.done
+    assert svc.stats.warm_admissions == 1 and svc.stats.cache_hits == 1
+    assert svc.stats.warm_admission_traces == 0
+    assert t1.result().rows == 2
+
+
+def test_preempt_park_resume_bit_identity(dataset, fleet):
+    """Chunk-granular preemption: a hot arrival takes the slot from a
+    long-horizon run at its chunk boundary; the parked run resumes and
+    finishes bit-identical (ledgers AND device series) to its
+    uninterrupted Experiment twin."""
+    data, test = dataset
+    svc = _service(data, test)
+    long_spec = _spec(fleet, partition="iid", seeds=(0,))
+    t_long = svc.submit(long_spec, periods=6, priority=5)
+    assert svc.step()                         # admit + run first chunk
+    assert t_long.collected == CHUNK and not t_long.done
+
+    hot_spec = _spec(fleet, partition="noniid", base_lr=0.2, seeds=(1,))
+    t_hot = svc.submit(hot_spec, periods=PERIODS, priority=0)
+    svc.drain()
+    assert t_long.done and t_hot.done
+    assert svc.stats.preemptions == 1 and svc.stats.resumes == 1
+    # the hot run's program shape matches the long run's chunk shape, so
+    # the preempting admission itself was cache-warm
+    assert svc.stats.warm_admissions == 1
+    assert svc.stats.warm_admission_traces == 0
+
+    _assert_bitwise(t_long.result(),
+                    Experiment(data, test, [long_spec]).run(
+                        6, executor=SerialExecutor(chunk_periods=CHUNK)))
+    _assert_bitwise(t_hot.result(),
+                    Experiment(data, test, [hot_spec]).run(
+                        PERIODS, executor=SerialExecutor(
+                            chunk_periods=CHUNK)))
+
+
+def test_out_of_order_completion_partial_views(dataset, fleet):
+    """A hotter later submission finishes first; the still-running
+    earlier ticket exposes a complete=False partial whose sel() is a
+    working (and forgiving) selection surface the whole time."""
+    data, test = dataset
+    svc = _service(data, test)
+    slow = _spec(fleet, partition="iid", seeds=(0,))
+    fast = _spec(fleet, scheme="individual", seeds=(0,))
+    t_slow = svc.submit(slow, periods=6, priority=1)
+    t_fast = svc.submit(fast, periods=PERIODS, priority=0)
+    while not t_fast.done:
+        svc.step()
+    assert not t_slow.done                    # earlier ticket still going
+    part = t_slow.partial()
+    assert not part.complete
+    assert part.sel(scheme="individual").rows == 0    # empty, no raise
+    assert part.sel(partition="iid").rows == 1
+    assert t_fast.result().sel(scheme="individual").rows == 1
+    svc.drain()
+    assert t_slow.done
+    _assert_bitwise(t_slow.result(),
+                    Experiment(data, test, [slow]).run(
+                        6, executor=SerialExecutor(chunk_periods=CHUNK)))
+
+
+def test_window_batches_duplicates_onto_shared_rows(dataset, fleet):
+    """Two compatible requests inside the batching window admit as ONE
+    micro-batch; duplicate (spec, seed) pairs share computed rows and
+    both tickets receive the (identical) results."""
+    data, test = dataset
+    clock = VirtualClock()
+    svc = _service(data, test, window=1.0, clock=clock)
+    spec = _spec(fleet, partition="noniid", seeds=(0, 1))
+    t1 = svc.submit(spec, periods=PERIODS)
+    t2 = svc.submit(spec, periods=PERIODS)
+    assert not svc.step()                     # window holds both back
+    assert not t1.admitted
+    assert svc.next_admission_at() == 1.0
+    clock.advance_to(1.0)
+    assert svc.step()                         # window expired: one batch
+    assert t1.admitted and t2.admitted
+    svc.drain()
+    assert svc.stats.admissions == 1 and svc.stats.admitted_requests == 2
+    _assert_bitwise(t1.result(), t2.result())
+
+
+def test_closed_loop_replan_through_service(dataset, fleet):
+    """A replan= spec chunks at its replan interval inside the service
+    (overriding chunk_periods) and matches the static closed-loop run."""
+    data, test = dataset
+    spec = _spec(fleet, partition="iid", replan=2, seeds=(0,))
+    svc = _service(data, test, chunk_periods=3)   # replan must win
+    t = svc.submit(spec, periods=PERIODS)
+    svc.drain()
+    assert t.done and t.collected == PERIODS
+    _assert_bitwise(t.result(),
+                    Experiment(data, test, [spec]).run(PERIODS))
+
+
+def test_audit_runs_on_cold_admissions_only(dataset, fleet):
+    """audit=True runs the PR-6 static passes over each cold admission's
+    program before dispatch; warm admissions skip the probe."""
+    data, test = dataset
+    svc = _service(data, test, audit=True)
+    t = svc.submit(_spec(fleet, partition="noniid", seeds=(0, 1)),
+                   periods=PERIODS)
+    svc.drain()
+    assert t.done
+    report = svc.audit_report
+    assert report is not None and report.ok and not report.errors()
+    n_findings = len(report.findings)
+    svc.submit(_spec(fleet, partition="iid", seeds=(2, 3)),
+               periods=PERIODS)
+    svc.drain()
+    assert len(svc.audit_report.findings) == n_findings   # warm: no probe
+
+
+def test_submit_and_construction_validation(dataset, fleet):
+    data, test = dataset
+    svc = _service(data, test)
+    with pytest.raises(TypeError, match="ScenarioSpec"):
+        svc.submit("not-a-spec", periods=3)
+    with pytest.raises(ValueError, match="periods"):
+        svc.submit(_spec(fleet), periods=0)
+    with pytest.raises(ValueError, match="chunk_periods"):
+        _service(data, test, chunk_periods=0)
+    with pytest.raises(ValueError, match="window"):
+        _service(data, test, window=-0.1)
+    with pytest.raises(ValueError, match="max_batch"):
+        _service(data, test, max_batch=0)
