@@ -17,6 +17,7 @@ Run:  PYTHONPATH=src python -m benchmarks.fig_users
 from __future__ import annotations
 
 import json
+import time
 
 import numpy as np
 
@@ -48,9 +49,17 @@ def main(fast: bool = True):
 
     exp = Experiment(data, test, study)
     before = engine.trace_count()
+    t0 = time.perf_counter()
     res = exp.run(periods, executor=AsyncExecutor())
+    wall = time.perf_counter() - t0
     traces = engine.trace_count() - before
     assert res.n_buckets == 1, res.n_buckets     # whole K-sweep: one bucket
+    # per-user throughput: user-rows advanced per wall second across the
+    # whole fused run (each output row simulates its K users for
+    # ``periods`` rounds)
+    user_periods = sum(int(k) * periods * res.sel(num_users=k).rows
+                       for k in res.unique("num_users"))
+    tput = user_periods / wall
 
     table = {}
     print(f"{'K':>3} {'partition':<8} {'final acc':>16} "
@@ -72,16 +81,20 @@ def main(fast: bool = True):
             print(f"{k:>3} {part:<8} {acc.mean():>8.3f}±{acc.std():<6.3f} "
                   f"{t_tgt:>10.1f}")
 
+    print(f"throughput: {tput:.0f} user-periods/s "
+          f"({user_periods} user-rows in {wall:.2f}s)")
     with open("BENCH_fig_users.json", "w") as f:
         json.dump({"users": USERS, "periods": periods,
                    "n_seeds": len(seeds), "target_acc": TARGET_ACC,
                    "n_buckets": res.n_buckets, "traces": traces,
+                   "wall_s": wall, "user_periods_per_s": tput,
                    "cells": table}, f, indent=2)
 
     accs_iid = [table[f"K{k}/iid"]["final_acc_mean"] for k in USERS]
     return [(f"fig_users/{len(USERS)}sizes_{len(seeds)}seed_{periods}p",
-             0.0,
+             wall,
              f"buckets={res.n_buckets};traces={traces};"
+             f"tput={tput:.0f};"
              f"acc_iid_K{USERS[0]}={accs_iid[0]:.3f};"
              f"acc_iid_K{USERS[-1]}={accs_iid[-1]:.3f}")]
 

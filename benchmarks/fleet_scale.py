@@ -1,0 +1,135 @@
+"""Massive-fleet scaling: per-user throughput vs K and banded vs
+monolithic padding (the PR-8 topology subsystem's headline numbers).
+
+Three rungs over a sampled (S-of-K) proposed-policy scenario family with
+a cheap shape profile (hidden=16, b_max=8, fading_samples=64 — the point
+is the fleet axis, not the model):
+
+1. **banded mixed grid** — ``users=[8, 1024, 10240]`` with ``bands=True``
+   lowers to one compiled program per power-of-two K band (8 / 1024 /
+   16384; trace-ledger asserted) instead of padding the 8-user row to
+   10240 lanes;
+2. **monolithic mixed grid** — the same study unbanded: one program, every
+   row padded to the grid max.  The banded-vs-monolithic speedup is the
+   warm-execution wall ratio (second run of each, compiles excluded);
+3. **per-K throughput sweep** — each K solo (``users=10_240`` included),
+   reporting per-user throughput in users·periods/s of wall time.
+
+On a multi-device jax runtime (e.g. ``XLA_FLAGS=
+--xla_force_host_platform_device_count=8``) every run shards its batch
+axis over a ``MeshExecutor`` — the CI ``fleet-scale`` job exercises
+exactly that layout.  The seed count scales with the device count so
+every mesh slot holds a *real* row (an n=1 bucket on an 8-device mesh
+would otherwise pad to 8 copies of the same work), and the throughput
+numbers count all rows — mesh scaling shows up as higher
+user-periods/s at the same wall clock.
+
+Run:  PYTHONPATH=src python -m benchmarks.fleet_scale
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+
+from repro.api import Experiment, MeshExecutor, ScenarioSpec, grid
+from repro.channels.model import CellConfig
+from repro.core import DeviceProfile
+from repro.data.pipeline import ClassificationData
+from repro.fed import engine
+from repro.topology import Sampling, band_width
+
+USERS = [64, 1024, 10240]
+BAND_USERS = [8, 1024, 10240]
+PERIODS = 4
+COHORT = 32                       # S: per-round participants
+
+
+def _base_fleet():
+    """Heterogeneous CPU tiers; users= cycles them round-robin per K."""
+    return tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                 for f in (0.7, 1.4, 2.1))
+
+
+def _executor():
+    return MeshExecutor() if jax.device_count() > 1 else None
+
+
+def _timed_run(exp: Experiment, **kw) -> tuple:
+    t0 = time.perf_counter()
+    res = exp.run(PERIODS, executor=_executor(), **kw)
+    jax.block_until_ready((res.losses, res.accs))
+    return res, time.perf_counter() - t0
+
+
+def main(fast: bool = True):
+    max_k = max(max(USERS), max(BAND_USERS))
+    full = ClassificationData.synthetic(n=2 * max_k, dim=16, seed=0,
+                                        spread=6.0)
+    data, test = full.split(min(512, max_k // 2))
+    seeds = tuple(range(max(1, jax.device_count())))
+    base = ScenarioSpec(fleet=_base_fleet(), name="fleet", partition="iid",
+                        policy="proposed", b_max=8, base_lr=0.1, hidden=16,
+                        seeds=seeds, cell=CellConfig(fading_samples=64),
+                        sampling=Sampling(size=COHORT))
+
+    # ---- rung 1+2: banded vs monolithic mixed-K grid ----------------------
+    study = grid(base, users=BAND_USERS)
+    exp = Experiment(data, test, study)
+    n_bands = len({band_width(k) for k in BAND_USERS})
+    assert len(exp.lower(bands=True)) == n_bands
+    before = engine.trace_count()
+    _, banded_cold = _timed_run(exp, bands=True)
+    banded_traces = engine.trace_count() - before
+    assert banded_traces == n_bands, \
+        f"expected one program per band ({n_bands}), traced {banded_traces}"
+    res_b, banded_warm = _timed_run(exp, bands=True)
+
+    before = engine.trace_count()
+    _, mono_cold = _timed_run(exp)
+    mono_traces = engine.trace_count() - before
+    res_m, mono_warm = _timed_run(exp)
+    assert res_m.n_buckets == 1, res_m.n_buckets
+    speedup = mono_warm / banded_warm
+    print(f"mixed K={BAND_USERS}: banded {banded_warm:.2f}s "
+          f"({n_bands} programs) vs monolithic {mono_warm:.2f}s "
+          f"(pad {band_width(max(BAND_USERS))} vs {max(BAND_USERS)}) "
+          f"-> speedup {speedup:.2f}x")
+
+    # ---- rung 3: per-user throughput vs K ---------------------------------
+    table = {}
+    print(f"{'K':>6} {'wall s':>8} {'user-periods/s':>15}")
+    for k in USERS:
+        kexp = Experiment(data, test, grid(base, users=[k]))
+        res, wall = _timed_run(kexp)       # cold (includes compile)
+        res, wall = _timed_run(kexp)       # warm: steady-state throughput
+        assert res.n_buckets == 1
+        tput = k * PERIODS * res.rows / wall
+        table[f"K{k}"] = {"wall_s": wall,
+                          "user_periods_per_s": tput,
+                          "sim_time_s": float(res.times[:, -1].mean()),
+                          "final_acc": float(res.accs[:, -1].mean())}
+        print(f"{k:>6} {wall:>8.2f} {tput:>15.0f}")
+
+    out = {"periods": PERIODS, "cohort": COHORT,
+           "n_seeds": len(seeds), "devices": jax.device_count(),
+           "banded": {"users": BAND_USERS, "n_programs": banded_traces,
+                      "cold_s": banded_cold, "warm_s": banded_warm},
+           "monolithic": {"k_pad": max(BAND_USERS),
+                          "n_programs": mono_traces,
+                          "cold_s": mono_cold, "warm_s": mono_warm},
+           "banded_speedup": speedup,
+           "throughput": table}
+    with open("BENCH_fleet.json", "w") as f:
+        json.dump(out, f, indent=2)
+
+    kmax = max(USERS)
+    return [(f"fleet_scale/K{kmax}_{PERIODS}p", table[f"K{kmax}"]["wall_s"],
+             f"tput={table[f'K{kmax}']['user_periods_per_s']:.0f};"
+             f"banded_speedup={speedup:.2f};devices={jax.device_count()}")]
+
+
+if __name__ == "__main__":
+    for r in main(fast=True):
+        print(",".join(map(str, r)))

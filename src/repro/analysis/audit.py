@@ -6,7 +6,10 @@ and writes a machine-readable ``AUDIT_report.json``:
 * **taint + hygiene** over the lowered bucket program of every grid
   cell: the four Table-II schemes (feel/gradient_fl at both compression
   settings, individual, model_fl), the ragged padded-fleet program
-  (``--users``), and the ``local_steps > 1`` delta-upload variant;
+  (``--users``), the ``local_steps > 1`` delta-upload variant, the
+  per-round-sampled (time-varying participation mask) programs on both
+  engines, the hierarchical cell→edge→cloud family (alone and composed
+  with sampling), and the K-banded sub-bucketed sweep;
 * **trace ledger** over a real chunked closed-loop run
   (``Experiment.run(replan=R, audit=True)``) — proving one trace per
   (bucket, chunk-length) program and zero retraces across replan
@@ -32,6 +35,7 @@ from repro.api.lowering import group_rows, plan_bucket, trace_bucket
 from repro.core import DeviceProfile
 from repro.data.pipeline import ClassificationData
 from repro.fed import engine
+from repro.topology import Sampling, Topology
 
 
 def _fleet(k: int):
@@ -64,13 +68,33 @@ def _grid_specs(users):
         "ragged": [_spec(u, scheme="feel") for u in users],
         # tau > 1 local SGD (delta uploads must cancel on padded lanes)
         "local-steps": [_spec(k, scheme="feel", local_steps=2)],
+        # per-round S-of-K participation: the time-varying (n, P, K)
+        # active mask must dominate every cross-user reduction exactly
+        # like the static padding mask it generalizes — on BOTH engines
+        "sampled": [_spec(u, scheme="feel", sampling=Sampling(size=2))
+                    for u in users]
+                   + [_spec(k, scheme="individual",
+                            sampling=Sampling(size=2)),
+                      _spec(k, scheme="model_fl",
+                            sampling=Sampling(size=2))],
+        # cell→edge→cloud hierarchy: the "hier" program family (member
+        # routing one-hots, cloud-cadence merges), plus its composition
+        # with per-round sampling
+        "hier": [_spec(k, scheme="feel",
+                       topology=Topology(cells=2, edges=2, agg_every=2)),
+                 _spec(k, scheme="feel", sampling=Sampling(size=2),
+                       topology=Topology(cells=2, edges=2, agg_every=2))],
+        # K-banded sub-bucketing: the ragged sweep again, one program
+        # per power-of-two band (group_rows(..., bands=True) below)
+        "banded": [_spec(u, scheme="feel", sampling=Sampling(fraction=0.5))
+                   for u in users],
     }
 
 
 def _audit_static(report: AuditReport, data, test, users, periods: int):
     """Taint + jaxpr hygiene over every grid cell's bucket program."""
     for grid, specs in _grid_specs(users).items():
-        for bucket in group_rows(specs):
+        for bucket in group_rows(specs, bands=(grid == "banded")):
             plan = plan_bucket(bucket, data, periods)
             traced = trace_bucket(plan, data, test)
             program = f"{grid}:{traced.program}"

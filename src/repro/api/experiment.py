@@ -48,16 +48,19 @@ class Experiment:
     test: ClassificationData
     specs: Sequence[ScenarioSpec]
 
-    def lower(self, replan: Optional[int] = None) -> List[Bucket]:
+    def lower(self, replan: Optional[int] = None,
+              bands: bool = False) -> List[Bucket]:
         """The bucketed row plan (introspection / tests): which rows share
         a compiled program, in execution order.  Duplicate (spec, seed)
         rows collapse onto one computed row (``Row.indices`` fans out).
-        ``replan`` applies the run-level closed-loop override (see
+        ``replan`` applies the run-level closed-loop override and
+        ``bands`` the power-of-two K-band sub-bucketing (see
         :meth:`run`)."""
-        return group_rows(self.specs, replan=replan)
+        return group_rows(self.specs, replan=replan, bands=bands)
 
     def run(self, periods: int, executor: Optional[Executor] = None,
-            replan: Optional[int] = None, audit: bool = False) -> Results:
+            replan: Optional[int] = None, audit: bool = False,
+            bands: bool = False) -> Results:
         """Run the whole grid and return the complete ``Results``.
 
         ``replan=R`` turns every FEEL-family bucket closed-loop for this
@@ -78,21 +81,30 @@ class Experiment:
         raise :class:`repro.analysis.AuditError`.  Audit composes with
         any executor — the passes inspect programs and ledgers, not the
         execution schedule.
+
+        ``bands=True`` splits each bucket by power-of-two K band
+        (``repro.topology.band_width``) so a mixed-K grid pads each row
+        to its band instead of the grid max — one compiled program per
+        band, bit-identical results (the band is invisible to
+        ``Results``), order-of-magnitude less padded compute when fleet
+        sizes span decades.
         """
         if audit:
             from repro.fed import engine as _engine
             mark = len(_engine.trace_events())
         builder = None
-        for builder in self._collected(periods, executor, replan):
+        for builder in self._collected(periods, executor, replan,
+                                       bands=bands):
             pass
         res = builder.build()
         if audit:
-            report = self._audit(periods, replan, mark)
+            report = self._audit(periods, replan, mark, bands=bands)
             res = _dc_replace(res, audit=report)
             report.raise_on_error()
         return res
 
-    def _audit(self, periods: int, replan: Optional[int], mark: int):
+    def _audit(self, periods: int, replan: Optional[int], mark: int,
+               bands: bool = False):
         """The ``run(audit=True)`` pass bundle (see :mod:`repro.analysis`)."""
         from repro.analysis import compile_audit, determinism, taint
         from repro.analysis.report import AuditReport
@@ -102,7 +114,7 @@ class Experiment:
         report = AuditReport()
         compile_audit.audit_traces(_engine.trace_events()[mark:],
                                    label="trace-ledger", report=report)
-        for bucket in self.lower(replan=replan):
+        for bucket in self.lower(replan=replan, bands=bands):
             plan = lowering.plan_bucket(bucket, self.data, periods)
             traced = lowering.trace_bucket(plan, self.data, self.test)
             taint.analyze_jaxpr(traced.closed, traced.in_labels,
@@ -114,7 +126,8 @@ class Experiment:
         return report
 
     def stream(self, periods: int, executor: Optional[Executor] = None,
-               replan: Optional[int] = None) -> Iterator[Results]:
+               replan: Optional[int] = None,
+               bands: bool = False) -> Iterator[Results]:
         """Yield a cumulative partial ``Results`` after each bucket
         collection (the final yield is the complete result).
 
@@ -122,16 +135,17 @@ class Experiment:
         is already dispatched before the first yield, so consuming the
         stream slowly does not serialize the device work.
         """
-        for builder in self._collected(periods, executor, replan):
+        for builder in self._collected(periods, executor, replan,
+                                       bands=bands):
             yield builder.partial()
 
     def _collected(self, periods: int, executor: Optional[Executor],
-                   replan: Optional[int] = None
+                   replan: Optional[int] = None, bands: bool = False
                    ) -> Iterator[ResultsBuilder]:
         """Drive the executor, yielding the builder after each bucket
         lands (``run`` assembles once at the end; ``stream`` snapshots a
         partial per yield)."""
-        buckets = self.lower(replan=replan)
+        buckets = self.lower(replan=replan, bands=bands)
         if not buckets:
             raise ValueError("Experiment has no specs")
         if executor is None:

@@ -80,6 +80,7 @@ from repro.data.pipeline import (FederatedBatcher, partition_iid,
                                  partition_noniid)
 from repro.fed import engine, feel_model
 from repro.launch.mesh import pad_batch
+from repro.topology import band_width
 
 tree_map = jax.tree_util.tree_map
 
@@ -114,10 +115,19 @@ class Bucket:
     loop): it comes from the rows' specs (structural, so all rows agree)
     or from a run-level override, and executors must execute such a
     bucket as ``replan``-period chunks via :class:`BucketRun`.
+
+    ``band`` is the K-band sub-bucketing width (``group_rows(...,
+    bands=True)``): rows pad to the power-of-two band instead of the
+    bucket max, so a mixed-K grid compiles one program per *band* — a
+    K=8 row stops paying for a K=10240 neighbour's padding — while bands
+    of equal width keep sharing one compiled program (``program_key``
+    already carries ``k_pad``).  ``None`` (the default) is the PR-4
+    single-program behaviour.
     """
     key: tuple
     rows: List[Row]
     replan: Optional[int] = None
+    band: Optional[int] = None
 
     @property
     def kind(self) -> str:
@@ -125,7 +135,10 @@ class Bucket:
 
     @property
     def k_pad(self) -> int:
-        """The padded user-axis width: max K over the bucket's rows."""
+        """The padded user-axis width: the K band when sub-bucketed,
+        else max K over the bucket's rows."""
+        if self.band is not None:
+            return self.band
         return max(r.spec.k for r in self.rows)
 
     def active_mask(self) -> np.ndarray:
@@ -137,7 +150,8 @@ class Bucket:
 
 
 def group_rows(specs: Sequence[ScenarioSpec],
-               replan: Optional[int] = None) -> List[Bucket]:
+               replan: Optional[int] = None,
+               bands: bool = False) -> List[Bucket]:
     """Flatten specs × seeds into rows, grouped into first-seen-order
     buckets by shape compatibility.
 
@@ -149,6 +163,13 @@ def group_rows(specs: Sequence[ScenarioSpec],
     lowering (the ``Experiment.run(replan=...)`` convenience — one knob
     for a whole grid).  Dev-family specs have no ξ loop and silently keep
     open-loop execution, so a mixed grid accepts the override.
+
+    ``bands=True`` further splits each bucket by the power-of-two K band
+    (``repro.topology.band_width``) of its rows: one :class:`Bucket` —
+    and hence one compiled program — per band, each padded to the band
+    width instead of the grid max.  Results are bit-identical to the
+    unbanded lowering (each row's plan and trajectory never depended on
+    its neighbours' padding); only compile-shape economics change.
     """
     if replan is not None and (not isinstance(replan, int)
                                or isinstance(replan, bool) or replan < 1):
@@ -170,6 +191,7 @@ def group_rows(specs: Sequence[ScenarioSpec],
             eff_spec = (spec if eff == spec.replan
                         else replace(spec, replan=eff))
         key = eff_spec.bucket_key()
+        band = band_width(eff_spec.k) if bands else None
         replans[key] = eff
         for seed in spec.seeds:
             row_key = (eff_spec, seed)
@@ -180,13 +202,13 @@ def group_rows(specs: Sequence[ScenarioSpec],
                 # Study.axis_coords lookups are keyed by declared specs)
                 entry = [spec, seed, [index]]
                 seen[row_key] = entry[2]
-                entries.setdefault(key, []).append(entry)
+                entries.setdefault((key, band), []).append(entry)
             index += 1
     return [Bucket(key=key,
                    rows=[Row(spec=s, seed=sd, indices=tuple(ix))
                          for s, sd, ix in rows],
-                   replan=replans[key])
-            for key, rows in entries.items()]
+                   replan=replans[key], band=band)
+            for (key, band), rows in entries.items()]
 
 
 def _partition(spec: ScenarioSpec, data, seed: int):
@@ -232,7 +254,7 @@ def _plan_key(r: Row) -> tuple:
     work."""
     s = r.spec
     return (s.fleet, s.effective_policy, s.b_max, s.compression, s.cell,
-            s.hidden, s.depth, r.seed)
+            s.hidden, s.depth, r.seed, s.sampling, s.topology)
 
 
 def _rescale_lr(horizon, base_lr: float, ref_batch: float):
@@ -316,7 +338,8 @@ class _FeelPlanner:
                 devices=r.spec.fleet, n_params=n_params,
                 policy=r.spec.effective_policy, b_max=r.spec.b_max,
                 base_lr=r.spec.base_lr, compression=r.spec.compression,
-                cell_cfg=r.spec.cell, seed=r.seed)
+                cell_cfg=r.spec.cell, seed=r.seed,
+                sampling=r.spec.sampling, topology=r.spec.topology)
 
         self.schedulers: List[FeelScheduler] = []
         self._sched_of: List[int] = []
@@ -350,24 +373,42 @@ class _FeelPlanner:
         # every row
         k_pad = self.bucket.k_pad
         schedules = []
+        parts: List[Optional[np.ndarray]] = []
+        clouds: List[Optional[np.ndarray]] = []
         for i, r in enumerate(rows):
             sched = self.schedulers[self._sched_of[i]]
             horizon = planned[self._sched_of[i]]
             if r.spec.base_lr != sched.base_lr:
                 horizon = _rescale_lr(horizon, r.spec.base_lr,
                                       sched.ref_batch)
+            parts.append(horizon.participation)
+            clouds.append(horizon.cloud)
             s = engine.build_schedule(
                 sched, self.batchers[i], r.spec.fleet, periods,
                 r.spec.local_steps, horizon=horizon,
                 time_offset=float(self._offsets[i]))
             self._offsets[i] = s.times[-1]
             schedules.append(engine.pad_schedule(s, k_pad))
+        # static (n, k_pad) padding mask unless some row sampled this
+        # chunk — then the realized cohorts ride a time-varying
+        # (n, P, k_pad) mask whose padded columns stay exactly 0
+        active = self.bucket.active_mask()
+        if any(p is not None for p in parts):
+            active = np.repeat(active[:, None, :], periods, axis=1)
+            for i, (r, p) in enumerate(zip(rows, parts)):
+                if p is not None:
+                    active[i, :, :r.spec.k] = p
+        payload = {"schedules": schedules, "active": active}
+        if rows[0].spec.topology is not None:   # structural: all rows agree
+            payload["member"] = np.stack([
+                r.spec.topology.member_matrix(r.spec.k, k_pad)
+                for r in rows])
+            payload["cloud"] = np.stack(clouds).astype(np.float32)
         return BucketPlan(
             bucket=self.bucket, input_dim=self.input_dim,
             times=np.stack([s.times for s in schedules]),
             global_batch=np.stack([s.global_batch for s in schedules]),
-            payload={"schedules": schedules,
-                     "active": self.bucket.active_mask()})
+            payload=payload)
 
     def observe(self, decays: np.ndarray, global_batch: np.ndarray):
         """Feed one collected chunk's realized per-period loss decays —
@@ -395,7 +436,8 @@ class _DevPlanner:
                 # model-based FL uploads the raw parameters: d·p bits
                 payload_bits=32.0 * n_params,
                 upload=(r.spec.scheme == "model_fl"),
-                seed=r.seed, cell=Cell.make(r.seed, r.spec.cell))
+                seed=r.seed, cell=Cell.make(r.seed, r.spec.cell),
+                sampling=r.spec.sampling)
             for r in rows]
         self._offsets = np.zeros(len(rows))
 
@@ -413,16 +455,29 @@ class _DevPlanner:
         idx = np.zeros((n, periods, k_pad, self.batch), np.int64)
         for i, (r, h) in enumerate(zip(rows, horizons)):
             idx[i, :, :r.spec.k] = h.idx
+        active = self.bucket.active_mask()
+        if any(h.participation is not None for h in horizons):
+            active = np.repeat(active[:, None, :], periods, axis=1)
+            for i, (r, h) in enumerate(zip(rows, horizons)):
+                if h.participation is not None:
+                    active[i, :, :r.spec.k] = h.participation
+            gb = np.stack([
+                (self.batch * h.participation.astype(np.int64).sum(1)
+                 if h.participation is not None
+                 else np.full(periods, self.batch * r.spec.k, np.int64))
+                for r, h in zip(rows, horizons)])
+        else:
+            gb = np.stack([
+                np.full(periods, self.batch * r.spec.k, np.int64)
+                for r in rows])
         return BucketPlan(
             bucket=self.bucket, input_dim=self.input_dim,
             times=np.stack([h.times for h in horizons]),
-            global_batch=np.stack([
-                np.full(periods, self.batch * r.spec.k, np.int64)
-                for r in rows]),
+            global_batch=gb,
             payload={"idx": idx,
                      "lr": np.array([r.spec.base_lr for r in rows],
                                     np.float32),
-                     "active": self.bucket.active_mask()})
+                     "active": active})
 
 
 def _make_planner(bucket: Bucket, data, per_row: bool = False):
@@ -503,6 +558,7 @@ def _dispatch_feel(plan: BucketPlan, data, test, mesh,
     spec0 = rows[0].spec
     schedules = plan.payload["schedules"]
     active = plan.payload["active"]
+    member = plan.payload.get("member")      # hierarchical buckets only
     k_pad = plan.bucket.k_pad
 
     n = len(rows)
@@ -512,16 +568,31 @@ def _dispatch_feel(plan: BucketPlan, data, test, mesh,
         residual0 = tree_map(
             lambda p: jnp.zeros((p.shape[0], k_pad) + p.shape[1:], p.dtype),
             params0)
+        if member is not None:
+            # every edge replica starts from the row's global init
+            params0 = tree_map(
+                lambda a: jnp.broadcast_to(
+                    a[:, None], (a.shape[0], member.shape[1]) + a.shape[1:]),
+                params0)
         if pad:
             params0, residual0 = _pad_rows((params0, residual0), n, pad)
         state = engine.EngineState(params=params0, residual=residual0)
     if pad:
         active = _pad_rows(active, n, pad)
         schedules = [schedules[i % n] for i in range(n + pad)]
-    state, (losses, accs, decays) = engine.resume_trajectory_batch(
-        state, schedules, data, test,
-        local_steps=spec0.local_steps, compress=spec0.compress,
-        ratio=spec0.compression, mesh=mesh, active=active)
+    if member is not None:
+        cloud = plan.payload["cloud"]
+        if pad:
+            member, cloud = _pad_rows((member, cloud), n, pad)
+        state, (losses, accs, decays) = engine.resume_hier_trajectory_batch(
+            state, member, cloud, schedules, data, test,
+            local_steps=spec0.local_steps, compress=spec0.compress,
+            ratio=spec0.compression, mesh=mesh, active=active)
+    else:
+        state, (losses, accs, decays) = engine.resume_trajectory_batch(
+            state, schedules, data, test,
+            local_steps=spec0.local_steps, compress=spec0.compress,
+            ratio=spec0.compression, mesh=mesh, active=active)
     return BucketHandle(bucket=plan.bucket, losses=losses, accs=accs,
                         times=plan.times, global_batch=plan.global_batch,
                         decays=decays, state=state)
@@ -622,37 +693,78 @@ def trace_bucket(plan: BucketPlan, data, test) -> TracedBucket:
     rows = plan.bucket.rows
     spec0 = rows[0].spec
     k_pad = plan.bucket.k_pad
+    n = len(rows)
     periods = plan.times.shape[1]
     name = f"{plan.bucket.key}/P{periods}"
+    if plan.bucket.band is not None:
+        name += f"/B{plan.bucket.band}"
     with engine.suspend_trace_count():
         if plan.bucket.kind == "feel":
             schedules = plan.payload["schedules"]
-            active = engine.host_to_device(plan.payload["active"])
+            # the engine always hands the scan a time-varying (n, P, K)
+            # mask (a static mask broadcasts) — trace what it runs.  The
+            # label states only the structural fact: padded-user lanes
+            # are exact zeros (a sampled-out participant is data, not a
+            # lane, so it needs no certificate).
+            active = engine._normalize_active_batch(
+                plan.payload["active"], n, periods, k_pad)
             params0 = _init_params_batch(rows, plan.input_dim)
             residual0 = tree_map(
                 lambda p: jnp.zeros((p.shape[0], k_pad) + p.shape[1:],
                                     p.dtype), params0)
+            member = plan.payload.get("member")
             xs = engine.stack_schedules(schedules)
             data_args = engine.host_to_device(
                 (data.x, data.y, test.x, test.y))
-            fn = engine.trajectory_program(
-                spec0.local_steps, spec0.compress, spec0.compression)
-            closed = jax.make_jaxpr(fn)(
-                params0, residual0, active, xs, *data_args)
-            labels = (
-                tree_map(lambda _: NO_LABEL, params0),
-                tree_map(lambda _: LaneLabel(1, 0.0), residual0),
-                LaneLabel(1, 0.0),
-                {"idx": LaneLabel(2), "weight": LaneLabel(2),
-                 "batch": LaneLabel(2), "lr": NO_LABEL},
-                NO_LABEL, NO_LABEL, NO_LABEL, NO_LABEL)
-            n_leaves = len(jax.tree_util.tree_leaves(params0))
+            if member is not None:
+                params_e0 = tree_map(
+                    lambda a: jnp.broadcast_to(
+                        a[:, None],
+                        (a.shape[0], member.shape[1]) + a.shape[1:]),
+                    params0)
+                member_d = engine.host_to_device(np.asarray(member))
+                cloud = engine.host_to_device(
+                    np.asarray(plan.payload["cloud"]))
+                fn = engine.hier_trajectory_program(
+                    spec0.local_steps, spec0.compress, spec0.compression,
+                    n_edges=member.shape[1])
+                closed = jax.make_jaxpr(fn)(
+                    params_e0, residual0, member_d, active, cloud, xs,
+                    *data_args)
+                # member's padded-user columns are all-zero one-hots —
+                # the monoid identity of the routing contraction — and
+                # active's padded lanes are zero; per-edge replicas are
+                # global values (no user lane), so NO_LABEL
+                labels = (
+                    tree_map(lambda _: NO_LABEL, params_e0),
+                    tree_map(lambda _: LaneLabel(1, 0.0), residual0),
+                    LaneLabel(2, 0.0),
+                    LaneLabel(2, 0.0),
+                    NO_LABEL,
+                    {"idx": LaneLabel(2), "weight": LaneLabel(2),
+                     "batch": LaneLabel(2), "lr": NO_LABEL},
+                    NO_LABEL, NO_LABEL, NO_LABEL, NO_LABEL)
+                n_leaves = len(jax.tree_util.tree_leaves(params_e0))
+            else:
+                fn = engine.trajectory_program(
+                    spec0.local_steps, spec0.compress, spec0.compression)
+                closed = jax.make_jaxpr(fn)(
+                    params0, residual0, active, xs, *data_args)
+                labels = (
+                    tree_map(lambda _: NO_LABEL, params0),
+                    tree_map(lambda _: LaneLabel(1, 0.0), residual0),
+                    LaneLabel(2, 0.0),
+                    {"idx": LaneLabel(2), "weight": LaneLabel(2),
+                     "batch": LaneLabel(2), "lr": NO_LABEL},
+                    NO_LABEL, NO_LABEL, NO_LABEL, NO_LABEL)
+                n_leaves = len(jax.tree_util.tree_leaves(params0))
             # outputs: (params, residual, (losses, accs, decays))
             contracts = {n_leaves + i: OutContract(axis=1, value=0.0)
                          for i in range(n_leaves)}
         else:
             idx, lr = plan.payload["idx"], plan.payload["lr"]
-            active = plan.payload["active"]
+            active = engine._normalize_active_batch(
+                plan.payload["active"], n, periods, k_pad)
             p0 = _init_params_batch(rows, plan.input_dim)
             dev_params0 = tree_map(
                 lambda a: jnp.broadcast_to(
@@ -667,7 +779,7 @@ def trace_bucket(plan: BucketPlan, data, test) -> TracedBucket:
             closed = jax.make_jaxpr(fn)(*batched, *data_args)
             labels = (
                 tree_map(lambda _: LaneLabel(1, "variant"), dev_params0),
-                LaneLabel(2), NO_LABEL, LaneLabel(1, 0.0),
+                LaneLabel(2), NO_LABEL, LaneLabel(2, 0.0),
                 NO_LABEL, NO_LABEL, NO_LABEL, NO_LABEL)
             contracts = {}
     return TracedBucket(program=name, closed=closed,

@@ -53,6 +53,7 @@ import jax
 from repro.channels.model import CellConfig
 from repro.core.baselines import POLICIES
 from repro.core.latency import DeviceProfile
+from repro.topology import Sampling, Topology
 
 SCHEMES = ("feel", "gradient_fl", "model_fl", "individual")
 # The dev-family schemes train full local epochs with a fixed per-device
@@ -78,6 +79,8 @@ class ScenarioSpec:
     hidden: int = 256
     depth: int = 3
     replan: Optional[int] = None         # closed-loop ξ re-plan interval
+    sampling: Optional[Sampling] = None  # per-round S-of-K participation
+    topology: Optional[Topology] = None  # cell→edge→cloud hierarchy
 
     def __post_init__(self):
         object.__setattr__(self, "fleet", tuple(self.fleet))
@@ -102,6 +105,25 @@ class ScenarioSpec:
                 raise ValueError(
                     f"replan must be a positive int (periods per "
                     f"closed-loop chunk), got {self.replan!r}")
+        if self.sampling is not None and \
+                not isinstance(self.sampling, Sampling):
+            raise TypeError(
+                f"sampling= expects a repro.topology.Sampling, got "
+                f"{type(self.sampling).__name__}")
+        if self.topology is not None:
+            if not isinstance(self.topology, Topology):
+                raise TypeError(
+                    f"topology= expects a repro.topology.Topology, got "
+                    f"{type(self.topology).__name__}")
+            if self.is_dev_scheme:
+                raise ValueError(
+                    "topology= hierarchizes the server aggregation; the "
+                    f"{self.scheme!r} scheme keeps per-device parameters "
+                    "and has no aggregation tier to split")
+            if self.k < self.topology.cells:
+                raise ValueError(
+                    f"fleet of {self.k} users cannot populate the "
+                    f"topology's {self.topology.cells} cells")
 
     # ---- derived lowering attributes -------------------------------------
     @property
@@ -150,13 +172,23 @@ class ScenarioSpec:
         executes its horizon as ``replan``-period chunked scans (the chunk
         boundary is where ξ feedback lands), and a bucket's rows must
         chunk together — one device program per chunk covers the whole
-        bucket."""
+        bucket.
+
+        ``topology`` contributes its structural part — ``(cells, edges,
+        agg_every)`` shape the hierarchical scan (number of edge replicas,
+        cloud cadence), while ``backhaul_bps`` only changes ledger values
+        and is absent.  ``sampling`` is deliberately NOT structural: a
+        participation mask is per-period *data* through the same active
+        machinery as fleet padding, so sampled and unsampled scenarios
+        share one program."""
         if self.is_dev_scheme:
             return ("dev", self.scheme, self.dev_epoch_batch,
                     self.hidden, self.depth)
+        topo = (None if self.topology is None
+                else self.topology.structural_key())
         return ("feel", self.b_max, self.local_steps,
                 self.compress, self.compression if self.compress else None,
-                self.hidden, self.depth, self.replan)
+                self.hidden, self.depth, self.replan, topo)
 
 
 jax.tree_util.register_static(ScenarioSpec)

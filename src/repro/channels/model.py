@@ -28,6 +28,16 @@ def path_loss_db(dist_km: np.ndarray) -> np.ndarray:
     return 128.1 + 37.6 * np.log10(np.maximum(dist_km, 1e-4))
 
 
+def wired_latency(bits: float, rate_bps: float) -> float:
+    """Deterministic wired-link transfer time (the cell→edge metro hop is
+    folded into the radio frame; this models the edge→cloud backhaul of a
+    :class:`~repro.topology.Topology`, which has no fading and hence no
+    Monte-Carlo stream)."""
+    if rate_bps <= 0:
+        raise ValueError(f"wired rate must be positive, got {rate_bps!r}")
+    return float(bits) / float(rate_bps)
+
+
 @dataclass
 class Cell:
     cfg: CellConfig

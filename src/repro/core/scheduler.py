@@ -19,6 +19,7 @@ from repro.core.baselines import POLICIES
 from repro.core.efficiency import XiEstimator, lr_scale
 from repro.core.latency import (DeviceProfile, downlink_latency,
                                 gradient_bits, uplink_latency)
+from repro.topology import ParticipationSampler, Sampling, Topology
 
 
 @dataclass(frozen=True)
@@ -38,13 +39,23 @@ class PeriodPlan:
 class PlanHorizon:
     """``periods`` stacked :class:`PeriodPlan` arrays — the scheduler's
     output in the form the device-resident engine consumes (one array per
-    field, leading period axis, zero per-period Python objects)."""
+    field, leading period axis, zero per-period Python objects).
+
+    ``participation`` is the realized per-round S-of-K cohort mask when
+    the scheduler carries a :class:`~repro.topology.Sampling` (None =
+    everyone participates every period); ``cloud`` flags the cloud-round
+    periods of a :class:`~repro.topology.Topology` horizon (None = flat
+    single-tier aggregation).  Both are *outputs*: the lowering threads
+    them into the engine's time-varying active mask and the hierarchical
+    scan's merge cadence."""
     batch: np.ndarray            # (P, K) int
     tau_up: np.ndarray           # (P, K)
     tau_down: np.ndarray         # (P, K)
     lr: np.ndarray               # (P,) float
     latency: np.ndarray          # (P,) predicted seconds per period
     global_batch: np.ndarray     # (P,) int
+    participation: Optional[np.ndarray] = None   # (P, K) f32 {0,1}
+    cloud: Optional[np.ndarray] = None           # (P,) f32 {0,1}
 
     @property
     def periods(self) -> int:
@@ -67,16 +78,36 @@ class FeelScheduler:
     xi_est: XiEstimator = field(default_factory=XiEstimator)
     reopt_every: int = 5         # outer B* search cadence (channel stats
                                  # are stationary; warm-start in between)
+    sampling: Optional[Sampling] = None    # per-round S-of-K participation
+    topology: Optional[Topology] = None    # cell→edge→cloud hierarchy
     _period: int = 0
     _dist_km: Optional[np.ndarray] = None
-    _b_cache: Optional[float] = None
+    _b_cache: Optional[float] = None       # topology horizons: (cells,) array
 
     def __post_init__(self):
         if self.cell is None:
             self.cell = Cell.make(self.seed, self.cell_cfg)
         self.rng = np.random.default_rng(self.seed + 1)
-        # user positions are fixed for a training run; fading varies per period
+        # user positions are fixed for a training run; fading varies per
+        # period.  Under a topology each user's distance is read as the
+        # distance to its OWN cell's base station — the single disc draw
+        # is reused unchanged, so adding a topology leaves the channel
+        # stream bit-identical to the flat scenario's.
         self._dist_km = self.cell.drop_users(len(self.devices))
+        # participation draws live on their own stream (sampling.py) so
+        # they perturb no existing draw order
+        self._participation = (
+            None if self.sampling is None else
+            ParticipationSampler(self.sampling, len(self.devices),
+                                 self.seed))
+
+    def _draw_participation(self, periods: int) -> Optional[np.ndarray]:
+        """The next ``periods`` cohort masks (None when unsampled);
+        exactly one draw per planned period, so chunked horizons consume
+        the stream like the monolithic plan."""
+        if self._participation is None:
+            return None
+        return self._participation.draw(periods)
 
     @property
     def payload_bits(self) -> float:
@@ -132,12 +163,27 @@ class FeelScheduler:
         (one batched bisection for the whole horizon instead of P scalar
         Algorithm-1 runs); the fixed-batch baselines stay on the cheap
         per-period closed forms.
+
+        With ``sampling`` set, the horizon first draws the per-round
+        participation masks (their own rng stream), restricts every
+        allocation to the period's cohort via the masked rows solver, and
+        returns the masks as ``PlanHorizon.participation``.  With
+        ``topology`` set, Algorithm 1 allocates per cell per period and
+        the latency ledger adds the edge→cloud backhaul on cloud rounds
+        (``PlanHorizon.cloud``).
         """
+        part = self._draw_participation(periods)
+        if self.topology is not None:
+            return self._plan_horizon_topo(periods, part, warm_start,
+                                           closed_loop)
         if self.policy == "proposed":
             return self._plan_horizon_proposed(periods, warm_start,
-                                               closed_loop)
+                                               closed_loop, part)
         if self.policy in ("online", "full", "random"):
-            return self._plan_horizon_fixed(periods)
+            return self._plan_horizon_fixed(periods, part)
+        if part is not None:
+            raise ValueError(
+                f"sampling is not supported for policy {self.policy!r}")
         plans = [self.plan() for _ in range(periods)]
         return PlanHorizon(
             batch=np.stack([p.batch for p in plans]),
@@ -148,7 +194,9 @@ class FeelScheduler:
                              np.float64),
             global_batch=np.array([p.global_batch for p in plans], np.int64))
 
-    def _plan_horizon_fixed(self, periods: int) -> PlanHorizon:
+    def _plan_horizon_fixed(self, periods: int,
+                            part: Optional[np.ndarray] = None
+                            ) -> PlanHorizon:
         """Fixed-batch baselines, whole horizon in one lockstep evaluation.
 
         Bit-identical to ``periods`` successive ``plan()`` calls: the
@@ -157,8 +205,14 @@ class FeelScheduler:
         block (≡ P sequential (K,) pulls), and the equal-slot latency math
         is ``solver.fixed_slot_rows`` — the rows analog of
         ``baselines._fixed_batch_policy``.
+
+        ``part``: per-round participation masks.  The random policy still
+        draws its full (P, K) block first (stream invariance: a sampled
+        horizon consumes the rng exactly like an unsampled one) and the
+        mask then zeroes out absent users; the equal TDMA slots split the
+        frame among the period's cohort only.
         """
-        from repro.core.solver import fixed_slot_rows
+        from repro.core.solver import FleetRows, fixed_slot_rows
         c = self.cell.cfg
         K = len(self.devices)
         rates_up, rates_down = self.cell.avg_rate_updown_rows(
@@ -170,25 +224,46 @@ class FeelScheduler:
         else:                                    # random
             batch = self.rng.integers(
                 1, self.b_max + 1, size=(periods, K)).astype(float)
-        tau_up, tau_down, latency = fixed_slot_rows(
-            self.devices, batch, rates_up, rates_down, self.payload_bits,
-            c.frame_up_s, c.frame_down_s)
-        ib = np.maximum(np.round(batch).astype(int), 1)
+        if part is None:
+            tau_up, tau_down, latency = fixed_slot_rows(
+                self.devices, batch, rates_up, rates_down,
+                self.payload_bits, c.frame_up_s, c.frame_down_s)
+            ib = np.maximum(np.round(batch).astype(int), 1)
+        else:
+            fr = FleetRows.from_devices(self.devices,
+                                        periods).with_mask(part)
+            tau_up, tau_down, latency = fixed_slot_rows(
+                fr, batch * part, rates_up, rates_down,
+                self.payload_bits, c.frame_up_s, c.frame_down_s)
+            ib = np.where(part > 0.5,
+                          np.maximum(np.round(batch).astype(int), 1), 0)
         gb = ib.sum(1)
         self._period += periods
         return PlanHorizon(
             batch=ib, tau_up=tau_up, tau_down=tau_down,
             lr=self.base_lr * np.sqrt(gb / self.ref_batch),
-            latency=latency, global_batch=gb.astype(np.int64))
+            latency=latency, global_batch=gb.astype(np.int64),
+            participation=part)
 
     def _plan_horizon_proposed(self, periods: int, warm_start: bool = False,
-                               closed_loop: bool = False) -> PlanHorizon:
-        from repro.core.solver import optimize_batch_rows, solve_period_rows
+                               closed_loop: bool = False,
+                               part: Optional[np.ndarray] = None
+                               ) -> PlanHorizon:
+        from repro.core.solver import (FleetRows, optimize_batch_rows,
+                                       solve_period_rows)
         c = self.cell.cfg
         K = len(self.devices)
-        # one batched interleaved draw — same rng stream order as plan()
+        # one batched interleaved draw — same rng stream order as plan().
+        # A sampled horizon draws rates for ALL K users regardless (the
+        # cohort mask selects; it never re-shapes the Monte-Carlo stream).
         rates_up, rates_down = self.cell.avg_rate_updown_rows(
             self._dist_km, periods)
+        # part=None keeps the plain devices path (bitwise the PR-4 code);
+        # a cohort mask routes through the masked rows solver, whose
+        # per-row bounds and reductions see participants only
+        rows = (self.devices if part is None else
+                FleetRows.from_devices(self.devices, periods)
+                .with_mask(part))
         xi = self.xi_est.xi
         # B* re-optimized on the reopt cadence; rows are independent given
         # their rates, so every reopt period solves in one batched call
@@ -203,7 +278,8 @@ class FeelScheduler:
                       if warm else None)
             cap = self.xi_est.decay_cap if closed_loop else None
             b_star = optimize_batch_rows(
-                self.devices, rates_up[reopt], rates_down[reopt],
+                rows if part is None else rows.take(reopt),
+                rates_up[reopt], rates_down[reopt],
                 self.payload_bits, c.frame_up_s, c.frame_down_s, xi,
                 self.b_max, b_prev=b_prev,
                 n_candidates=33 if warm else 97,
@@ -217,18 +293,156 @@ class FeelScheduler:
                 B[p] = carry
         else:
             B[:] = carry
-        sol = solve_period_rows(self.devices, rates_up, rates_down,
+        sol = solve_period_rows(rows, rates_up, rates_down,
                                 self.payload_bits, c.frame_up_s,
                                 c.frame_down_s, xi, B, self.b_max)
         self._b_cache = float(B[-1])
         self._period += periods
         batch = np.maximum(np.round(sol["batch"]).astype(int), 1)
+        if part is not None:
+            batch = np.where(part > 0.5, batch, 0)
         gb = batch.sum(1)
         return PlanHorizon(
             batch=batch, tau_up=sol["tau_up"], tau_down=sol["tau_down"],
             lr=np.array([lr_scale(self.base_lr, g, self.ref_batch)
                          for g in gb], np.float64),
-            latency=sol["latency"], global_batch=gb.astype(np.int64))
+            latency=sol["latency"], global_batch=gb.astype(np.int64),
+            participation=part)
+
+    def _plan_horizon_topo(self, periods: int,
+                           part: Optional[np.ndarray],
+                           warm_start: bool = False,
+                           closed_loop: bool = False) -> PlanHorizon:
+        """Hierarchical horizon: Algorithm 1 allocates *within each cell*
+        per period (the paper's single-cell 𝒫₁, one masked row per
+        (cell, period)), and cloud-round periods add the edge→cloud
+        backhaul round trip to the latency ledger.
+
+        The wireless substrate is untouched: one disc draw, one batched
+        fading draw for all K users — each user's distance is to its own
+        cell's BS and each cell runs the full ``CellConfig`` spectrum, so
+        the cell partition enters ONLY as a mask on the rows solver.  The
+        per-period radio latency is the slowest cell's round (cells
+        transmit concurrently); user-level arrays (batch, τ) recombine by
+        summing the disjoint per-cell rows.
+
+        A cell whose whole cohort is sampled out this period solves a
+        deterministic dummy problem (its full-cell mask) that is zeroed
+        from every output and consumes no rng — the lockstep arrays stay
+        rectangular and warning-free, and the cell's B* carry is simply
+        not advanced.
+        """
+        from repro.core.solver import (FleetRows, fixed_slot_rows,
+                                       optimize_batch_rows,
+                                       solve_period_rows)
+        topo = self.topology
+        c = self.cell.cfg
+        K = len(self.devices)
+        C, P = topo.cells, periods
+        cloud = topo.cloud_rounds(periods, offset=self._period)
+        rates_up, rates_down = self.cell.avg_rate_updown_rows(
+            self._dist_km, periods)
+        cmask = topo.cell_masks(K)                        # (C, K)
+        mask = (cmask[:, None, :] if part is None
+                else cmask[:, None, :] * part[None])      # (C, P, K)
+        mask = np.broadcast_to(mask, (C, P, K))
+        nonempty = mask.sum(2) > 0                        # (C, P)
+        # solver rows are cell-major (row c*P + p)
+        solve_mask = np.where(nonempty[:, :, None], mask,
+                              np.broadcast_to(cmask[:, None, :],
+                                              (C, P, K))).reshape(C * P, K)
+        fr = FleetRows.from_devices(self.devices,
+                                    C * P).with_mask(solve_mask)
+        flat_up = np.broadcast_to(rates_up, (C, P, K)).reshape(C * P, K)
+        flat_down = np.broadcast_to(rates_down,
+                                    (C, P, K)).reshape(C * P, K)
+        if self.policy == "proposed":
+            xi = self.xi_est.xi
+            carry = (np.full(C, np.nan) if self._b_cache is None
+                     else np.asarray(self._b_cache, float).copy())
+            base = np.array([(self._period + p) % self.reopt_every == 0
+                             for p in range(P)])
+            # per-cell B* cadence; a cold cell re-opts at its first
+            # non-empty period even off-cadence
+            reopt_cp = np.zeros((C, P), bool)
+            cold = np.isnan(carry)
+            for p in range(P):
+                need = nonempty[:, p] & (base[p] | cold)
+                reopt_cp[:, p] = need
+                cold = cold & ~need
+            rf = reopt_cp.reshape(C * P)
+            B_cp = np.empty((C, P))
+            if rf.any():
+                warm = warm_start and not np.isnan(carry).all()
+                b_prev = (np.repeat(carry, P)[rf] if warm else None)
+                cap = self.xi_est.decay_cap if closed_loop else None
+                b_star = optimize_batch_rows(
+                    fr.take(rf), flat_up[rf], flat_down[rf],
+                    self.payload_bits, c.frame_up_s, c.frame_down_s, xi,
+                    self.b_max, b_prev=b_prev,
+                    n_candidates=33 if warm else 97,
+                    dl_cap=(None if cap is None
+                            else np.full(int(rf.sum()), cap)))
+                j = 0
+                for ci in range(C):
+                    cur = carry[ci]
+                    for p in range(P):
+                        if reopt_cp[ci, p]:
+                            cur = float(b_star[j])
+                            j += 1
+                        B_cp[ci, p] = 1.0 if np.isnan(cur) else cur
+                    carry[ci] = cur
+            else:
+                B_cp[:] = np.where(np.isnan(carry), 1.0, carry)[:, None]
+            sol = solve_period_rows(fr, flat_up, flat_down,
+                                    self.payload_bits, c.frame_up_s,
+                                    c.frame_down_s, xi,
+                                    B_cp.reshape(C * P), self.b_max)
+            bt = np.where(fr.active,
+                          np.maximum(np.round(np.nan_to_num(sol["batch"]))
+                                     .astype(int), 1), 0)
+            tau_u_r, tau_d_r = sol["tau_up"], sol["tau_down"]
+            lat_r = sol["latency"]
+            self._b_cache = carry
+        else:                                    # online / full / random
+            if self.policy == "online":
+                pol = np.ones((P, K))
+            elif self.policy == "full":
+                pol = np.full((P, K), float(self.b_max))
+            else:
+                pol = self.rng.integers(
+                    1, self.b_max + 1, size=(P, K)).astype(float)
+            batch_rows = np.broadcast_to(pol, (C, P, K)).reshape(C * P, K)
+            tau_u_r, tau_d_r, lat_r = fixed_slot_rows(
+                fr, batch_rows * solve_mask, flat_up, flat_down,
+                self.payload_bits, c.frame_up_s, c.frame_down_s)
+            bt = np.where(fr.active,
+                          np.maximum(np.round(batch_rows).astype(int), 1),
+                          0)
+        # recombine: zero the dummy rows, sum disjoint cells per user,
+        # barrier (max) across concurrent cells per period
+        live = nonempty[:, :, None]
+        bt = np.where(live, bt.reshape(C, P, K), 0)
+        tau_up = np.where(live, np.nan_to_num(tau_u_r).reshape(C, P, K),
+                          0.0).sum(0)
+        tau_down = np.where(live, np.nan_to_num(tau_d_r).reshape(C, P, K),
+                            0.0).sum(0)
+        radio = np.where(nonempty, np.nan_to_num(lat_r).reshape(C, P),
+                         0.0).max(0)
+        latency = radio + cloud.astype(float) * topo.backhaul_roundtrip(
+            self.payload_bits)
+        batch = bt.sum(0)                                 # (P, K)
+        gb = batch.sum(1)
+        if self.policy == "proposed":
+            lr = np.array([lr_scale(self.base_lr, g, self.ref_batch)
+                           for g in gb], np.float64)
+        else:
+            lr = self.base_lr * np.sqrt(gb / self.ref_batch)
+        self._period += periods
+        return PlanHorizon(
+            batch=batch, tau_up=tau_up, tau_down=tau_down, lr=lr,
+            latency=latency, global_batch=gb.astype(np.int64),
+            participation=part, cloud=cloud)
 
     def plan(self) -> PeriodPlan:
         c = self.cell.cfg
@@ -293,6 +507,11 @@ def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
     for i, s in enumerate(schedulers):
         if s.policy != "proposed":
             out[i] = s.plan_horizon(periods)
+        elif s.topology is not None:
+            # hierarchical horizons solve per (cell, period) with their
+            # own reopt bookkeeping — solo, flags forwarded
+            out[i] = s.plan_horizon(periods, warm_start=warm_start,
+                                    closed_loop=closed_loop)
         else:
             key = (s.payload_bits, s.cell.cfg.frame_up_s,
                    s.cell.cfg.frame_down_s, s.b_max, s.reopt_every)
@@ -312,6 +531,9 @@ def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
         K = max(ks)
         fleet_rows = FleetRows.from_fleets(
             [tuple(s.devices) for s in scheds], k_pad=K)
+        # participation first, matching plan_horizon's draw order; its
+        # dedicated stream means fused vs. solo stays bitwise either way
+        parts = [s._draw_participation(P) for s in scheds]
         rates_up = np.empty((M, P, K))
         rates_down = np.empty((M, P, K))
         for m, s in enumerate(scheds):           # per-scheduler rng streams
@@ -324,6 +546,12 @@ def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
         flat_up = rates_up.reshape(M * P, K)
         flat_down = rates_down.reshape(M * P, K)
         flat_fleets = fleet_rows.repeat(P)       # row m*P+p = scheduler m
+        if any(p_m is not None for p_m in parts):
+            pm = np.ones((M, P, K))
+            for m, p_m in enumerate(parts):
+                if p_m is not None:              # pad cols stay 1; the
+                    pm[m, :, :ks[m]] = p_m       # fleet mask zeroes them
+            flat_fleets = flat_fleets.with_mask(pm.reshape(M * P, K))
         xi_rows = np.repeat(xi, P)
         B = np.empty((M, P))
         if reopt.any():
@@ -364,8 +592,9 @@ def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
         sol = solve_period_rows(flat_fleets, flat_up, flat_down,
                                 s0.payload_bits, c.frame_up_s, c.frame_down_s,
                                 xi_rows, B.reshape(M * P), s0.b_max)
-        # round active batches up to >= 1; padded columns stay exactly 0
-        batch = np.where(fleet_rows.active[:, None, :],
+        # round active batches up to >= 1; padded columns and sampled-out
+        # users stay exactly 0
+        batch = np.where(flat_fleets.active.reshape(M, P, K),
                          np.maximum(np.round(sol["batch"]).astype(int)
                                     .reshape(M, P, K), 1), 0)
         gb = batch.sum(2)
@@ -380,7 +609,8 @@ def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
                 lr=np.array([lr_scale(s.base_lr, g, s.ref_batch)
                              for g in gb[m]], np.float64),
                 latency=sol["latency"].reshape(M, P)[m],
-                global_batch=gb[m].astype(np.int64))
+                global_batch=gb[m].astype(np.int64),
+                participation=parts[m])
     return out
 
 
@@ -401,6 +631,7 @@ class DevHorizon:
     tau_down: np.ndarray         # (P, K)
     rates_up: np.ndarray         # (P, K)
     rates_down: np.ndarray       # (P, K)
+    participation: Optional[np.ndarray] = None   # (P, K) f32 {0,1}
 
     @property
     def periods(self) -> int:
@@ -429,46 +660,78 @@ class DevScheduler:
     seed: int = 0
     cell: Optional[Cell] = None
     cell_cfg: CellConfig = field(default_factory=CellConfig)
+    sampling: Optional[Sampling] = None    # per-round S-of-K participation
 
     def __post_init__(self):
         if self.cell is None:
             self.cell = Cell.make(self.seed, self.cell_cfg)
         self.rng = np.random.default_rng(self.seed)
         self._dist_km = self.cell.drop_users(len(self.parts))
+        self._participation = (
+            None if self.sampling is None else
+            ParticipationSampler(self.sampling, len(self.parts), self.seed))
 
     def plan_horizon(self, periods: int,
                      time_offset: float = 0.0) -> DevHorizon:
         """``time_offset`` seeds the cumulative time axis (chunked
         horizons accumulate *from* the offset — the seeded cumsum is the
         only form bit-identical to the monolithic ledger; 0.0 degenerates
-        to the plain cumsum bitwise)."""
+        to the plain cumsum bitwise).
+
+        With ``sampling`` set, each period's cohort alone splits the TDMA
+        frame (equal slots over S, zero for absent users) and alone enters
+        the straggler max; every rng draw (positions, minibatch indices,
+        fading) is still made for all K users so the streams — and hence
+        every participant's trajectory — are untouched by who sat out."""
         K = len(self.parts)
         c = self.cell.cfg
+        part = (None if self._participation is None
+                else self._participation.draw(periods))
         idx = np.empty((periods, K, self.batch), np.int64)
         for p in range(periods):         # same rng order as the PR-1 loop
             idx[p] = np.stack(
-                [self.rng.choice(part, size=self.batch,
-                                 replace=len(part) < self.batch)
-                 for part in self.parts])
+                [self.rng.choice(part_k, size=self.batch,
+                                 replace=len(part_k) < self.batch)
+                 for part_k in self.parts])
         rates_up, rates_down = self.cell.avg_rate_updown_rows(
             self._dist_km, periods)
         # one local epoch per period: ⌈|D_k|/B⌉ minibatch steps
         t_local = np.array([
-            d.local_grad_latency(self.batch) * max(1, len(part) // self.batch)
-            for d, part in zip(self.devices, self.parts)])
-        tau_u = np.full((periods, K), c.frame_up_s / K)
-        tau_d = np.full((periods, K), c.frame_down_s / K)
+            d.local_grad_latency(self.batch) * max(1, len(p_k) // self.batch)
+            for d, p_k in zip(self.devices, self.parts)])
+        if part is None:
+            tau_u = np.full((periods, K), c.frame_up_s / K)
+            tau_d = np.full((periods, K), c.frame_down_s / K)
+        else:
+            # float64 cohort sizes: the f32 mask must not demote the slot
+            # widths below the unsampled path's precision
+            s_p = part.astype(np.float64).sum(1)     # >= 1 per period
+            tau_u = np.where(part > 0.5, c.frame_up_s / s_p[:, None], 0.0)
+            tau_d = np.where(part > 0.5, c.frame_down_s / s_p[:, None], 0.0)
         if self.upload:
-            t_up = uplink_latency(self.payload_bits, tau_u, c.frame_up_s,
+            # absent users get a dummy full-frame slot for the latency
+            # math (keeps it finite/warning-free) and are then masked out
+            # of the straggler max; part=None leaves tau untouched (the
+            # where selects the original values), so that path is bitwise
+            su = np.where(tau_u > 0, tau_u, c.frame_up_s)
+            sd = np.where(tau_d > 0, tau_d, c.frame_down_s)
+            t_up = uplink_latency(self.payload_bits, su, c.frame_up_s,
                                   rates_up)
-            t_down = downlink_latency(self.payload_bits, tau_d,
+            t_down = downlink_latency(self.payload_bits, sd,
                                       c.frame_down_s, rates_down)
             t_upd = np.array([d.update_latency() for d in self.devices])
-            per_period = ((t_local + t_up).max(1)
-                          + (t_down + t_upd).max(1))
-        else:
+            up_leg = t_local + t_up
+            down_leg = t_down + t_upd
+            if part is not None:
+                up_leg = np.where(part > 0.5, up_leg, 0.0)
+                down_leg = np.where(part > 0.5, down_leg, 0.0)
+            per_period = up_leg.max(1) + down_leg.max(1)
+        elif part is None:
             per_period = np.full(periods, t_local.max())
+        else:
+            per_period = np.where(part > 0.5, t_local[None, :], 0.0).max(1)
         times = np.cumsum(np.concatenate([[time_offset], per_period]))[1:]
         return DevHorizon(idx=idx, times=times,
                           tau_up=tau_u, tau_down=tau_d,
-                          rates_up=rates_up, rates_down=rates_down)
+                          rates_up=rates_up, rates_down=rates_down,
+                          participation=part)

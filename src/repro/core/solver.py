@@ -340,6 +340,17 @@ class FleetRows:
         """Row subset (boolean or integer index along axis 0)."""
         return self._map(lambda x: np.asarray(x)[idx])
 
+    def with_mask(self, mask: np.ndarray) -> "FleetRows":
+        """Compose a further activity mask (per-round participation, cell
+        membership) onto this one.  Multiplicative, so a participation
+        mask can never resurrect a padded column, and an all-ones mask is
+        a bitwise no-op (``mask * 1.0 == mask``)."""
+        extra = np.broadcast_to(np.asarray(mask, float),
+                                self.mask.shape)
+        return FleetRows(**{f: getattr(self, f) for f in (
+            "a", "b", "lo", "t_upd", "is_cpu", "cps", "f_cpu",
+            "g_t_low", "g_slope", "g_b_th")}, mask=self.mask * extra)
+
     # ---- masked reductions / per-element latency --------------------------
     def mmax(self, x: np.ndarray) -> np.ndarray:
         return np.where(self.active, x, -np.inf).max(1)

@@ -262,6 +262,10 @@ def build_schedule(scheduler, batcher, devices, periods: int,
     float addition is non-associative, and only the seeded form is
     bit-identical to the monolithic ledger; offset 0.0 degenerates to the
     plain cumsum bitwise since ``0.0 + x == x``).
+
+    A sampled horizon (``horizon.participation`` set) masks the
+    ``local_steps > 1`` compute-latency max to the period's participants —
+    a sampled-out straggler cannot stretch a round it does not join.
     """
     if horizon is None:
         horizon = scheduler.plan_horizon(periods)
@@ -274,9 +278,19 @@ def build_schedule(scheduler, batcher, devices, periods: int,
     per_period = horizon.latency.copy()
     if local_steps > 1:
         # tau local steps multiply the local-compute subperiod (paper §VII)
-        per_period += (local_steps - 1) * np.array(
-            [max(float(d.local_grad_latency(b))
-                 for d, b in zip(devices, bp)) for bp in horizon.batch])
+        part = getattr(horizon, "participation", None)
+        if part is None:
+            per_period += (local_steps - 1) * np.array(
+                [max(float(d.local_grad_latency(b))
+                     for d, b in zip(devices, bp)) for bp in horizon.batch])
+        else:
+            # sampled horizon: only the period's participants compete in
+            # the straggler max (a GPU's b=0 floor latency is nonzero, so
+            # an unmasked max would charge absent users' idle floors)
+            per_period += (local_steps - 1) * np.array(
+                [max(float(d.local_grad_latency(b))
+                     for d, b, m in zip(devices, bp, mp) if m > 0.5)
+                 for bp, mp in zip(horizon.batch, part)])
     times = np.cumsum(np.concatenate([[time_offset], per_period]))[1:]
     return Schedule(idx=idx, weight=w,
                     batch=horizon.batch.astype(np.float32),
@@ -312,14 +326,17 @@ def pad_schedule(schedule: Schedule, k: int) -> Schedule:
 # ---------------------------------------------------------------------------
 
 
-def _period_step(data_x, data_y, test_x, test_y, active, local_steps,
+def _period_step(data_x, data_y, test_x, test_y, local_steps,
                  compress, ratio, carry, xs):
     params, residual = carry
     idx, w, bk, lr = xs["idx"], xs["weight"], xs["batch"], xs["lr"]
-    # active: (K,) f32 {0,1} — mask hygiene for padded user rows.  Their
-    # schedule already carries zero weights/batch; multiplying keeps that
+    # active: (K,) f32 {0,1} — THIS period's user mask, a per-step scan
+    # input (time-varying per-round participation; the PR-4 static padded
+    # mask is the constant special case).  The schedule already carries
+    # zero weights/batch for inactive users; multiplying keeps that
     # invariant even for hand-built schedules (x * 1.0 == x bitwise, so
     # fully-active rows are unchanged).
+    active = xs["active"]
     w = w * active[:, None]
     bk = bk * active
     x = data_x[idx]                              # (K, slot, D)
@@ -367,10 +384,11 @@ def _trajectory_fn(local_steps: int, compress: bool, ratio: float,
     key = (local_steps, compress, ratio, batched)
 
     def run(params0, residual0, active, xs, data_x, data_y, test_x, test_y):
+        # active (P, K) rides the scan next to the schedule arrays
         step = partial(_period_step, data_x, data_y, test_x, test_y,
-                       active, local_steps, compress, ratio)
+                       local_steps, compress, ratio)
         (params, residual), series = jax.lax.scan(
-            step, (params0, residual0), xs)
+            step, (params0, residual0), dict(xs, active=active))
         return params, residual, series
 
     if batched:
@@ -407,14 +425,21 @@ def run_trajectory(params0, residual0, schedule: Schedule, data, test, *,
                    ratio: float = 0.005, active=None):
     """One trajectory as a single jitted ``lax.scan``.
 
-    ``active``: optional (K,) f32 {0,1} user mask (default all-active) —
-    zero rows are padded users that contribute nothing (ragged-fleet
-    bucketing).  Returns (final params, final residuals,
-    (losses, accs, decays)) where the series are per-period device arrays
-    of length ``schedule.periods``.
+    ``active``: optional f32 {0,1} user mask (default all-active) — either
+    static ``(K,)`` (broadcast to every period: ragged-fleet padding) or
+    time-varying ``(P, K)`` (per-round participation).  Zero entries
+    contribute nothing to that period.  Returns (final params, final
+    residuals, (losses, accs, decays)) where the series are per-period
+    device arrays of length ``schedule.periods``.
     """
     if active is None:
-        active = jnp.ones(schedule.idx.shape[1], jnp.float32)
+        active = jnp.ones((schedule.periods, schedule.idx.shape[1]),
+                          jnp.float32)
+    else:
+        active = jnp.asarray(active)
+        if active.ndim == 1:
+            active = jnp.broadcast_to(
+                active[None, :], (schedule.periods, active.shape[0]))
     fn = _trajectory_fn(local_steps, compress, float(ratio), False)
     args = (params0, residual0, host_to_device(active),
             schedule.stacked_xs(), *host_to_device(
@@ -429,6 +454,19 @@ def stack_schedules(schedules: Sequence[Schedule]):
             for k in ("idx", "weight", "batch", "lr")}
 
 
+def _normalize_active_batch(active, n: int, periods: int, k: int):
+    """Normalize a batched ``active`` argument to the (N, P, K) the scan
+    consumes: ``None`` → all ones; a static (N, K) mask broadcasts across
+    periods (the PR-4 ragged-padding case — value-identical, since the
+    per-period multiply reuses the same {0,1} row every step)."""
+    if active is None:
+        return jnp.ones((n, periods, k), jnp.float32)
+    active = jnp.asarray(active)
+    if active.ndim == 2:
+        active = jnp.broadcast_to(active[:, None, :], (n, periods, k))
+    return host_to_device(active)
+
+
 def run_trajectory_batch(params0, residual0, schedules: Sequence[Schedule],
                          data, test, *, local_steps: int = 1,
                          compress: bool = True, ratio: float = 0.005,
@@ -440,20 +478,19 @@ def run_trajectory_batch(params0, residual0, schedules: Sequence[Schedule],
     ``schedules`` is one pre-generated :class:`Schedule` per batch entry —
     the axis may flatten an arbitrary (scenario × seed) grid, not just
     seeds.  Entries need not share a fleet size: pad each schedule to the
-    common K (:func:`pad_schedule`) and pass ``active`` — an (N, K) f32
-    {0,1} per-row user mask (default all-active) whose zero columns are
-    padded users contributing nothing to any reduction.  With ``mesh``
+    common K (:func:`pad_schedule`) and pass ``active`` — an (N, K)
+    static or (N, P, K) time-varying f32 {0,1} per-row user mask (default
+    all-active) whose zero entries are padded / sampled-out users
+    contributing nothing to any reduction.  With ``mesh``
     (a 1-D "batch" mesh from ``launch.mesh.make_batch_mesh``) the batch
     axis is sharded across its devices (batch size must divide evenly;
     pad upstream) and the datasets are replicated; ``mesh=None`` keeps the
     single-device layout.
     """
     xs = stack_schedules(schedules)
-    if active is None:
-        active = jnp.ones((len(schedules), schedules[0].idx.shape[1]),
-                          jnp.float32)
-    else:
-        active = host_to_device(active)
+    active = _normalize_active_batch(active, len(schedules),
+                                     schedules[0].periods,
+                                     schedules[0].idx.shape[1])
     data_args = host_to_device((data.x, data.y, test.x, test.y))
     if mesh is not None:
         (params0, residual0, active, xs), data_args = _shard_batch_args(
@@ -469,15 +506,23 @@ def run_trajectory_batch(params0, residual0, schedules: Sequence[Schedule],
 # ---------------------------------------------------------------------------
 
 
-def _dev_step(data_x, data_y, test_x, test_y, lr, average, active,
-              dev_params, idx):
+def _dev_step(data_x, data_y, test_x, test_y, lr, average,
+              dev_params, xs):
+    # active: (K,) f32 {0,1} — THIS period's user mask (time-varying, a
+    # scan input alongside the indices).  The update itself is masked, so
+    # a sampled-out user's parameters hold still until it participates
+    # again; for the always-active case g * 1.0 == g keeps the trained
+    # rows bitwise unchanged.
+    idx, active = xs
     x = data_x[idx]
     y = data_y[idx]
     g = jax.vmap(jax.grad(feel_model.loss_fn))(dev_params, x, y)
-    dev_params = tree_map(lambda p, gg: p - lr * gg, dev_params, g)
-    # masked device mean: padded user rows (active 0) train on dummy data
-    # and must never enter a parameter average — denominator is the active
-    # count (for an all-active mask this is sum(a)/K == mean bitwise)
+    dev_params = tree_map(
+        lambda p, gg: p - lr * (gg * active.reshape(
+            (-1,) + (1,) * (gg.ndim - 1))), dev_params, g)
+    # masked device mean: padded / sampled-out user rows (active 0) must
+    # never enter a parameter average — denominator is the active count
+    # (for an all-active mask this is sum(a)/K == mean bitwise)
     n_active = jnp.sum(active)
 
     def masked_mean(a):
@@ -499,9 +544,10 @@ def _dev_trajectory_fn(average: bool, batched: bool = False):
     key = (average, batched)
 
     def run(dev_params0, idx, lr, active, data_x, data_y, test_x, test_y):
+        # active (P, K) rides the scan next to the period indices
         step = partial(_dev_step, data_x, data_y, test_x, test_y, lr,
-                       average, active)
-        return jax.lax.scan(step, dev_params0, idx)
+                       average)
+        return jax.lax.scan(step, dev_params0, (idx, active))
 
     if batched:
         run = jax.vmap(run, in_axes=(0, 0, 0, 0, None, None, None, None))
@@ -519,11 +565,17 @@ def run_dev_trajectory(dev_params0, idx: np.ndarray, lr: float, data, test,
     """scan-compiled individual / model_fl (``average=True``) trajectory.
 
     ``idx``: (P, K, batch) pre-sampled indices; ``active``: optional (K,)
-    f32 {0,1} user mask (default all-active).  Returns
-    (final per-device params, (test losses, test accs)) per period.
+    static or (P, K) time-varying f32 {0,1} user mask (default
+    all-active).  Returns (final per-device params, (test losses, test
+    accs)) per period.
     """
+    idx = np.asarray(idx)
     if active is None:
-        active = jnp.ones(idx.shape[1], jnp.float32)
+        active = jnp.ones(idx.shape[:2], jnp.float32)
+    else:
+        active = jnp.asarray(active)
+        if active.ndim == 1:
+            active = jnp.broadcast_to(active[None, :], idx.shape[:2])
     fn = _dev_trajectory_fn(bool(average))
     args = (dev_params0, *host_to_device((np.asarray(idx),
                                           np.float32(lr), active,
@@ -559,13 +611,14 @@ def run_dev_trajectory_batch(dev_params0, idx: np.ndarray, lr: np.ndarray,
 
     ``dev_params0`` leaves are (N, K, ...), ``idx`` is (N, P, K, batch),
     ``lr`` is (N,) — N the flattened (scenario × seed) axis; ``active`` is
-    an optional (N, K) f32 {0,1} per-row user mask (zero columns = padded
-    users, excluded from every parameter average).  ``mesh`` shards N
-    across devices as in :func:`run_trajectory_batch`.
+    an optional (N, K) static or (N, P, K) time-varying f32 {0,1} per-row
+    user mask (zero entries = padded / sampled-out users, excluded from
+    every parameter average).  ``mesh`` shards N across devices as in
+    :func:`run_trajectory_batch`.
     """
     idx = host_to_device(np.asarray(idx))
-    if active is None:
-        active = jnp.ones((idx.shape[0], idx.shape[2]), jnp.float32)
+    active = _normalize_active_batch(active, idx.shape[0], idx.shape[1],
+                                     idx.shape[2])
     batched = (dev_params0, idx, *host_to_device((np.asarray(lr), active)))
     data_args = host_to_device((data.x, data.y, test.x, test.y))
     if mesh is not None:
@@ -589,3 +642,162 @@ def resume_dev_trajectory_batch(state: EngineState, idx: np.ndarray,
         state.params, idx, lr, data, test, average=average, mesh=mesh,
         active=active)
     return EngineState(params=dev_params), series
+
+
+# ---------------------------------------------------------------------------
+# hierarchical FEEL (cell → edge-server → cloud, repro.topology.Topology)
+# ---------------------------------------------------------------------------
+#
+# The flat FEEL scan keeps ONE global model; the hierarchical scan keeps
+# one model replica PER EDGE SERVER (leaves grow a leading E axis) and the
+# ``member`` one-hot (E, K) matrix routes users to replicas.  Every period
+# each edge aggregates its own users' (compressed) gradients eq.-(1)-style
+# into its replica; on cloud rounds (``xs["cloud"]`` = 1, cadence
+# ``Topology.agg_every``) the replicas merge into the batch-weighted
+# global average.  Reported metrics always evaluate that global average,
+# so the series join the same Results surface as the flat family.
+# Padded users are all-zero ``member`` columns AND active-mask zeros, so
+# both the routing contraction and the weight normalization see the
+# monoid identity — the PR-4 padded-row contract carries over unchanged.
+
+
+def _hier_period_step(data_x, data_y, test_x, test_y, member, local_steps,
+                      compress, ratio, carry, xs):
+    params_e, residual = carry                    # leaves (E, ...) / (K, ...)
+    idx, w, bk, lr = xs["idx"], xs["weight"], xs["batch"], xs["lr"]
+    active, cloud = xs["active"], xs["cloud"]
+    w = w * active[:, None]
+    bk = bk * active
+    # edge bookkeeping: s_e — per-edge batch mass; wk — per-edge eq. (1)
+    # weights (a participant-free edge gets all-zero weights and a guard
+    # denominator, so its replica simply holds still this period); beta —
+    # batch share per edge, the cloud-merge and evaluation weights
+    s_e = jnp.tensordot(member, bk, axes=1)                       # (E,)
+    wk = member * bk[None, :] / jnp.where(s_e > 0, s_e, 1.0)[:, None]
+    beta = s_e / jnp.sum(s_e)                                     # (E,)
+
+    def cloud_view(tree):
+        return tree_map(lambda a: jnp.tensordot(beta, a, axes=1), tree)
+
+    # each user trains from ITS edge's replica (one-hot gather)
+    user_params = tree_map(
+        lambda a: jnp.tensordot(member, a, axes=((0,), (0,))), params_e)
+    x = data_x[idx]                                # (K, slot, D)
+    y = data_y[idx]
+    xf = x.reshape(-1, x.shape[-1])
+    yf = y.reshape(-1)
+    wf = w.reshape(-1)
+    global_before = cloud_view(params_e)
+    loss_before = feel_model.loss_fn(global_before, xf, yf, wf)
+
+    if local_steps == 1:
+        grads = jax.vmap(jax.grad(feel_model.loss_fn))(user_params, x, y, w)
+    else:
+        dev_params = user_params
+        for _ in range(local_steps):
+            g = jax.vmap(jax.grad(feel_model.loss_fn))(dev_params, x, y, w)
+            dev_params = tree_map(lambda p, gg: p - lr * gg, dev_params, g)
+        grads = tree_map(lambda p0, pk: (p0 - pk) / lr,
+                         user_params, dev_params)
+
+    if compress:
+        grads, residual = jax.vmap(
+            lambda g, r: compress_dense(g, ratio, r))(grads, residual)
+    # per-edge eq. (1) aggregation and SGD step on each replica
+    agg = tree_map(lambda g: jnp.tensordot(wk, g, axes=1), grads)  # (E, ...)
+    params_e = tree_map(lambda p, g: p - lr * g, params_e, agg)
+    # cloud round: replicas -> batch-weighted global average, broadcast back
+    params_e = tree_map(
+        lambda a: jnp.where(cloud > 0.5,
+                            jnp.broadcast_to(jnp.tensordot(beta, a, axes=1),
+                                             a.shape), a), params_e)
+    global_after = cloud_view(params_e)
+    loss_after = feel_model.loss_fn(global_after, xf, yf, wf)
+    acc = feel_model.accuracy(global_after, test_x, test_y)
+    return (params_e, residual), (loss_after, acc, loss_before - loss_after)
+
+
+@lru_cache(maxsize=None)
+def _hier_trajectory_fn(local_steps: int, compress: bool, ratio: float,
+                        n_edges: int, batched: bool):
+    key = (local_steps, compress, ratio, n_edges, batched)
+
+    def run(params_e0, residual0, member, active, cloud, xs,
+            data_x, data_y, test_x, test_y):
+        # member (E, K) is scan-invariant; active (P, K) and cloud (P,)
+        # ride the scan with the schedule arrays
+        step = partial(_hier_period_step, data_x, data_y, test_x, test_y,
+                       member, local_steps, compress, ratio)
+        (params_e, residual), series = jax.lax.scan(
+            step, (params_e0, residual0),
+            dict(xs, active=active, cloud=cloud))
+        return params_e, residual, series
+
+    if batched:
+        run = jax.vmap(run, in_axes=(0, 0, 0, 0, 0, 0,
+                                     None, None, None, None))
+
+    def traced(params_e0, residual0, member, active, cloud, xs, *data):
+        # trace-time ledger entry — outside the vmap, see _trajectory_fn
+        _record_trace("hier", key,
+                      (params_e0, residual0, member, active, cloud, xs,
+                       *data))
+        return run(params_e0, residual0, member, active, cloud, xs, *data)
+
+    return jax.jit(traced)
+
+
+def hier_trajectory_program(local_steps: int = 1, compress: bool = True,
+                            ratio: float = 0.005, n_edges: int = 1,
+                            batched: bool = True):
+    """The (cached) jitted hierarchical trajectory program (see
+    :func:`trajectory_program`)."""
+    return _hier_trajectory_fn(local_steps, compress, float(ratio),
+                               int(n_edges), batched)
+
+
+def run_hier_trajectory_batch(params0, residual0, member, cloud,
+                              schedules: Sequence[Schedule], data, test, *,
+                              local_steps: int = 1, compress: bool = True,
+                              ratio: float = 0.005, mesh=None, active=None):
+    """Batched hierarchical sweep (cell→edge→cloud; see module section).
+
+    ``params0`` leaves carry (N, E, ...) — one model replica per edge
+    server per row; ``member`` is (N, E, K) user→edge one-hot (padded
+    users: all-zero columns); ``cloud`` is (N, P) f32 {0,1} cloud-round
+    flags (``Topology.cloud_rounds``); ``active`` as in
+    :func:`run_trajectory_batch`.
+    """
+    xs = stack_schedules(schedules)
+    active = _normalize_active_batch(active, len(schedules),
+                                     schedules[0].periods,
+                                     schedules[0].idx.shape[1])
+    member = host_to_device(np.asarray(member))
+    cloud = host_to_device(np.asarray(cloud))
+    data_args = host_to_device((data.x, data.y, test.x, test.y))
+    if mesh is not None:
+        (params0, residual0, member, active, cloud, xs), data_args = \
+            _shard_batch_args(
+                mesh, (params0, residual0, member, active, cloud, xs),
+                data_args)
+    fn = _hier_trajectory_fn(local_steps, compress, float(ratio),
+                             int(member.shape[1]), True)
+    assert_device_safe((params0, residual0, member, active, cloud, xs,
+                        data_args), "run_hier_trajectory_batch")
+    return fn(params0, residual0, member, active, cloud, xs, *data_args)
+
+
+def resume_hier_trajectory_batch(state: EngineState, member, cloud,
+                                 schedules: Sequence[Schedule], data, test,
+                                 *, local_steps: int = 1,
+                                 compress: bool = True, ratio: float = 0.005,
+                                 mesh=None, active=None):
+    """Advance a batched hierarchical trajectory by one schedule chunk
+    (the per-edge replicas + SBC residuals are the carry; chunked calls
+    are bit-identical to one monolithic
+    :func:`run_hier_trajectory_batch`)."""
+    params_e, residual, series = run_hier_trajectory_batch(
+        state.params, state.residual, member, cloud, schedules, data, test,
+        local_steps=local_steps, compress=compress, ratio=ratio,
+        mesh=mesh, active=active)
+    return EngineState(params=params_e, residual=residual), series

@@ -29,17 +29,23 @@ __all__ = ["PendingRequest", "AdmissionQueue"]
 @dataclass
 class PendingRequest:
     """One queued request: the ticket it answers plus its admission key
-    ingredients (``spec`` frozen, ``periods`` the requested horizon)."""
+    ingredients (``spec`` frozen, ``periods`` the requested horizon).
+
+    ``band`` is the K-band sub-bucketing width when the service runs with
+    ``bands=True`` (``repro.topology.band_width`` of the fleet size):
+    requests only merge within their band, so a K=8 arrival never admits
+    into a K=10240 neighbour's padded program."""
     ticket: object
     spec: object
     periods: int
     priority: int
     submitted_at: float
     seq: int                      # global submission order (FIFO ties)
+    band: Optional[int] = None
 
     @property
     def group_key(self) -> tuple:
-        return (self.spec.bucket_key(), self.periods)
+        return (self.spec.bucket_key(), self.periods, self.band)
 
 
 @dataclass

@@ -57,6 +57,7 @@ from repro.serve.program_cache import ProgramCache
 from repro.serve.scheduler import PreemptiveScheduler, ServiceRun
 from repro.serve.stats import RequestRecord, ServiceStats
 from repro.testing.clock import WallClock
+from repro.topology import band_width
 
 __all__ = ["ExperimentService", "Ticket"]
 
@@ -134,12 +135,16 @@ class ExperimentService:
     ``audit=True`` runs the PR-6 static passes (padding taint + compile
     hygiene) over every *cold* admission's program before it dispatches,
     accumulating into :attr:`audit_report` (error findings raise).
+    ``bands=True`` sub-buckets admissions by power-of-two K band
+    (``repro.topology.band_width``): requests pad to their band instead
+    of whatever fleet happens to share the window, so the program-cache
+    key space stays small and recurring across a massive-fleet mix.
     """
 
     def __init__(self, data, test, *, chunk_periods: int = 1,
                  window: float = 0.0, max_batch: Optional[int] = None,
                  clock=None, cache: Optional[ProgramCache] = None,
-                 mesh=None, audit: bool = False):
+                 mesh=None, audit: bool = False, bands: bool = False):
         if chunk_periods < 1:
             raise ValueError(
                 f"chunk_periods must be >= 1, got {chunk_periods}")
@@ -150,6 +155,7 @@ class ExperimentService:
         self.cache = cache if cache is not None else ProgramCache()
         self.mesh = None if mesh is None else ensure_batch_mesh(mesh)
         self.audit = audit
+        self.bands = bands
         self.audit_report = None
         self.stats = ServiceStats()
         self._admission = AdmissionQueue(window=window, max_batch=max_batch)
@@ -177,7 +183,8 @@ class ExperimentService:
         self.stats.on_submit(record)
         self._admission.push(PendingRequest(
             ticket=ticket, spec=spec, periods=periods, priority=priority,
-            submitted_at=now, seq=self._seq))
+            submitted_at=now, seq=self._seq,
+            band=band_width(spec.k) if self.bands else None))
         self._seq += 1
         return ticket
 
@@ -225,7 +232,8 @@ class ExperimentService:
 
     def _admit(self, group: List[PendingRequest]) -> None:
         now = self.clock.now()
-        buckets = lowering.group_rows([r.spec for r in group])
+        buckets = lowering.group_rows([r.spec for r in group],
+                                      bands=self.bands)
         assert len(buckets) == 1, "admission groups on bucket_key"
         bucket = buckets[0]
         chunk = (bucket.replan if bucket.replan is not None

@@ -1,0 +1,19 @@
+"""Massive-fleet topology: per-round client sampling, hierarchical
+cell→edge→cloud aggregation, and K-banded sub-bucketing.
+
+The three legs that take the fleet axis from K<=16 to K=10^4+:
+
+* :class:`Sampling` / :class:`ParticipationSampler` — S-of-K per-period
+  participation as a *time-varying* mask through the PR-4 active-mask
+  machinery (the static mask is the T=constant special case);
+* :class:`Topology` — two-tier edge aggregation with a per-cell
+  Algorithm-1 solve and a wired backhaul ledger on cloud rounds;
+* :func:`band_width` / :func:`split_bands` — powers-of-two sub-bucket
+  pads so mixed-K grids compile one program per band, not per K.
+"""
+from repro.topology.bands import band_width, split_bands
+from repro.topology.hierarchy import Topology
+from repro.topology.sampling import ParticipationSampler, Sampling
+
+__all__ = ["Sampling", "ParticipationSampler", "Topology",
+           "band_width", "split_bands"]

@@ -1,0 +1,37 @@
+"""K-banded sub-bucketing: powers-of-two user-axis pads.
+
+PR 4 made fleet size a sweep axis by padding every row of a bucket to the
+bucket's max K.  That is the right call for *near*-K grids, but a
+``users=[8, 1024, 10240]`` grid would run its 8-user row at width 10240 —
+a ~1000x FLOP tax on the smallest member.  Banding splits each bucket's
+rows into powers-of-two K *bands* (8 → band 8, 1024 → band 1024, 10240 →
+band 16384): one compiled program per band instead of one per K, and
+within a band the PR-4 active-mask contract applies unchanged, so results
+stay bit-identical to the unbanded (and to the solo) run.
+
+Band width doubles as the band's ``k_pad``; since ``program_key`` already
+carries ``k_pad``, banded programs land in the serve-path
+:class:`~repro.serve.program_cache.ProgramCache` under per-band keys — a
+warm band admission is warm no matter which true K arrives next.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+__all__ = ["band_width", "split_bands"]
+
+
+def band_width(k: int) -> int:
+    """Smallest power of two >= k (the band's padded user-axis width)."""
+    if k < 1:
+        raise ValueError(f"band_width needs k >= 1, got {k}")
+    return 1 << (k - 1).bit_length()
+
+
+def split_bands(rows: List) -> Dict[int, List]:
+    """Group bucket rows (anything with ``.spec.k``) by band, preserving
+    first-seen band order and row order within each band."""
+    bands: Dict[int, List] = {}
+    for row in rows:
+        bands.setdefault(band_width(row.spec.k), []).append(row)
+    return bands

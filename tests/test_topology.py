@@ -1,0 +1,482 @@
+"""Massive-fleet topology: per-round client sampling, cell→edge→cloud
+hierarchical aggregation, and K-banded sub-bucketing (PR 8).
+
+The contracts under test:
+
+* sampling is *data*, not structure — sampled and unsampled scenarios
+  share a bucket/program, a full-participation sampler is bitwise the
+  unsampled path, and every rng stream (positions, fading, batcher,
+  policy draws) is untouched by who sat out;
+* the time-varying participation mask dominates every cross-user
+  reduction: garbage in a sampled-out user's schedule columns never
+  reaches any result;
+* the hierarchical engine degenerates to the flat one at
+  cells=edges=agg_every=1, and cloud rounds alone pay the backhaul;
+* K-banded sub-bucketing is invisible to results (bitwise ledgers,
+  identical selections) and compiles one program per power-of-two band.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Experiment, ScenarioSpec
+from repro.core import DeviceProfile, FeelScheduler
+from repro.core.scheduler import DevScheduler, plan_horizons_batch
+from repro.core.solver import FleetRows, fixed_slot_rows
+from repro.data.pipeline import ClassificationData
+from repro.fed import engine
+from repro.testing import no_retrace
+from repro.topology import (ParticipationSampler, Sampling, Topology,
+                            band_width, split_bands)
+
+# distinctive shapes (no other test module uses dim=26 / hidden=52 /
+# b_max=18) so the lru-cached engine programs are fresh and the
+# trace-count assertions below are exact
+DIM, HIDDEN, BMAX = 26, 52, 18
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    full = ClassificationData.synthetic(n=400, dim=DIM, seed=0, spread=6.0)
+    return full.split(80)
+
+
+def _fleet(k):
+    return tuple(DeviceProfile(kind="cpu", f_cpu=(0.6 + 0.3 * i) * 1e9)
+                 for i in range(k))
+
+
+def _spec(k, **kw):
+    kw.setdefault("name", f"K{k}")
+    kw.setdefault("policy", "proposed")
+    kw.setdefault("b_max", BMAX)
+    kw.setdefault("base_lr", 0.15)
+    kw.setdefault("hidden", HIDDEN)
+    return ScenarioSpec(fleet=_fleet(k), **kw)
+
+
+# ---------------------------------------------------------------------------
+# spec surface and validation
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_validation():
+    with pytest.raises(ValueError, match="exactly one"):
+        Sampling()
+    with pytest.raises(ValueError, match="exactly one"):
+        Sampling(size=2, fraction=0.5)
+    with pytest.raises(ValueError, match="positive int"):
+        Sampling(size=0)
+    with pytest.raises(ValueError, match="positive int"):
+        Sampling(size=True)
+    with pytest.raises(ValueError, match=r"\(0, 1\]"):
+        Sampling(fraction=0.0)
+    with pytest.raises(ValueError, match=r"\(0, 1\]"):
+        Sampling(fraction=1.5)
+    assert Sampling(size=3).s_of(8) == 3
+    assert Sampling(size=30).s_of(8) == 8          # clamp to the fleet
+    assert Sampling(fraction=0.5).s_of(8) == 4
+    assert Sampling(fraction=0.01).s_of(8) == 1    # never an empty cohort
+    with pytest.raises(TypeError, match="Sampling"):
+        _spec(4, sampling=0.5)
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError, match="edges"):
+        Topology(cells=2, edges=3)
+    with pytest.raises(ValueError, match="positive int"):
+        Topology(cells=0)
+    with pytest.raises(ValueError, match="positive int"):
+        Topology(agg_every=0)
+    with pytest.raises(ValueError, match="backhaul"):
+        Topology(backhaul_bps=0.0)
+    t = Topology(cells=4, edges=2, agg_every=3, backhaul_bps=2e9)
+    assert t.structural_key() == (4, 2, 3)          # backhaul is a value
+    with pytest.raises(TypeError, match="Topology"):
+        _spec(4, topology=(2, 1))
+    with pytest.raises(ValueError, match="aggregation tier"):
+        _spec(4, scheme="individual", topology=Topology(cells=2, edges=1))
+    with pytest.raises(ValueError, match="populate"):
+        _spec(2, topology=Topology(cells=3, edges=1))
+    # structural: topology in the bucket key, sampling not
+    base = _spec(4)
+    assert _spec(4, sampling=Sampling(size=2)).bucket_key() \
+        == base.bucket_key()
+    assert _spec(4, topology=Topology(cells=2, edges=1)).bucket_key() \
+        != base.bucket_key()
+    # backhaul-only topology differences still share a program
+    assert _spec(4, topology=Topology(cells=2, edges=1,
+                                      backhaul_bps=1e9)).bucket_key() \
+        == _spec(4, topology=Topology(cells=2, edges=1,
+                                      backhaul_bps=9e9)).bucket_key()
+
+
+def test_topology_partition_helpers():
+    t = Topology(cells=3, edges=2, agg_every=2)
+    cells = t.cell_of_users(7)
+    assert cells.shape == (7,) and set(cells) == {0, 1, 2}
+    masks = t.cell_masks(7)
+    np.testing.assert_array_equal(masks.sum(0), np.ones(7))   # a partition
+    member = t.member_matrix(7, k_pad=10)
+    assert member.shape == (2, 10)
+    np.testing.assert_array_equal(member[:, 7:], 0.0)         # pad columns
+    np.testing.assert_array_equal(member[:, :7].sum(0), np.ones(7))
+    np.testing.assert_array_equal(
+        t.cloud_rounds(6), np.array([0, 1, 0, 1, 0, 1], np.float32))
+    # chunk resumability: offset continues the cadence mid-stream
+    np.testing.assert_array_equal(
+        np.concatenate([t.cloud_rounds(4), t.cloud_rounds(2, offset=4)]),
+        t.cloud_rounds(6))
+
+
+def test_band_helpers():
+    assert [band_width(k) for k in (1, 2, 3, 8, 9, 1024, 1025)] \
+        == [1, 2, 4, 8, 16, 1024, 2048]
+    with pytest.raises(ValueError):
+        band_width(0)
+    from types import SimpleNamespace
+    rows = [SimpleNamespace(spec=SimpleNamespace(k=k))
+            for k in (3, 5, 8, 1024, 2, 700)]
+    bands = split_bands(rows)
+    assert {b: sorted(r.spec.k for r in v) for b, v in bands.items()} \
+        == {4: [3], 8: [5, 8], 1024: [700, 1024], 2: [2]}
+
+
+def test_sampler_stream_invariance():
+    """One draw per planned period: chunked draws equal one monolithic
+    draw, and two samplers with the same seeds agree exactly."""
+    a = ParticipationSampler(Sampling(size=3), k=9, seed=5)
+    b = ParticipationSampler(Sampling(size=3), k=9, seed=5)
+    mono = a.draw(7)
+    chunked = np.concatenate([b.draw(4), b.draw(3)])
+    np.testing.assert_array_equal(mono, chunked)
+    assert mono.shape == (7, 9) and mono.dtype == np.float32
+    np.testing.assert_array_equal(mono.sum(1), np.full(7, 3.0))
+
+
+# ---------------------------------------------------------------------------
+# scheduler: sampling restricts every allocation to the cohort
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["proposed", "online", "full", "random"])
+def test_full_participation_horizon_is_bitwise_unsampled(policy):
+    devs = _fleet(6)
+    h1 = FeelScheduler(devices=devs, n_params=900, policy=policy,
+                       b_max=BMAX).plan_horizon(5)
+    h2 = FeelScheduler(devices=devs, n_params=900, policy=policy,
+                       b_max=BMAX,
+                       sampling=Sampling(size=6)).plan_horizon(5)
+    for f in ("batch", "tau_up", "tau_down", "lr", "latency",
+              "global_batch"):
+        np.testing.assert_array_equal(getattr(h1, f), getattr(h2, f))
+
+
+@pytest.mark.parametrize("policy", ["proposed", "full"])
+def test_sampled_horizon_masks_absentees(policy):
+    s = FeelScheduler(devices=_fleet(8), n_params=900, policy=policy,
+                      b_max=BMAX, sampling=Sampling(size=3))
+    h = s.plan_horizon(6)
+    assert h.participation.shape == (6, 8)
+    np.testing.assert_array_equal(h.participation.sum(1), np.full(6, 3.0))
+    np.testing.assert_array_equal((h.batch > 0).astype(np.float32),
+                                  h.participation)
+    np.testing.assert_array_equal(h.tau_up[h.participation < 0.5], 0.0)
+    np.testing.assert_array_equal(h.global_batch,
+                                  h.batch.sum(1).astype(np.int64))
+
+
+def test_sampled_chunked_horizon_bitwise_monolithic():
+    mk = lambda: FeelScheduler(devices=_fleet(6), n_params=900,     # noqa
+                               b_max=BMAX, seed=11,
+                               sampling=Sampling(fraction=0.5))
+    hm = mk().plan_horizon(8)
+    s = mk()
+    hc = [s.plan_horizon(5), s.plan_horizon(3)]
+    for f in ("batch", "latency", "participation"):
+        np.testing.assert_array_equal(
+            getattr(hm, f),
+            np.concatenate([getattr(h, f) for h in hc]))
+
+
+def test_sampled_fused_batch_planning_bitwise_solo():
+    mk = lambda i: FeelScheduler(devices=_fleet(5), n_params=900,   # noqa
+                                 b_max=BMAX, seed=i,
+                                 sampling=Sampling(size=2))
+    fused = plan_horizons_batch([mk(0), mk(1), mk(2)], 5)
+    solo = [mk(i).plan_horizon(5) for i in range(3)]
+    for a, b in zip(fused, solo):
+        for f in ("batch", "tau_up", "latency", "participation"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+
+
+def test_masked_rows_match_compact_subset_solve():
+    """Equal-slot allocation over a masked fleet equals solving the
+    compacted participant subset outright (mask-exclusion property)."""
+    devs = _fleet(6)
+    keep = np.array([1, 0, 1, 1, 0, 1], float)
+    rng = np.random.default_rng(0)
+    rates = rng.uniform(1e6, 5e6, size=(2, 3, 6))
+    batch = np.full((3, 6), 4.0)
+    fr = FleetRows.from_devices(devs, 3).with_mask(
+        np.broadcast_to(keep, (3, 6)))
+    tu, td, lat = fixed_slot_rows(fr, batch * keep, rates[0], rates[1],
+                                  1e5, 0.01, 0.01)
+    sub = [d for d, m in zip(devs, keep) if m > 0.5]
+    tu_s, td_s, lat_s = fixed_slot_rows(sub, batch[:, keep > 0.5],
+                                        rates[0][:, keep > 0.5],
+                                        rates[1][:, keep > 0.5],
+                                        1e5, 0.01, 0.01)
+    np.testing.assert_array_equal(tu[:, keep > 0.5], tu_s)
+    np.testing.assert_array_equal(td[:, keep > 0.5], td_s)
+    np.testing.assert_array_equal(tu[:, keep < 0.5], 0.0)
+    np.testing.assert_array_equal(lat, lat_s)
+
+
+def test_topo_cloud_rounds_pay_backhaul():
+    t_fast = Topology(cells=2, edges=1, agg_every=3, backhaul_bps=1e12)
+    t_slow = Topology(cells=2, edges=1, agg_every=3, backhaul_bps=1e6)
+    mk = lambda t: FeelScheduler(devices=_fleet(6), n_params=900,   # noqa
+                                 b_max=BMAX, seed=3, topology=t)
+    hf, hs = mk(t_fast).plan_horizon(6), mk(t_slow).plan_horizon(6)
+    np.testing.assert_array_equal(hf.cloud, [0, 0, 1, 0, 0, 1])
+    np.testing.assert_array_equal(hf.batch, hs.batch)     # same allocation
+    diff = hs.latency - hf.latency
+    gap = (t_slow.backhaul_roundtrip(mk(t_slow).payload_bits)
+           - t_fast.backhaul_roundtrip(mk(t_fast).payload_bits))
+    np.testing.assert_allclose(diff[hf.cloud > 0.5], gap)
+    np.testing.assert_array_equal(diff[hf.cloud < 0.5], 0.0)
+
+
+def test_topo_chunked_horizon_bitwise_monolithic():
+    t = Topology(cells=2, edges=2, agg_every=3)
+    mk = lambda: FeelScheduler(devices=_fleet(6), n_params=900,     # noqa
+                               b_max=BMAX, seed=7, topology=t,
+                               sampling=Sampling(size=3))
+    hm = mk().plan_horizon(8)
+    s = mk()
+    hc = [s.plan_horizon(5), s.plan_horizon(3)]
+    for f in ("batch", "latency", "cloud", "participation"):
+        np.testing.assert_array_equal(
+            getattr(hm, f),
+            np.concatenate([getattr(h, f) for h in hc]))
+
+
+def test_dev_scheduler_sampling():
+    devs = _fleet(5)
+    parts = [np.arange(i * 40, (i + 1) * 40) for i in range(5)]
+    mk = lambda samp: DevScheduler(devices=devs, parts=parts,       # noqa
+                                   batch=8, payload_bits=1e6,
+                                   upload=True, seed=2, sampling=samp)
+    h0, hfull = mk(None).plan_horizon(4), mk(Sampling(size=5)).plan_horizon(4)
+    for f in ("idx", "times", "tau_up", "tau_down"):
+        np.testing.assert_array_equal(getattr(h0, f), getattr(hfull, f))
+    hs = mk(Sampling(size=2)).plan_horizon(4)
+    np.testing.assert_array_equal(hs.idx, h0.idx)   # idx stream untouched
+    np.testing.assert_array_equal(hs.participation.sum(1), np.full(4, 2.0))
+    # the cohort splits the frame: slot = frame / S for participants
+    live = hs.participation > 0.5
+    np.testing.assert_allclose(hs.tau_up[live], 0.010 / 2.0)
+    np.testing.assert_array_equal(hs.tau_up[~live], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# engine: the time-varying mask dominates every reduction
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_out_columns_are_dead(dataset):
+    """Garbage in a sampled-out user's schedule columns never reaches the
+    series, the carried params, or the residuals — the device-program
+    face of the participation contract."""
+    import jax.numpy as jnp
+    data, test = dataset
+    spec = _spec(5, sampling=Sampling(size=2), seeds=(3,))
+    exp = Experiment(data, test, [spec])
+    bucket = exp.lower()[0]
+    from repro.api.lowering import plan_bucket, _init_params_batch
+    plan = plan_bucket(bucket, data, 4)
+    active = plan.payload["active"]            # (1, 4, 5) time-varying
+    assert active.ndim == 3
+    params0 = _init_params_batch(bucket.rows, plan.input_dim)
+    import jax
+    k_pad = bucket.k_pad
+    residual0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros((p.shape[0], k_pad) + p.shape[1:], p.dtype),
+        params0)
+
+    def run(schedules):
+        return engine.run_trajectory_batch(
+            params0, residual0, schedules, data, test, active=active)
+
+    clean = run(plan.payload["schedules"])
+    s = plan.payload["schedules"][0]
+    dead = active[0] < 0.5                     # (P, K) absentee positions
+    weight = s.weight.copy()
+    batch = s.batch.copy()
+    weight[dead] = 1e6                         # poison every dead column
+    batch[dead] = 9.9e5
+    from dataclasses import replace
+    poisoned = run([replace(s, weight=weight, batch=batch)])
+    for a, b in zip(jax.tree_util.tree_leaves(clean),
+                    jax.tree_util.tree_leaves(poisoned)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hier_degenerates_to_flat(dataset):
+    """cells=edges=agg_every=1 routes every user to one replica and
+    merges it with itself every period: allocation bitwise the flat
+    plan, trajectories equal to float tolerance (different program)."""
+    data, test = dataset
+    t1 = Topology(cells=1, edges=1, agg_every=1, backhaul_bps=1e15)
+    flat = Experiment(data, test, [_spec(5, seeds=(0, 1))]).run(periods=5)
+    hier = Experiment(data, test,
+                      [_spec(5, seeds=(0, 1), topology=t1)]).run(periods=5)
+    np.testing.assert_array_equal(flat.global_batch, hier.global_batch)
+    np.testing.assert_allclose(np.asarray(flat.losses),
+                               np.asarray(hier.losses),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(flat.accs),
+                               np.asarray(hier.accs), atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# API: buckets, bit-identity, bands
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_shares_bucket_and_program(dataset):
+    """Sampled and unsampled rows are one bucket, one trace; full
+    participation is bitwise the unsampled row."""
+    data, test = dataset
+    specs = [_spec(6, seeds=(0,)),
+             _spec(6, seeds=(0,), sampling=Sampling(size=6)),
+             _spec(6, seeds=(0,), sampling=Sampling(size=2))]
+    exp = Experiment(data, test, specs)
+    assert len(exp.lower()) == 1
+    with no_retrace(expect=1):
+        res = exp.run(periods=5)
+    plain = np.asarray(res.losses)[0]
+    full = np.asarray(res.losses)[1]
+    np.testing.assert_array_equal(plain, full)
+    np.testing.assert_array_equal(res.times[0], res.times[1])
+
+
+def test_sampled_padded_row_bitwise_solo(dataset):
+    """A sampled row inside a K-heterogeneous padded bucket reproduces
+    its solo run: ledgers bitwise, trajectories to float tolerance."""
+    data, test = dataset
+    samp = Sampling(size=2, seed=4)
+    mixed = Experiment(data, test, [
+        _spec(4, seeds=(0, 1), sampling=samp),
+        _spec(7, seeds=(0, 1), sampling=samp)]).run(periods=5)
+    for k in (4, 7):
+        solo = Experiment(data, test,
+                          [_spec(k, seeds=(0, 1), sampling=samp)]
+                          ).run(periods=5)
+        cell = mixed.sel(fleet=f"K{k}")
+        np.testing.assert_array_equal(cell.times, solo.times)
+        np.testing.assert_array_equal(cell.global_batch, solo.global_batch)
+        np.testing.assert_allclose(np.asarray(cell.losses),
+                                   np.asarray(solo.losses),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_banded_lowering_matches_unbanded(dataset):
+    """bands=True: bitwise-identical host ledgers, device series equal to
+    the cross-padding float tolerance (a band-4 and a grid-max-7 program
+    pad the user axis differently — the PR-4 1-ulp caveat), identical
+    selection surface — and one compiled program per power-of-two band
+    (trace-ledger enforced)."""
+    data, test = dataset
+    specs = [_spec(3, seeds=(0, 1)), _spec(4, seeds=(0,)),
+             _spec(7, seeds=(0,))]
+    flat = Experiment(data, test, specs).run(periods=4)
+    exp = Experiment(data, test, specs)
+    buckets = exp.lower(bands=True)
+    assert sorted((b.band, b.k_pad) for b in buckets) == [(4, 4), (8, 8)]
+    with no_retrace(expect=2):                 # one program per band
+        banded = exp.run(periods=4, bands=True)
+    np.testing.assert_array_equal(flat.times, banded.times)
+    np.testing.assert_array_equal(flat.global_batch, banded.global_batch)
+    np.testing.assert_allclose(np.asarray(flat.losses),
+                               np.asarray(banded.losses),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(flat.accs),
+                               np.asarray(banded.accs),
+                               atol=1e-5, rtol=1e-5)
+    for k in (3, 4, 7):                        # invisible to selection
+        cell_b, cell_f = (banded.sel(fleet=f"K{k}"),
+                          flat.sel(fleet=f"K{k}"))
+        assert cell_b.rows == cell_f.rows
+        np.testing.assert_array_equal(cell_b.times, cell_f.times)
+
+
+def test_topo_sampled_chunked_run_matches_monolithic(dataset):
+    data, test = dataset
+    spec = _spec(6, seeds=(0,), topology=Topology(cells=2, edges=2,
+                                                  agg_every=2),
+                 sampling=Sampling(size=3))
+    mono = Experiment(data, test, [spec]).run(periods=6)
+    chunked = Experiment(data, test, [spec]).run(periods=6, replan=2)
+    np.testing.assert_array_equal(mono.times, chunked.times)
+    np.testing.assert_array_equal(mono.global_batch, chunked.global_batch)
+    np.testing.assert_allclose(np.asarray(mono.losses),
+                               np.asarray(chunked.losses),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_dev_scheme_sampling_end_to_end(dataset):
+    data, test = dataset
+    base = _spec(5, scheme="model_fl", seeds=(0,))
+    full = Experiment(data, test, [base]).run(periods=4)
+    fullsamp = Experiment(
+        data, test,
+        [_spec(5, scheme="model_fl", seeds=(0,),
+               sampling=Sampling(size=5))]).run(periods=4)
+    np.testing.assert_array_equal(np.asarray(full.losses),
+                                  np.asarray(fullsamp.losses))
+    np.testing.assert_array_equal(full.times, fullsamp.times)
+    sub = Experiment(
+        data, test,
+        [_spec(5, scheme="model_fl", seeds=(0,),
+               sampling=Sampling(size=2))]).run(periods=4)
+    assert np.all(np.asarray(sub.losses) > 0)
+    assert np.all(sub.times[:, -1] < full.times[:, -1])  # smaller cohort,
+    #                                       shorter TDMA straggler rounds
+
+
+def test_audit_certifies_sampled_hier_banded(dataset):
+    """run(audit=True) certifies the time-varying-mask, hierarchical and
+    banded programs (error findings would raise)."""
+    data, test = dataset
+    res = Experiment(data, test, [
+        _spec(4, seeds=(0,), sampling=Sampling(size=2)),
+        _spec(6, seeds=(0,), topology=Topology(cells=2, edges=2,
+                                               agg_every=2)),
+        _spec(3, seeds=(0,)),
+    ]).run(periods=3, audit=True, bands=True)
+    assert res.audit is not None and res.audit.ok
+
+
+def test_serve_bands_split_admission_groups(dataset):
+    """With bands=True the service admits per band: a K=3 and a K=7
+    arrival (same bucket_key) stay separate micro-batches."""
+    from repro.serve import ExperimentService
+    from repro.testing import VirtualClock
+    data, test = dataset
+    clock = VirtualClock()
+    svc = ExperimentService(data, test, chunk_periods=2, window=10.0,
+                            clock=clock, bands=True)
+    t1 = svc.submit(_spec(3, seeds=(0,)), periods=4)
+    t2 = svc.submit(_spec(7, seeds=(0,)), periods=4)
+    clock.advance(11.0)
+    svc.drain()
+    assert t1.done and t2.done
+    # each admitted alone (different bands -> different groups)
+    assert svc.stats.admissions == 2
+    r1 = t1.result()
+    solo = Experiment(data, test, [_spec(3, seeds=(0,))]).run(periods=4)
+    np.testing.assert_array_equal(r1.times, solo.times)
+    np.testing.assert_allclose(np.asarray(r1.losses),
+                               np.asarray(solo.losses),
+                               atol=1e-5, rtol=1e-5)
