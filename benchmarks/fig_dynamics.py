@@ -1,0 +1,127 @@
+"""Dynamic worlds — the value-of-feedback figure behind the scenario
+dynamics subsystem (PR 9).
+
+Three scheduler-level sweeps over the drifting/faulty/energy-bounded
+worlds (host planning only — CI-cheap, no device training):
+
+1. **Drift**: open-loop (stale first-gain belief, the paper's static
+   assumption) vs closed-loop (fresh gains at every chunk boundary)
+   realized-latency ledgers, swept over Markov-drift seeds and spreads.
+   The headline is the mean latency ratio closed/open — re-pricing the
+   TDMA airtime at realized gains recovers most of what the stale
+   belief wastes, and the win grows with the drift spread.
+2. **Faults**: straggler slowdowns stretch the realized ledger by
+   exactly the planned-vs-realized gap (the planner allocates blind;
+   the ledger pays), and dropout sheds participation at the configured
+   rate.
+3. **Energy**: a tight per-user budget sheds batch until every kept
+   user lands under budget — reported as the shed fraction and the
+   max realized spend.
+
+Emits ``BENCH_dynamics.json``.  Run:
+``PYTHONPATH=src python -m benchmarks.fig_dynamics``
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core import DeviceProfile, FeelScheduler
+from repro.dynamics import EnergyBudget, Fading, Faults
+
+CHUNK = 2
+
+
+def _fleet():
+    """Heterogeneous CPU fleet (spread clock rates make the TDMA slot
+    split a real decision, so stale gains have something to waste)."""
+    return tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                 for f in (0.7, 2.1, 1.4, 0.9))
+
+
+def _sched(**kw):
+    kw.setdefault("devices", _fleet())
+    kw.setdefault("n_params", 4000)
+    kw.setdefault("b_max", 16)
+    return FeelScheduler(**kw)
+
+
+def _drift_pair(seed: int, spread: float, periods: int):
+    """(open, closed) realized-latency totals for one drift realization."""
+    fad = Fading(states=3, spread=spread, stickiness=0.95)
+    open_lat = _sched(seed=seed, fading=fad).plan_horizon(periods).latency
+    sch = _sched(seed=seed, fading=fad)
+    closed_lat = np.concatenate(
+        [sch.plan_horizon(CHUNK, warm_start=(i > 0), closed_loop=True)
+         .latency for i in range(periods // CHUNK)])
+    return float(open_lat.sum()), float(closed_lat.sum())
+
+
+def main(fast: bool = True):
+    periods = 8 if fast else 16
+    seeds = range(6 if fast else 24)
+
+    drift = {}
+    for spread in (0.6, 1.2):
+        pairs = [_drift_pair(s, spread, periods) for s in seeds]
+        ratios = [c / o for o, c in pairs]
+        drift[f"spread{spread}"] = {
+            "open_s": [o for o, _ in pairs],
+            "closed_s": [c for _, c in pairs],
+            "mean_ratio_closed_over_open": float(np.mean(ratios)),
+            "win_fraction": float(np.mean([r < 1.0 for r in ratios])),
+        }
+
+    base = _sched(seed=0).plan_horizon(periods)
+    slow = _sched(seed=0, faults=Faults(slow_prob=0.5, slow_factor=4.0)) \
+        .plan_horizon(periods)
+    drop = _sched(seed=0, faults=Faults(drop_prob=0.3)).plan_horizon(periods)
+    faults = {
+        "latency_stretch": float(slow.latency.sum() / base.latency.sum()),
+        "dropout_keep_rate": float(drop.participation.mean()),
+    }
+
+    budget = 0.35
+    shed = _sched(seed=0, energy=EnergyBudget(budget_j=budget)) \
+        .plan_horizon(periods)
+    kept = shed.participation > 0.5
+    energy = {
+        "budget_j": budget,
+        "shed_fraction": float(1.0 - shed.batch.sum() / base.batch.sum()),
+        "dropped_fraction": float(1.0 - kept.mean()),
+        "max_spend_kept_j": float(shed.energy[kept].max()),
+        "under_budget": bool(np.all(shed.energy[kept] <= budget + 1e-9)),
+    }
+
+    report = {"periods": periods, "n_seeds": len(list(seeds)),
+              "chunk": CHUNK, "drift": drift, "faults": faults,
+              "energy": energy}
+    with open("BENCH_dynamics.json", "w") as f:
+        json.dump(report, f, indent=2)
+
+    for spread, d in drift.items():
+        print(f"drift {spread}: closed/open latency "
+              f"{d['mean_ratio_closed_over_open']:.3f} "
+              f"(wins {d['win_fraction']:.0%} of seeds)")
+    print(f"faults: stretch {faults['latency_stretch']:.2f}x, "
+          f"keep rate {faults['dropout_keep_rate']:.2f}")
+    print(f"energy: shed {energy['shed_fraction']:.0%} of batch, "
+          f"max kept spend {energy['max_spend_kept_j']:.3f} J "
+          f"(budget {budget} J)")
+
+    assert energy["under_budget"], "energy shedding exceeded the budget"
+    assert faults["latency_stretch"] > 1.0, \
+        "stragglers did not stretch the realized ledger"
+    big = drift["spread1.2"]
+    return [("fig_dynamics/drift_spread1.2",
+             0.0,
+             f"ratio={big['mean_ratio_closed_over_open']:.3f};"
+             f"wins={big['win_fraction']:.2f};"
+             f"stretch={faults['latency_stretch']:.2f}x;"
+             f"shed={energy['shed_fraction']:.2f}")]
+
+
+if __name__ == "__main__":
+    for r in main(fast=True):
+        print(",".join(map(str, r)))

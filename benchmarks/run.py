@@ -9,9 +9,10 @@ import time
 def main() -> None:
     from benchmarks import (ablation_compression, fig2_gpu_training_function,
                             fig3_generalization, fig45_batchsize_policies,
-                            fig_replan, fig_users, loss_decay_fit, roofline,
-                            serve_load, smoke_experiment, solver_scaling,
-                            sweep_speed, table2_schemes)
+                            fig_dynamics, fig_replan, fig_users,
+                            loss_decay_fit, roofline, serve_load,
+                            smoke_experiment, solver_scaling, sweep_speed,
+                            table2_schemes)
     modules = [
         ("fig2_gpu_training_function", fig2_gpu_training_function),
         ("solver_scaling", solver_scaling),
@@ -23,6 +24,7 @@ def main() -> None:
         ("ablation_compression", ablation_compression),
         ("fig_users", fig_users),
         ("fig_replan", fig_replan),
+        ("fig_dynamics", fig_dynamics),
         ("sweep_speed", sweep_speed),
         ("roofline", roofline),
         ("serve_load", serve_load),

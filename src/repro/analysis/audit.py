@@ -9,7 +9,9 @@ and writes a machine-readable ``AUDIT_report.json``:
   (``--users``), the ``local_steps > 1`` delta-upload variant, the
   per-round-sampled (time-varying participation mask) programs on both
   engines, the hierarchical cell→edge→cloud family (alone and composed
-  with sampling), and the K-banded sub-bucketed sweep;
+  with sampling), the K-banded sub-bucketed sweep, and the PR-9 dynamics
+  families (drifting block-fading channels, straggler/dropout faults,
+  energy-budget shedding — alone and composed with sampling);
 * **trace ledger** over a real chunked closed-loop run
   (``Experiment.run(replan=R, audit=True)``) — proving one trace per
   (bucket, chunk-length) program and zero retraces across replan
@@ -34,6 +36,7 @@ from repro.api.experiment import Experiment
 from repro.api.lowering import group_rows, plan_bucket, trace_bucket
 from repro.core import DeviceProfile
 from repro.data.pipeline import ClassificationData
+from repro.dynamics import EnergyBudget, Fading, Faults
 from repro.fed import engine
 from repro.topology import Sampling, Topology
 
@@ -88,6 +91,24 @@ def _grid_specs(users):
         # per power-of-two band (group_rows(..., bands=True) below)
         "banded": [_spec(u, scheme="feel", sampling=Sampling(fraction=0.5))
                    for u in users],
+        # dynamics (PR 9): drifting block-fading channels — structural
+        # via the Markov state count — alone and composed with sampling
+        "fading": [_spec(k, scheme="feel",
+                         fading=Fading(states=3, spread=0.8)),
+                   _spec(k, scheme="feel", sampling=Sampling(size=2),
+                         fading=Fading(states=3, spread=0.8))],
+        # straggler slowdowns + mid-horizon dropout: the config-static
+        # time-varying mask must dominate reductions like sampling's
+        "faults": [_spec(u, scheme="feel",
+                         faults=Faults(slow_prob=0.3, drop_prob=0.2))
+                   for u in users],
+        # per-user energy budgets: post-solve shedding is one more
+        # participation mask through the same active machinery
+        "energy": [_spec(k, scheme="feel",
+                         energy=EnergyBudget(budget_j=0.5)),
+                   _spec(k, scheme="feel", sampling=Sampling(size=2),
+                         energy=EnergyBudget(budget_j=0.5),
+                         faults=Faults(slow_prob=0.2, drop_prob=0.2))],
     }
 
 

@@ -254,7 +254,8 @@ def _plan_key(r: Row) -> tuple:
     work."""
     s = r.spec
     return (s.fleet, s.effective_policy, s.b_max, s.compression, s.cell,
-            s.hidden, s.depth, r.seed, s.sampling, s.topology)
+            s.hidden, s.depth, r.seed, s.sampling, s.topology,
+            s.fading, s.faults, s.energy, s.adapt_tau)
 
 
 def _rescale_lr(horizon, base_lr: float, ref_batch: float):
@@ -302,6 +303,7 @@ class BucketHandle:
     global_batch: np.ndarray
     decays: object = None        # (n+pad, P) device array (feel only)
     state: object = None         # engine.EngineState after this chunk
+    energy: object = None        # (n, P, k_pad) host joules ledger, or None
 
 
 # ---------------------------------------------------------------------------
@@ -339,7 +341,9 @@ class _FeelPlanner:
                 policy=r.spec.effective_policy, b_max=r.spec.b_max,
                 base_lr=r.spec.base_lr, compression=r.spec.compression,
                 cell_cfg=r.spec.cell, seed=r.seed,
-                sampling=r.spec.sampling, topology=r.spec.topology)
+                sampling=r.spec.sampling, topology=r.spec.topology,
+                fading=r.spec.fading, faults=r.spec.faults,
+                energy=r.spec.energy)
 
         self.schedulers: List[FeelScheduler] = []
         self._sched_of: List[int] = []
@@ -359,9 +363,24 @@ class _FeelPlanner:
             FederatedBatcher(_partition(r.spec, data, r.seed),
                              r.spec.b_max, r.seed) for r in rows]
         self._offsets = np.zeros(len(rows))
+        # adaptive local steps: the bucket-consensus τ the NEXT chunk
+        # executes (starts at the structural local_steps; re-scored at
+        # every plan() once ξ feedback has landed)
+        self._tau = rows[0].spec.local_steps
 
     def plan(self, periods: int, warm_start: bool = False) -> BucketPlan:
         rows = self.bucket.rows
+        spec0 = rows[0].spec
+        tau = None
+        if spec0.adapt_tau is not None:
+            # bucket consensus: every row scores the candidate set with
+            # its own realized comm/comp split and ξ estimate; the bucket
+            # takes the MIN (conservative — never more local compute than
+            # the most communication-starved row wants), because τ shapes
+            # the scan body and the whole bucket must agree per chunk
+            tau = min(s.recommend_tau(spec0.adapt_tau.choices, self._tau)
+                      for s in self.schedulers)
+            self._tau = tau
         # per_row IS the closed loop: the decay-cap steer only applies
         # once rows own their estimators (and only after feedback landed)
         planned = plan_horizons_batch(self.schedulers, periods,
@@ -375,6 +394,7 @@ class _FeelPlanner:
         schedules = []
         parts: List[Optional[np.ndarray]] = []
         clouds: List[Optional[np.ndarray]] = []
+        energies: List[Optional[np.ndarray]] = []
         for i, r in enumerate(rows):
             sched = self.schedulers[self._sched_of[i]]
             horizon = planned[self._sched_of[i]]
@@ -383,9 +403,11 @@ class _FeelPlanner:
                                       sched.ref_batch)
             parts.append(horizon.participation)
             clouds.append(horizon.cloud)
+            energies.append(horizon.energy)
             s = engine.build_schedule(
                 sched, self.batchers[i], r.spec.fleet, periods,
-                r.spec.local_steps, horizon=horizon,
+                r.spec.local_steps if tau is None else tau,
+                horizon=horizon,
                 time_offset=float(self._offsets[i]))
             self._offsets[i] = s.times[-1]
             schedules.append(engine.pad_schedule(s, k_pad))
@@ -399,6 +421,16 @@ class _FeelPlanner:
                 if p is not None:
                     active[i, :, :r.spec.k] = p
         payload = {"schedules": schedules, "active": active}
+        if tau is not None:
+            payload["tau"] = tau
+        if any(e is not None for e in energies):
+            # host-only per-user joules ledger (never crosses the device
+            # boundary); padded columns stay exactly 0
+            en = np.zeros((len(rows), periods, k_pad))
+            for i, (r, e) in enumerate(zip(rows, energies)):
+                if e is not None:
+                    en[i, :, :r.spec.k] = e
+            payload["energy"] = en
         if rows[0].spec.topology is not None:   # structural: all rows agree
             payload["member"] = np.stack([
                 r.spec.topology.member_matrix(r.spec.k, k_pad)
@@ -559,6 +591,8 @@ def _dispatch_feel(plan: BucketPlan, data, test, mesh,
     schedules = plan.payload["schedules"]
     active = plan.payload["active"]
     member = plan.payload.get("member")      # hierarchical buckets only
+    # adaptive buckets execute the chunk at the planner's consensus τ
+    local_steps = plan.payload.get("tau", spec0.local_steps)
     k_pad = plan.bucket.k_pad
 
     n = len(rows)
@@ -586,16 +620,17 @@ def _dispatch_feel(plan: BucketPlan, data, test, mesh,
             member, cloud = _pad_rows((member, cloud), n, pad)
         state, (losses, accs, decays) = engine.resume_hier_trajectory_batch(
             state, member, cloud, schedules, data, test,
-            local_steps=spec0.local_steps, compress=spec0.compress,
+            local_steps=local_steps, compress=spec0.compress,
             ratio=spec0.compression, mesh=mesh, active=active)
     else:
         state, (losses, accs, decays) = engine.resume_trajectory_batch(
             state, schedules, data, test,
-            local_steps=spec0.local_steps, compress=spec0.compress,
+            local_steps=local_steps, compress=spec0.compress,
             ratio=spec0.compression, mesh=mesh, active=active)
     return BucketHandle(bucket=plan.bucket, losses=losses, accs=accs,
                         times=plan.times, global_batch=plan.global_batch,
-                        decays=decays, state=state)
+                        decays=decays, state=state,
+                        energy=plan.payload.get("energy"))
 
 
 def _dispatch_dev(plan: BucketPlan, data, test, mesh,
@@ -695,9 +730,13 @@ def trace_bucket(plan: BucketPlan, data, test) -> TracedBucket:
     k_pad = plan.bucket.k_pad
     n = len(rows)
     periods = plan.times.shape[1]
+    # adaptive buckets: probe the program variant THIS chunk would run
+    local_steps = plan.payload.get("tau", spec0.local_steps)
     name = f"{plan.bucket.key}/P{periods}"
     if plan.bucket.band is not None:
         name += f"/B{plan.bucket.band}"
+    if "tau" in plan.payload:
+        name += f"/T{local_steps}"
     with engine.suspend_trace_count():
         if plan.bucket.kind == "feel":
             schedules = plan.payload["schedules"]
@@ -726,7 +765,7 @@ def trace_bucket(plan: BucketPlan, data, test) -> TracedBucket:
                 cloud = engine.host_to_device(
                     np.asarray(plan.payload["cloud"]))
                 fn = engine.hier_trajectory_program(
-                    spec0.local_steps, spec0.compress, spec0.compression,
+                    local_steps, spec0.compress, spec0.compression,
                     n_edges=member.shape[1])
                 closed = jax.make_jaxpr(fn)(
                     params_e0, residual0, member_d, active, cloud, xs,
@@ -742,20 +781,23 @@ def trace_bucket(plan: BucketPlan, data, test) -> TracedBucket:
                     LaneLabel(2, 0.0),
                     NO_LABEL,
                     {"idx": LaneLabel(2), "weight": LaneLabel(2),
-                     "batch": LaneLabel(2), "lr": NO_LABEL},
+                     "batch": LaneLabel(2), "lr": NO_LABEL,
+                     "aggden": NO_LABEL},
                     NO_LABEL, NO_LABEL, NO_LABEL, NO_LABEL)
                 n_leaves = len(jax.tree_util.tree_leaves(params_e0))
             else:
                 fn = engine.trajectory_program(
-                    spec0.local_steps, spec0.compress, spec0.compression)
+                    local_steps, spec0.compress, spec0.compression)
                 closed = jax.make_jaxpr(fn)(
                     params0, residual0, active, xs, *data_args)
+                # aggden is a per-period scalar (no user lane): NO_LABEL
                 labels = (
                     tree_map(lambda _: NO_LABEL, params0),
                     tree_map(lambda _: LaneLabel(1, 0.0), residual0),
                     LaneLabel(2, 0.0),
                     {"idx": LaneLabel(2), "weight": LaneLabel(2),
-                     "batch": LaneLabel(2), "lr": NO_LABEL},
+                     "batch": LaneLabel(2), "lr": NO_LABEL,
+                     "aggden": NO_LABEL},
                     NO_LABEL, NO_LABEL, NO_LABEL, NO_LABEL)
                 n_leaves = len(jax.tree_util.tree_leaves(params0))
             # outputs: (params, residual, (losses, accs, decays))
@@ -860,6 +902,7 @@ class BucketRun:
     _pending: deque = field(default_factory=deque)
     _chunks: list = field(default_factory=list)
     _decays: list = field(default_factory=list)
+    _energy: list = field(default_factory=list)
 
     def __post_init__(self):
         if self.chunk < 1:
@@ -916,6 +959,8 @@ class BucketRun:
             self._planner.observe(decays, handle.global_batch)
         chunk = (losses, accs, handle.times, handle.global_batch)
         self._chunks.append(chunk)
+        if handle.energy is not None:
+            self._energy.append(handle.energy)
         self.collected += p_c
         return chunk
 
@@ -942,6 +987,16 @@ class BucketRun:
         if not self._decays:
             return None
         return np.concatenate(self._decays, axis=1)
+
+    @property
+    def energy_ledger(self) -> Optional[np.ndarray]:
+        """(n, collected, k_pad) per-user joules spent per period, banked
+        chunk by chunk (``None`` unless the bucket's specs set an
+        ``EnergyBudget``).  A host-side ledger like ``times`` — it never
+        crosses the device boundary."""
+        if not self._energy:
+            return None
+        return np.concatenate(self._energy, axis=1)
 
     def result(self):
         """The full-horizon ``(losses, accs, times, global_batch)`` —

@@ -53,6 +53,7 @@ import jax
 from repro.channels.model import CellConfig
 from repro.core.baselines import POLICIES
 from repro.core.latency import DeviceProfile
+from repro.dynamics import EnergyBudget, Fading, Faults, TauAdapt
 from repro.topology import Sampling, Topology
 
 SCHEMES = ("feel", "gradient_fl", "model_fl", "individual")
@@ -81,6 +82,10 @@ class ScenarioSpec:
     replan: Optional[int] = None         # closed-loop ξ re-plan interval
     sampling: Optional[Sampling] = None  # per-round S-of-K participation
     topology: Optional[Topology] = None  # cell→edge→cloud hierarchy
+    fading: Optional[Fading] = None      # block-fading Markov channel drift
+    faults: Optional[Faults] = None      # straggler slowdowns + dropout
+    energy: Optional[EnergyBudget] = None  # per-user per-period energy caps
+    adapt_tau: Optional[TauAdapt] = None   # re-planned local-steps knob
 
     def __post_init__(self):
         object.__setattr__(self, "fleet", tuple(self.fleet))
@@ -124,6 +129,44 @@ class ScenarioSpec:
                 raise ValueError(
                     f"fleet of {self.k} users cannot populate the "
                     f"topology's {self.topology.cells} cells")
+        for fld, typ in (("fading", Fading), ("faults", Faults),
+                         ("energy", EnergyBudget), ("adapt_tau", TauAdapt)):
+            val = getattr(self, fld)
+            if val is not None and not isinstance(val, typ):
+                raise TypeError(
+                    f"{fld}= expects a repro.dynamics.{typ.__name__}, got "
+                    f"{type(val).__name__}")
+        if self.has_dynamics:
+            if self.is_dev_scheme:
+                raise ValueError(
+                    "dynamics (fading/faults/energy/adapt_tau) act through "
+                    f"the FEEL planner; the {self.scheme!r} scheme has no "
+                    "planner to perturb")
+            if self.topology is not None:
+                raise ValueError(
+                    "dynamics are not threaded through the hierarchical "
+                    "per-cell solves yet; drop topology= or the dynamics "
+                    "fields")
+        if self.adapt_tau is not None:
+            if self.replan is None:
+                raise ValueError(
+                    "adapt_tau= re-plans local steps at closed-loop chunk "
+                    "boundaries; set replan= on the spec")
+            if self.local_steps not in self.adapt_tau.choices:
+                raise ValueError(
+                    f"local_steps={self.local_steps} is the starting point "
+                    "of the adaptive schedule and must appear in adapt_tau "
+                    f"choices {self.adapt_tau.choices!r}")
+        if self.sampling is not None and self.sampling.weighted:
+            if self.topology is not None:
+                raise ValueError(
+                    "weighted (1/p) sampling corrects the flat server "
+                    "aggregation; the hierarchical path does not support it")
+            if self.energy is not None:
+                raise ValueError(
+                    "weighted (1/p) sampling needs probabilistic "
+                    "inclusion; deterministic energy drops break the "
+                    "Horvitz-Thompson correction")
 
     # ---- derived lowering attributes -------------------------------------
     @property
@@ -134,6 +177,12 @@ class ScenarioSpec:
     def is_dev_scheme(self) -> bool:
         """True for the per-device-parameter schemes (no gradient fusion)."""
         return self.scheme in ("individual", "model_fl")
+
+    @property
+    def has_dynamics(self) -> bool:
+        """True when any time-varying-world process is configured."""
+        return (self.fading is not None or self.faults is not None
+                or self.energy is not None or self.adapt_tau is not None)
 
     @property
     def effective_policy(self) -> str:
@@ -180,7 +229,15 @@ class ScenarioSpec:
         and is absent.  ``sampling`` is deliberately NOT structural: a
         participation mask is per-period *data* through the same active
         machinery as fleet padding, so sampled and unsampled scenarios
-        share one program."""
+        share one program.
+
+        Dynamics (PR 9): ``faults`` and ``energy`` are value-only (they
+        arrive as schedule values and masks), as are a ``Fading`` spec's
+        gain values — but the fading *state count* and the ``adapt_tau``
+        choice set are structural program-family coordinates: the
+        auditor certifies per family, and an adaptive bucket compiles
+        one scan-body variant per realized τ, so only rows agreeing on
+        the candidate set may chunk together."""
         if self.is_dev_scheme:
             return ("dev", self.scheme, self.dev_epoch_batch,
                     self.hidden, self.depth)
@@ -188,7 +245,9 @@ class ScenarioSpec:
                 else self.topology.structural_key())
         return ("feel", self.b_max, self.local_steps,
                 self.compress, self.compression if self.compress else None,
-                self.hidden, self.depth, self.replan, topo)
+                self.hidden, self.depth, self.replan, topo,
+                None if self.fading is None else self.fading.states,
+                None if self.adapt_tau is None else self.adapt_tau.choices)
 
 
 jax.tree_util.register_static(ScenarioSpec)

@@ -19,6 +19,9 @@ from repro.core.baselines import POLICIES
 from repro.core.efficiency import XiEstimator, lr_scale
 from repro.core.latency import (DeviceProfile, downlink_latency,
                                 gradient_bits, uplink_latency)
+from repro.dynamics import (EnergyBudget, Fading, FadingProcess, Faults,
+                            FaultProcess)
+from repro.dynamics.energy import batch_caps, energy_spend
 from repro.topology import ParticipationSampler, Sampling, Topology
 
 
@@ -56,6 +59,10 @@ class PlanHorizon:
     global_batch: np.ndarray     # (P,) int
     participation: Optional[np.ndarray] = None   # (P, K) f32 {0,1}
     cloud: Optional[np.ndarray] = None           # (P,) f32 {0,1}
+    # --- dynamics outputs (PR 9) ---
+    aggden: Optional[np.ndarray] = None          # (P,) HT fixed denominator
+    energy: Optional[np.ndarray] = None          # (P, K) realized spend (J)
+    slowdown: Optional[np.ndarray] = None        # (P, K) straggler factors
 
     @property
     def periods(self) -> int:
@@ -80,6 +87,9 @@ class FeelScheduler:
                                  # are stationary; warm-start in between)
     sampling: Optional[Sampling] = None    # per-round S-of-K participation
     topology: Optional[Topology] = None    # cell→edge→cloud hierarchy
+    fading: Optional[Fading] = None        # block-fading Markov drift
+    faults: Optional[Faults] = None        # stragglers + dropout
+    energy: Optional[EnergyBudget] = None  # per-user per-period caps
     _period: int = 0
     _dist_km: Optional[np.ndarray] = None
     _b_cache: Optional[float] = None       # topology horizons: (cells,) array
@@ -100,6 +110,33 @@ class FeelScheduler:
             None if self.sampling is None else
             ParticipationSampler(self.sampling, len(self.devices),
                                  self.seed))
+        # dynamics processes: dedicated streams (0xFAD1 / 0xFA17), same
+        # disjointness contract as the participation sampler
+        self._fading_proc = (
+            None if self.fading is None else
+            FadingProcess(self.fading, len(self.devices), self.seed))
+        self._faults_proc = (
+            None if self.faults is None else
+            FaultProcess(self.faults, len(self.devices), self.seed))
+        if self.topology is not None and (
+                self.fading is not None or self.faults is not None
+                or self.energy is not None):
+            raise ValueError(
+                "dynamics are not threaded through the hierarchical "
+                "per-cell solves")
+        # realized comm/comp split of the last planned chunk — the
+        # adaptive-τ recommendation's inputs (bookkeeping only)
+        self._last_lat: Optional[float] = None
+        self._last_comp: Optional[float] = None
+
+    @property
+    def dynamic(self) -> bool:
+        """True when this scheduler's world is time-varying (or its
+        aggregation is importance-weighted) — such horizons plan solo in
+        :func:`plan_horizons_batch` (correctness over fusion)."""
+        return (self.fading is not None or self.faults is not None
+                or self.energy is not None
+                or (self.sampling is not None and self.sampling.weighted))
 
     def _draw_participation(self, periods: int) -> Optional[np.ndarray]:
         """The next ``periods`` cohort masks (None when unsampled);
@@ -108,6 +145,128 @@ class FeelScheduler:
         if self._participation is None:
             return None
         return self._participation.draw(periods)
+
+    def _draw_dynamics(self, periods: int):
+        """Advance the fading and fault streams by ``periods`` — a fixed
+        number of variates per period on each dedicated stream, mirroring
+        the participation discipline (chunked == monolithic, and the
+        draws perturb no pre-existing stream).  Returns
+        ``(gains, slowdown, keep)``, each ``(P, K)`` or None."""
+        gains = (None if self._fading_proc is None
+                 else self._fading_proc.draw(periods))
+        slow = keep = None
+        if self._faults_proc is not None:
+            slow, keep = self._faults_proc.draw(periods)
+        return gains, slow, keep
+
+    def _compose_avail(self, part: Optional[np.ndarray],
+                       keep: Optional[np.ndarray],
+                       periods: int) -> Optional[np.ndarray]:
+        """Participation ∧ dropout.  Returns an array whenever faults or
+        an energy budget are *configured* — mask presence must be a
+        function of the spec, never of realized values, so every chunk of
+        a bucket lowers with the same (time-varying) active signature —
+        and None only in the static-mask world (bitwise the PR-8 path).
+        A period nobody would survive suppresses its dropouts instead of
+        starving the aggregation (documented soft guarantee)."""
+        if keep is None and self.energy is None:
+            return part
+        base = (np.ones((periods, len(self.devices)))
+                if part is None else np.asarray(part, float))
+        if keep is None:
+            return base
+        avail = base * keep
+        dead = avail.sum(1) <= 0
+        if dead.any():
+            avail = np.where(dead[:, None], base, avail)
+        return avail
+
+    def _shed_energy(self, batch_f: np.ndarray, avail: np.ndarray,
+                     tau_up: np.ndarray, rates_up_p: np.ndarray,
+                     periods: int):
+        """Energy-budget enforcement after the per-period solve: clip
+        each user to the batch it can afford at its allocated uplink
+        slot; a user that cannot afford even its minimum batch drops for
+        the period (one more participation mask through the same active
+        machinery), unless that would empty the round — then the period
+        runs at the minimum batch instead (soft floor: a zero-progress
+        round helps no one).  An unreachable budget is the exact
+        identity: caps are +inf, ``min(B, inf) == B``, nobody drops."""
+        from repro.core.solver import FleetRows
+        c = self.cell.cfg
+        fr = FleetRows.from_devices(self.devices, periods)
+        cap = batch_caps(self.energy, fr, tau_up, rates_up_p,
+                         self.payload_bits, c.frame_up_s)
+        floor_cap = np.floor(cap)
+        active = avail > 0.5
+        drop = active & (floor_cap < fr.lo)
+        dead = ~((active & ~drop).any(1))
+        drop &= ~dead[:, None]
+        batch_f = np.where(drop, 0.0,
+                           np.minimum(batch_f, np.maximum(floor_cap, fr.lo)))
+        avail = np.where(drop, 0.0, avail)
+        return batch_f, avail
+
+    def _realize(self, batch_f: np.ndarray, avail: Optional[np.ndarray],
+                 tau_up: np.ndarray, tau_down: np.ndarray,
+                 rates_up: np.ndarray, rates_down: np.ndarray,
+                 gains: Optional[np.ndarray], slow: Optional[np.ndarray],
+                 periods: int):
+        """Re-price the horizon at the REALIZED world — per-period fading
+        gains (not the planner's belief), straggler slowdowns, the
+        post-shed cohort.  Mirrors ``solve_period_rows``' ledger lines
+        operand-for-operand, so with identity dynamics (unit gains, unit
+        slowdowns, unbinding budget) the result is bitwise the solver's
+        own latency.  Also returns the realized per-user energy spend
+        when a budget is configured, and stores the chunk's mean
+        comm/comp split for adaptive-τ recommendations."""
+        from repro.core.solver import FleetRows
+        c = self.cell.cfg
+        s = self.payload_bits
+        fr = FleetRows.from_devices(self.devices, periods)
+        if avail is not None:
+            fr = fr.with_mask(avail)
+        ru = rates_up if gains is None else rates_up * gains
+        rd = rates_down if gains is None else rates_down * gains
+        t_local = fr.local_latency(batch_f)
+        if slow is not None:
+            t_local = t_local * slow
+        t_up = s * c.frame_up_s / (np.maximum(tau_up, 1e-30) * ru)
+        t_down = s * c.frame_down_s / (np.maximum(tau_down, 1e-30) * rd)
+        latency = fr.mmax(t_local + t_up) + fr.mmax(t_down + fr.t_upd)
+        energy = None
+        if self.energy is not None:
+            energy = np.where(fr.active,
+                              energy_spend(self.energy, t_local, t_up), 0.0)
+        self._last_lat = float(np.mean(latency))
+        self._last_comp = float(np.mean(fr.mmax(t_local)))
+        return latency, energy
+
+    def recommend_tau(self, choices, current: int) -> int:
+        """Score each candidate local-steps count with the paper's
+        learning-efficiency criterion at the last chunk's realized
+        comm/comp split — E(τ) = min(ξ√(τ·B̄), cap) / (t_comm + τ·t_comp)
+        — and return the best (ties break toward fewer steps).  Before
+        any feedback exists the current τ stands."""
+        if self._last_lat is None or self._last_comp is None \
+                or self._b_cache is None:
+            return current
+        try:
+            b_bar = float(np.mean(self._b_cache))
+        except (TypeError, ValueError):
+            return current
+        comp = max(self._last_comp, 0.0)
+        comm = max(self._last_lat - comp, 1e-12)
+        cap = self.xi_est.decay_cap
+        best, best_e = current, -np.inf
+        for t in sorted(choices):
+            dl = self.xi_est.xi * float(np.sqrt(t * b_bar))
+            if cap is not None:
+                dl = min(dl, cap)
+            e = dl / (comm + t * comp)
+            if e > best_e:
+                best, best_e = t, e
+        return int(best)
 
     @property
     def payload_bits(self) -> float:
@@ -173,17 +332,21 @@ class FeelScheduler:
         (``PlanHorizon.cloud``).
         """
         part = self._draw_participation(periods)
+        dyn = self._draw_dynamics(periods)
         if self.topology is not None:
             return self._plan_horizon_topo(periods, part, warm_start,
                                            closed_loop)
         if self.policy == "proposed":
             return self._plan_horizon_proposed(periods, warm_start,
-                                               closed_loop, part)
+                                               closed_loop, part, dyn)
         if self.policy in ("online", "full", "random"):
-            return self._plan_horizon_fixed(periods, part)
+            return self._plan_horizon_fixed(periods, part, dyn, closed_loop)
         if part is not None:
             raise ValueError(
                 f"sampling is not supported for policy {self.policy!r}")
+        if self.dynamic:
+            raise ValueError(
+                f"dynamics are not supported for policy {self.policy!r}")
         plans = [self.plan() for _ in range(periods)]
         return PlanHorizon(
             batch=np.stack([p.batch for p in plans]),
@@ -195,8 +358,9 @@ class FeelScheduler:
             global_batch=np.array([p.global_batch for p in plans], np.int64))
 
     def _plan_horizon_fixed(self, periods: int,
-                            part: Optional[np.ndarray] = None
-                            ) -> PlanHorizon:
+                            part: Optional[np.ndarray] = None,
+                            dyn=(None, None, None),
+                            closed_loop: bool = False) -> PlanHorizon:
         """Fixed-batch baselines, whole horizon in one lockstep evaluation.
 
         Bit-identical to ``periods`` successive ``plan()`` calls: the
@@ -211,12 +375,25 @@ class FeelScheduler:
         horizon consumes the rng exactly like an unsampled one) and the
         mask then zeroes out absent users; the equal TDMA slots split the
         frame among the period's cohort only.
+
+        ``dyn``: realized (gains, slowdown, keep) dynamics (see
+        ``_draw_dynamics``).  The slot math prices rates at the planner's
+        *belief* gain (first-period realization; chunk-start when
+        ``closed_loop``), dropout composes into the cohort mask, energy
+        caps shed load post-hoc, and the ledger is re-priced at the
+        realized world by ``_realize``.
         """
         from repro.core.solver import FleetRows, fixed_slot_rows
         c = self.cell.cfg
         K = len(self.devices)
+        gains, slow, keep = dyn
         rates_up, rates_down = self.cell.avg_rate_updown_rows(
             self._dist_km, periods)
+        if gains is None:
+            pup, pdown = rates_up, rates_down
+        else:
+            pg = self._fading_proc.planning_gain(closed_loop)[None, :]
+            pup, pdown = rates_up * pg, rates_down * pg
         if self.policy == "online":
             batch = np.ones((periods, K))
         elif self.policy == "full":
@@ -224,46 +401,91 @@ class FeelScheduler:
         else:                                    # random
             batch = self.rng.integers(
                 1, self.b_max + 1, size=(periods, K)).astype(float)
-        if part is None:
+        avail = self._compose_avail(part, keep, periods)
+        if avail is None:
             tau_up, tau_down, latency = fixed_slot_rows(
-                self.devices, batch, rates_up, rates_down,
+                self.devices, batch, pup, pdown,
                 self.payload_bits, c.frame_up_s, c.frame_down_s)
-            ib = np.maximum(np.round(batch).astype(int), 1)
+            batch_f = batch
         else:
             fr = FleetRows.from_devices(self.devices,
-                                        periods).with_mask(part)
+                                        periods).with_mask(avail)
             tau_up, tau_down, latency = fixed_slot_rows(
-                fr, batch * part, rates_up, rates_down,
+                fr, batch * avail, pup, pdown,
                 self.payload_bits, c.frame_up_s, c.frame_down_s)
-            ib = np.where(part > 0.5,
-                          np.maximum(np.round(batch).astype(int), 1), 0)
+            batch_f = batch * avail
+        mask_now = avail
+        if self.energy is not None:
+            batch_f, mask_now = self._shed_energy(batch_f, mask_now,
+                                                  tau_up, pup, periods)
+        if mask_now is None:
+            ib = np.maximum(np.round(batch).astype(int), 1)
+        else:
+            ib = np.where(mask_now > 0.5,
+                          np.maximum(np.round(batch_f).astype(int), 1), 0)
+        aggden = None
+        if self.sampling is not None and self.sampling.weighted:
+            # Horvitz-Thompson fixed denominator: p · Σ_all b̄_k (the
+            # policy batch is the full-fleet plan here)
+            p_inc = self.sampling.p_of(K)
+            if self.faults is not None:
+                p_inc *= self.faults.keep_prob
+            full = np.maximum(np.round(batch).astype(int), 1)
+            aggden = p_inc * full.sum(1).astype(np.float64)
+        realize = (gains is not None or slow is not None
+                   or self.energy is not None)
+        energy_led = None
+        if realize:
+            latency, energy_led = self._realize(
+                batch_f, mask_now, tau_up, tau_down,
+                rates_up, rates_down, gains, slow, periods)
         gb = ib.sum(1)
         self._period += periods
         return PlanHorizon(
             batch=ib, tau_up=tau_up, tau_down=tau_down,
             lr=self.base_lr * np.sqrt(gb / self.ref_batch),
             latency=latency, global_batch=gb.astype(np.int64),
-            participation=part)
+            participation=mask_now, aggden=aggden, energy=energy_led,
+            slowdown=slow)
 
     def _plan_horizon_proposed(self, periods: int, warm_start: bool = False,
                                closed_loop: bool = False,
-                               part: Optional[np.ndarray] = None
-                               ) -> PlanHorizon:
+                               part: Optional[np.ndarray] = None,
+                               dyn=(None, None, None)) -> PlanHorizon:
         from repro.core.solver import (FleetRows, optimize_batch_rows,
                                        solve_period_rows)
         c = self.cell.cfg
         K = len(self.devices)
+        gains, slow, keep = dyn
         # one batched interleaved draw — same rng stream order as plan().
         # A sampled horizon draws rates for ALL K users regardless (the
         # cohort mask selects; it never re-shapes the Monte-Carlo stream).
         rates_up, rates_down = self.cell.avg_rate_updown_rows(
             self._dist_km, periods)
+        # planner belief under fading: open loop prices every period at
+        # the horizon's FIRST realized gain (the paper's static
+        # assumption — and chunking-invariant); closed loop re-reads the
+        # chain at the chunk start, which is what finally makes replan
+        # decision-relevant.  Realized per-period gains price the ledger
+        # in ``_realize`` below.
+        if gains is None:
+            pup, pdown = rates_up, rates_down
+        else:
+            pg = self._fading_proc.planning_gain(closed_loop)[None, :]
+            pup, pdown = rates_up * pg, rates_down * pg
+        weighted = self.sampling is not None and self.sampling.weighted
+        avail = self._compose_avail(part, keep, periods)
         # part=None keeps the plain devices path (bitwise the PR-4 code);
         # a cohort mask routes through the masked rows solver, whose
-        # per-row bounds and reductions see participants only
-        rows = (self.devices if part is None else
+        # per-row bounds and reductions see participants only.  Weighted
+        # (Horvitz-Thompson) aggregation instead plans the FULL fleet so
+        # every user owns a planned share b̄_k — the fixed denominator
+        # p·Σ_all b̄_k needs it — and the cohort mask applies only to the
+        # executed schedule.
+        solve_mask = None if weighted else avail
+        rows = (self.devices if solve_mask is None else
                 FleetRows.from_devices(self.devices, periods)
-                .with_mask(part))
+                .with_mask(solve_mask))
         xi = self.xi_est.xi
         # B* re-optimized on the reopt cadence; rows are independent given
         # their rates, so every reopt period solves in one batched call
@@ -278,13 +500,14 @@ class FeelScheduler:
                       if warm else None)
             cap = self.xi_est.decay_cap if closed_loop else None
             b_star = optimize_batch_rows(
-                rows if part is None else rows.take(reopt),
-                rates_up[reopt], rates_down[reopt],
+                rows if solve_mask is None else rows.take(reopt),
+                pup[reopt], pdown[reopt],
                 self.payload_bits, c.frame_up_s, c.frame_down_s, xi,
                 self.b_max, b_prev=b_prev,
                 n_candidates=33 if warm else 97,
                 dl_cap=(None if cap is None
-                        else np.full(int(reopt.sum()), cap)))
+                        else np.full(int(reopt.sum()), cap)),
+                energy=self.energy)
             j = 0
             for p in range(periods):
                 if reopt[p]:
@@ -293,21 +516,44 @@ class FeelScheduler:
                 B[p] = carry
         else:
             B[:] = carry
-        sol = solve_period_rows(rows, rates_up, rates_down,
+        sol = solve_period_rows(rows, pup, pdown,
                                 self.payload_bits, c.frame_up_s,
                                 c.frame_down_s, xi, B, self.b_max)
         self._b_cache = float(B[-1])
         self._period += periods
-        batch = np.maximum(np.round(sol["batch"]).astype(int), 1)
-        if part is not None:
-            batch = np.where(part > 0.5, batch, 0)
+        batch_f = sol["batch"]
+        mask_now = avail
+        if self.energy is not None:
+            batch_f, mask_now = self._shed_energy(batch_f, mask_now,
+                                                  sol["tau_up"], pup,
+                                                  periods)
+        batch = np.maximum(np.round(batch_f).astype(int), 1)
+        aggden = None
+        if weighted:
+            # fixed HT denominator from the full-fleet plan, BEFORE the
+            # cohort mask zeroes absentees
+            p_inc = self.sampling.p_of(K)
+            if self.faults is not None:
+                p_inc *= self.faults.keep_prob
+            aggden = p_inc * batch.sum(1).astype(np.float64)
+        if mask_now is not None:
+            batch = np.where(mask_now > 0.5, batch, 0)
         gb = batch.sum(1)
+        # the realized-world ledger re-price (and adaptive-τ stats); the
+        # static world keeps the solver's own latency untouched
+        realize = (gains is not None or slow is not None
+                   or self.energy is not None or weighted)
+        rl, energy_led = self._realize(
+            batch_f, mask_now, sol["tau_up"], sol["tau_down"],
+            rates_up, rates_down, gains, slow, periods)
+        latency = rl if realize else sol["latency"]
         return PlanHorizon(
             batch=batch, tau_up=sol["tau_up"], tau_down=sol["tau_down"],
             lr=np.array([lr_scale(self.base_lr, g, self.ref_batch)
                          for g in gb], np.float64),
-            latency=sol["latency"], global_batch=gb.astype(np.int64),
-            participation=part)
+            latency=latency, global_batch=gb.astype(np.int64),
+            participation=mask_now, aggden=aggden,
+            energy=energy_led if realize else None, slowdown=slow)
 
     def _plan_horizon_topo(self, periods: int,
                            part: Optional[np.ndarray],
@@ -506,10 +752,15 @@ def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
     groups = defaultdict(list)
     for i, s in enumerate(schedulers):
         if s.policy != "proposed":
-            out[i] = s.plan_horizon(periods)
-        elif s.topology is not None:
+            out[i] = s.plan_horizon(periods, warm_start=warm_start,
+                                    closed_loop=closed_loop)
+        elif s.topology is not None or s.dynamic:
             # hierarchical horizons solve per (cell, period) with their
-            # own reopt bookkeeping — solo, flags forwarded
+            # own reopt bookkeeping, and time-varying worlds (fading /
+            # faults / energy / weighted sampling) carry belief-vs-
+            # realized state the lockstep fuse does not model — solo,
+            # flags forwarded.  Stream discipline makes solo-vs-fused
+            # bitwise anyway, so only wall-clock differs.
             out[i] = s.plan_horizon(periods, warm_start=warm_start,
                                     closed_loop=closed_loop)
         else:
@@ -598,9 +849,16 @@ def plan_horizons_batch(schedulers: Sequence[FeelScheduler],
                          np.maximum(np.round(sol["batch"]).astype(int)
                                     .reshape(M, P, K), 1), 0)
         gb = batch.sum(2)
+        # adaptive-τ bookkeeping (values only — no output depends on it):
+        # mean realized comm/comp split per scheduler for recommend_tau
+        comp_mp = flat_fleets.mmax(
+            flat_fleets.local_latency(sol["batch"])).reshape(M, P)
+        lat_mp = sol["latency"].reshape(M, P)
         for m, (i, s) in enumerate(zip(idxs, scheds)):
             s._b_cache = float(B[m, -1])
             s._period += P
+            s._last_lat = float(np.mean(lat_mp[m]))
+            s._last_comp = float(np.mean(comp_mp[m]))
             k_m = ks[m]                          # slice back to the true K
             out[i] = PlanHorizon(
                 batch=batch[m, :, :k_m],

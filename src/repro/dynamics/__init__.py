@@ -1,0 +1,41 @@
+"""Scenario dynamics: the time-varying world (PR 9).
+
+Everything before this package assumed the paper's static premise — one
+channel realization, one fleet, one τ for the whole horizon — which made
+the closed-loop ``replan=R`` machinery provably decision-invariant
+(PR 5's ξ-scale-invariance).  The four processes here break that premise
+one axis at a time, each as an optional frozen ``ScenarioSpec`` field:
+
+* :class:`Fading` / :class:`FadingProcess` — a seeded block-fading
+  Markov chain over a per-user gain ladder that *drifts* the average
+  rates between chunks, so re-planning finally changes allocations;
+* :class:`Faults` / :class:`FaultProcess` — straggler slowdowns (scale
+  per-user computation latency in the ledger) and mid-horizon dropout
+  (another time-varying participation mask, composed multiplicatively
+  with PR-8 sampling through the same ``active`` machinery);
+* :class:`EnergyBudget` — per-user per-period energy caps folded into
+  the Algorithm-1 batch search (infeasible users shed load or drop) and
+  a realized energy-spend ledger column;
+* :class:`TauAdapt` — local steps τ as a re-planned knob next to
+  batchsize (Wang et al. 1804.05271's adaptive-τ view).
+
+Stream discipline: fading and faults own dedicated rng streams derived
+from ``(scenario_seed, spec.seed, tag)`` with tags ``0xFAD1`` / ``0xFA17``
+— disjoint from the channel Monte-Carlo (``Cell.make(seed)``), scheduler
+(``seed + 1``), batcher (``seed``) and participation (``0x5A17``)
+streams — and consume a FIXED number of variates per planned period, so
+(a) adding dynamics never perturbs any pre-existing draw and (b) chunked
+planning equals monolithic planning stream-for-stream.  The static world
+stays the bitwise special case: identity parameters (``spread=0``, zero
+fault probabilities, an unreachable budget) multiply by exactly 1.0 /
+clip at +inf and reproduce pre-dynamics runs bit-for-bit (test-enforced).
+"""
+from repro.dynamics.energy import EnergyBudget, energy_spend, uplink_airtime
+from repro.dynamics.fading import Fading, FadingProcess
+from repro.dynamics.faults import Faults, FaultProcess
+from repro.dynamics.tau import TauAdapt
+
+__all__ = [
+    "EnergyBudget", "Fading", "FadingProcess", "Faults", "FaultProcess",
+    "TauAdapt", "energy_spend", "uplink_airtime",
+]

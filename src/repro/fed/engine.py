@@ -35,7 +35,7 @@ from __future__ import annotations
 import contextlib
 from dataclasses import dataclass
 from functools import lru_cache, partial
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -173,6 +173,13 @@ class Schedule:
     lr: np.ndarray            # (P,) f32 — η per period
     times: np.ndarray         # (P,) f64 — cumulative simulated seconds
     global_batch: np.ndarray  # (P,) int
+    # (P,) f32 fixed aggregation denominator, or None.  Horvitz-Thompson
+    # weighted sampling plans batchsizes for the FULL fleet and divides
+    # each cohort's eq. (1) sum by p·Σ_all b̄_k instead of the realized
+    # Σ_cohort b_k; zero entries (the None default) fall back to the
+    # realized sum inside the step, so unweighted schedules are bitwise
+    # unchanged.
+    aggden: Optional[np.ndarray] = None
 
     @property
     def periods(self) -> int:
@@ -184,12 +191,17 @@ class Schedule:
         The scheduler plans in float64 (host precision); this is where the
         plan becomes device data — one cast, via :func:`host_to_device`.
         ``times``/``global_batch`` stay host-side and never cross.
+        ``aggden`` always crosses (zeros when unset) so weighted and
+        unweighted schedules share one program signature.
         """
+        aggden = (np.zeros(self.idx.shape[0], np.float32)
+                  if self.aggden is None else self.aggden)
         return host_to_device({
             "idx": self.idx,
             "weight": self.weight,
             "batch": self.batch,
             "lr": self.lr,
+            "aggden": aggden,
         })
 
 
@@ -203,7 +215,9 @@ def slice_schedule(schedule: Schedule, lo: int, hi: int) -> Schedule:
     return Schedule(idx=schedule.idx[lo:hi], weight=schedule.weight[lo:hi],
                     batch=schedule.batch[lo:hi], lr=schedule.lr[lo:hi],
                     times=schedule.times[lo:hi],
-                    global_batch=schedule.global_batch[lo:hi])
+                    global_batch=schedule.global_batch[lo:hi],
+                    aggden=None if schedule.aggden is None
+                    else schedule.aggden[lo:hi])
 
 
 @dataclass
@@ -279,24 +293,31 @@ def build_schedule(scheduler, batcher, devices, periods: int,
     if local_steps > 1:
         # tau local steps multiply the local-compute subperiod (paper §VII)
         part = getattr(horizon, "participation", None)
+        slow = getattr(horizon, "slowdown", None)
+        if slow is None:
+            slow = np.ones_like(np.asarray(horizon.batch, np.float64))
         if part is None:
             per_period += (local_steps - 1) * np.array(
-                [max(float(d.local_grad_latency(b))
-                     for d, b in zip(devices, bp)) for bp in horizon.batch])
+                [max(float(sl) * float(d.local_grad_latency(b))
+                     for d, b, sl in zip(devices, bp, sp))
+                 for bp, sp in zip(horizon.batch, slow)])
         else:
             # sampled horizon: only the period's participants compete in
             # the straggler max (a GPU's b=0 floor latency is nonzero, so
             # an unmasked max would charge absent users' idle floors)
             per_period += (local_steps - 1) * np.array(
-                [max(float(d.local_grad_latency(b))
-                     for d, b, m in zip(devices, bp, mp) if m > 0.5)
-                 for bp, mp in zip(horizon.batch, part)])
+                [max(float(sl) * float(d.local_grad_latency(b))
+                     for d, b, m, sl in zip(devices, bp, mp, sp) if m > 0.5)
+                 for bp, mp, sp in zip(horizon.batch, part, slow)])
     times = np.cumsum(np.concatenate([[time_offset], per_period]))[1:]
+    aggden = getattr(horizon, "aggden", None)
     return Schedule(idx=idx, weight=w,
                     batch=horizon.batch.astype(np.float32),
                     lr=horizon.lr.astype(np.float32),
                     times=times,
-                    global_batch=horizon.global_batch)
+                    global_batch=horizon.global_batch,
+                    aggden=None if aggden is None
+                    else aggden.astype(np.float32))
 
 
 def zero_residual(params, k: int):
@@ -318,7 +339,8 @@ def pad_schedule(schedule: Schedule, k: int) -> Schedule:
                     weight=np.pad(schedule.weight, pad3),
                     batch=np.pad(schedule.batch, ((0, 0), (0, k - kk))),
                     lr=schedule.lr, times=schedule.times,
-                    global_batch=schedule.global_batch)
+                    global_batch=schedule.global_batch,
+                    aggden=schedule.aggden)
 
 
 # ---------------------------------------------------------------------------
@@ -368,8 +390,13 @@ def _period_step(data_x, data_y, test_x, test_y, local_steps,
         # active rows compress identically at any fleet padding.
         grads, residual = jax.vmap(
             lambda g, r: compress_dense(g, ratio, r))(grads, residual)
-    # eq. (1): weighted average by B_k (padded rows carry B_k = 0)
-    wk = bk / jnp.sum(bk)
+    # eq. (1): weighted average by B_k (padded rows carry B_k = 0).  A
+    # positive ``aggden`` fixes the denominator (Horvitz-Thompson
+    # weighted sampling: p·Σ_all b̄_k); zero falls back to the realized
+    # cohort sum, which is the classic (biased-under-sampling) estimator
+    # and bitwise identical to the pre-aggden step.
+    den = xs["aggden"]
+    wk = bk / jnp.where(den > 0, den, jnp.sum(bk))
     agg = tree_map(lambda g: jnp.tensordot(wk, g, axes=1), grads)
     params = tree_map(lambda p, g: p - lr * g, params, agg)
 
@@ -451,7 +478,7 @@ def stack_schedules(schedules: Sequence[Schedule]):
     """Stack per-scenario schedules along a leading batch axis → scan xs."""
     per_seed = [s.stacked_xs() for s in schedules]
     return {k: jnp.stack([p[k] for p in per_seed])
-            for k in ("idx", "weight", "batch", "lr")}
+            for k in ("idx", "weight", "batch", "lr", "aggden")}
 
 
 def _normalize_active_batch(active, n: int, periods: int, k: int):

@@ -34,7 +34,14 @@ class PendingRequest:
     ``band`` is the K-band sub-bucketing width when the service runs with
     ``bands=True`` (``repro.topology.band_width`` of the fleet size):
     requests only merge within their band, so a K=8 arrival never admits
-    into a K=10240 neighbour's padded program."""
+    into a K=10240 neighbour's padded program.
+
+    ``deadline`` is an optional service-clock completion target: due
+    groups admit in order of *slack* (deadline minus now, tightest
+    first), so an urgent late arrival overtakes deadline-less batchmates
+    at the admission gate without touching the in-flight preemption
+    policy.  ``None`` means no deadline — infinite slack, FIFO among
+    themselves (the pre-deadline behaviour, bit-for-bit)."""
     ticket: object
     spec: object
     periods: int
@@ -42,6 +49,13 @@ class PendingRequest:
     submitted_at: float
     seq: int                      # global submission order (FIFO ties)
     band: Optional[int] = None
+    deadline: Optional[float] = None
+
+    def slack(self, now: float) -> float:
+        """Seconds until this request's deadline (+inf when none)."""
+        if self.deadline is None:
+            return float("inf")
+        return self.deadline - now
 
     @property
     def group_key(self) -> tuple:
@@ -78,8 +92,10 @@ class AdmissionQueue:
                 flush: bool = False) -> List[List[PendingRequest]]:
         """Remove and return every micro-batch due for admission at
         ``now`` (``flush=True`` ignores the window — drain semantics),
-        ordered by oldest member so earlier arrivals never admit behind
-        later ones.
+        ordered deadline-aware: micro-batches sort by their tightest
+        member's slack (``PendingRequest.slack``), then by oldest member
+        — so with no deadlines anywhere the order is exactly the old
+        FIFO (every slack is +inf and the seq tiebreak decides).
 
         ``max_batch`` bounds the micro-batch *size*, not just the
         trigger: a due group larger than ``max_batch`` is sliced into
@@ -106,7 +122,8 @@ class AdmissionQueue:
                     self._groups[key] = group
                 else:
                     del self._groups[key]
-        batches.sort(key=lambda g: g[0].seq)
+        batches.sort(key=lambda g: (min(r.slack(now) for r in g),
+                                    g[0].seq))
         return batches
 
     def next_due_at(self) -> Optional[float]:

@@ -164,17 +164,25 @@ class ExperimentService:
 
     # ---- request surface --------------------------------------------------
     def submit(self, spec: ScenarioSpec, periods: int,
-               priority: int = 0) -> Ticket:
+               priority: int = 0,
+               deadline: Optional[float] = None) -> Ticket:
         """Enqueue one scenario request; returns its :class:`Ticket`
         immediately (admission happens on a later :meth:`step`, once the
         batching window admits the request's group).  Lower ``priority``
         numbers are hotter — they take the next chunk slot from any
-        cooler run already in flight."""
+        cooler run already in flight.  ``deadline`` (service-clock
+        seconds) makes admission deadline-aware: due groups admit
+        tightest-slack first instead of FIFO."""
         if not isinstance(spec, ScenarioSpec):
             raise TypeError(f"submit expects a ScenarioSpec, got "
                             f"{type(spec).__name__}")
         if periods < 1:
             raise ValueError(f"periods must be >= 1, got {periods}")
+        if spec.adapt_tau is not None:
+            raise ValueError(
+                "adaptive local steps (adapt_tau=) compile one program "
+                "variant per realized τ, so the admission-time program "
+                "key is undecidable; the serving layer rejects such specs")
         now = self.clock.now()
         record = RequestRecord(
             ticket_id=self._seq, label=spec.label, periods=periods,
@@ -184,7 +192,8 @@ class ExperimentService:
         self._admission.push(PendingRequest(
             ticket=ticket, spec=spec, periods=periods, priority=priority,
             submitted_at=now, seq=self._seq,
-            band=band_width(spec.k) if self.bands else None))
+            band=band_width(spec.k) if self.bands else None,
+            deadline=deadline))
         self._seq += 1
         return ticket
 

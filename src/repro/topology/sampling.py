@@ -41,10 +41,22 @@ class Sampling:
     """Per-round participation policy: exactly one of ``size`` (fixed S
     users per period) or ``fraction`` (S = ceil(fraction * K)) is set.
     ``size`` larger than the fleet clamps to full participation, so one
-    Sampling value can ride a ``users=[...]`` sweep axis unchanged."""
+    Sampling value can ride a ``users=[...]`` sweep axis unchanged.
+
+    ``weighted=True`` turns on Horvitz-Thompson (1/p) importance
+    correction of the sampled aggregation: the planner allocates
+    batchsizes for the FULL fleet (so every user has a planned share
+    b̄_k even when absent), each period's cohort aggregates against the
+    *fixed* denominator p·Σ_all b̄_k instead of the realized Σ_cohort
+    b_k, and the estimator's expectation equals the full-participation
+    aggregate exactly — the realized-denominator mean is biased toward
+    whichever users happen to show up, which matters at tiny cohort
+    fractions (property-tested).  Weights no longer sum to one per draw
+    (only in expectation); that variance is the price of unbiasedness."""
     size: Optional[int] = None
     fraction: Optional[float] = None
     seed: int = 0
+    weighted: bool = False
 
     def __post_init__(self):
         if (self.size is None) == (self.fraction is None):
@@ -59,6 +71,9 @@ class Sampling:
         if self.fraction is not None and not 0.0 < self.fraction <= 1.0:
             raise ValueError(
                 f"sampling fraction must be in (0, 1], got {self.fraction!r}")
+        if not isinstance(self.weighted, bool):
+            raise TypeError(
+                f"weighted must be a bool, got {self.weighted!r}")
 
     def s_of(self, k: int) -> int:
         """Cohort size for a K-user fleet (always in ``1..k``)."""
@@ -66,10 +81,15 @@ class Sampling:
             return min(self.size, k)
         return min(k, max(1, int(np.ceil(self.fraction * k))))
 
+    def p_of(self, k: int) -> float:
+        """Per-user inclusion probability S/K (uniform cohorts)."""
+        return self.s_of(k) / k
+
     def __str__(self) -> str:  # readable grid-axis coordinate
+        w = "w" if self.weighted else ""
         if self.size is not None:
-            return f"S{self.size}@{self.seed}"
-        return f"S{self.fraction:g}K@{self.seed}"
+            return f"S{self.size}@{self.seed}{w}"
+        return f"S{self.fraction:g}K@{self.seed}{w}"
 
 
 class ParticipationSampler:

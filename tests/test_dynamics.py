@@ -1,0 +1,401 @@
+"""Scenario dynamics (PR 9): drifting block-fading channels,
+straggler/dropout faults, per-user energy budgets, and adaptive local
+steps.
+
+The contracts under test:
+
+* **identity** — a spec carrying only *identity* dynamics (zero-spread
+  fading, probability-0 faults, infinite budgets) is bit-identical to
+  the static world, ledger for ledger;
+* **stream hygiene** — every dynamics process draws from its own tagged
+  rng stream, so configuring dynamics never perturbs the channel /
+  policy / batcher draws the static world already made, and chunked
+  planning equals monolithic planning draw-for-draw;
+* **the tentpole pin** — under channel drift, closed-loop replanning
+  (fresh gains at every chunk boundary) produces *different* allocations
+  from the stale open-loop plan AND wins on the realized latency ledger;
+* **weighted sampling** — the Horvitz-Thompson 1/p correction is an
+  unbiased estimator of the full-participation aggregate (property
+  test) and collapses bitwise onto the plain path at S == K.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Experiment, ScenarioSpec, SerialExecutor, lowering
+from repro.core import DeviceProfile, FeelScheduler
+from repro.data.pipeline import ClassificationData
+from repro.dynamics import (EnergyBudget, Fading, FadingProcess,
+                            FaultProcess, Faults, TauAdapt)
+from repro.testing.proptest import given, settings, strategies as st
+from repro.topology import ParticipationSampler, Sampling, Topology
+
+# distinctive shapes (no other module uses dim=30/hidden=44/b_max=10) so
+# engine program caches never collide across test modules
+DIM, HIDDEN, BMAX = 30, 44, 10
+PERIODS = 4
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    full = ClassificationData.synthetic(n=400, dim=DIM, seed=0, spread=6.0)
+    return full.split(80)
+
+
+def _fleet(k):
+    return tuple(DeviceProfile(kind="cpu", f_cpu=(0.6 + 0.3 * i) * 1e9)
+                 for i in range(k))
+
+
+def _spec(k, **kw):
+    kw.setdefault("name", f"dyn{k}")
+    kw.setdefault("b_max", BMAX)
+    kw.setdefault("base_lr", 0.15)
+    kw.setdefault("hidden", HIDDEN)
+    kw.setdefault("fleet", _fleet(k))
+    return ScenarioSpec(**kw)
+
+
+def _sched(**kw):
+    kw.setdefault("devices", _fleet(4))
+    kw.setdefault("n_params", 4000)
+    kw.setdefault("b_max", 16)
+    kw.setdefault("seed", 3)
+    return FeelScheduler(**kw)
+
+
+def _assert_bitwise(a, b):
+    np.testing.assert_array_equal(np.asarray(a.losses),
+                                  np.asarray(b.losses))
+    np.testing.assert_array_equal(np.asarray(a.accs), np.asarray(b.accs))
+    np.testing.assert_array_equal(a.times, b.times)
+    np.testing.assert_array_equal(a.global_batch, b.global_batch)
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def test_dynamics_value_validation():
+    with pytest.raises(ValueError, match="states"):
+        Fading(states=0)
+    with pytest.raises(ValueError, match="spread"):
+        Fading(spread=-0.1)
+    with pytest.raises(ValueError, match="stickiness"):
+        Fading(stickiness=1.0)
+    with pytest.raises(ValueError, match="slow_prob"):
+        Faults(slow_prob=1.5)
+    with pytest.raises(ValueError, match="drop_prob"):
+        Faults(drop_prob=1.0)
+    with pytest.raises(ValueError, match="slow_factor"):
+        Faults(slow_factor=0.5)
+    with pytest.raises(ValueError, match="budget_j"):
+        EnergyBudget(budget_j=0.0)
+    with pytest.raises(ValueError, match="power draws"):
+        EnergyBudget(comp_w=-1.0)
+    with pytest.raises(ValueError, match="at least one"):
+        EnergyBudget(comp_w=0.0, tx_w=0.0)
+    with pytest.raises(ValueError, match="at least one choice"):
+        TauAdapt(choices=())
+    with pytest.raises(ValueError, match="positive ints"):
+        TauAdapt(choices=(1, 0))
+    with pytest.raises(ValueError, match="distinct"):
+        TauAdapt(choices=(2, 2))
+
+
+def test_spec_dynamics_validation():
+    with pytest.raises(ValueError, match="no\\s+planner"):
+        _spec(3, scheme="individual", fading=Fading())
+    with pytest.raises(ValueError, match="topology"):
+        _spec(4, scheme="feel", topology=Topology(cells=2, edges=2),
+              faults=Faults(drop_prob=0.2))
+    with pytest.raises(ValueError, match="replan"):
+        _spec(3, scheme="feel", adapt_tau=TauAdapt(choices=(1, 2)))
+    with pytest.raises(ValueError, match="starting point"):
+        _spec(3, scheme="feel", replan=2, local_steps=3,
+              adapt_tau=TauAdapt(choices=(1, 2)))
+    with pytest.raises(TypeError, match="fading="):
+        _spec(3, scheme="feel", fading=0.5)
+    with pytest.raises(ValueError, match="hierarchical"):
+        _spec(4, scheme="feel", topology=Topology(cells=2, edges=2),
+              sampling=Sampling(size=2, weighted=True))
+    with pytest.raises(ValueError, match="Horvitz-Thompson"):
+        _spec(3, scheme="feel", sampling=Sampling(size=2, weighted=True),
+              energy=EnergyBudget(budget_j=0.5))
+    # the scheduler itself refuses dynamics on unknown/legacy policies
+    # and on the hierarchical path
+    with pytest.raises(ValueError, match="hierarchical"):
+        FeelScheduler(devices=_fleet(4), n_params=4000, b_max=8,
+                      topology=Topology(cells=2, edges=2),
+                      fading=Fading())
+
+
+def test_bucket_key_structural_vs_value_fields():
+    base = _spec(3, scheme="feel")
+    # Markov state count shapes nothing today but keys the program family
+    # (belief arrays are (states,)-free; the count is the grid coordinate)
+    assert _spec(3, scheme="feel", fading=Fading(states=3)).bucket_key() \
+        != base.bucket_key()
+    assert _spec(3, scheme="feel", fading=Fading(states=3)).bucket_key() \
+        != _spec(3, scheme="feel", fading=Fading(states=4)).bucket_key()
+    # value-only knobs: spread / faults / energy do not split buckets
+    assert _spec(3, scheme="feel",
+                 fading=Fading(states=3, spread=0.2)).bucket_key() == \
+        _spec(3, scheme="feel",
+              fading=Fading(states=3, spread=1.4)).bucket_key()
+    assert _spec(3, scheme="feel",
+                 faults=Faults(drop_prob=0.3)).bucket_key() == \
+        base.bucket_key()
+    assert _spec(3, scheme="feel",
+                 energy=EnergyBudget(budget_j=0.5)).bucket_key() == \
+        base.bucket_key()
+    # adaptive-τ choices are structural (each realized τ is a program)
+    assert _spec(3, scheme="feel", replan=2,
+                 adapt_tau=TauAdapt(choices=(1, 2))).bucket_key() != \
+        _spec(3, scheme="feel", replan=2).bucket_key()
+
+
+# ---------------------------------------------------------------------------
+# process determinism + stream hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_processes_chunked_equal_monolithic():
+    fad = Fading(states=4, spread=1.0, stickiness=0.8, seed=7)
+    mono = FadingProcess(fad, k=5, seed=11).draw(6)
+    chunked = FadingProcess(fad, k=5, seed=11)
+    np.testing.assert_array_equal(
+        mono, np.concatenate([chunked.draw(2) for _ in range(3)]))
+    # seeded: same stream reproduces, different fading seed diverges
+    np.testing.assert_array_equal(
+        mono, FadingProcess(fad, k=5, seed=11).draw(6))
+    assert not np.array_equal(
+        mono, FadingProcess(Fading(states=4, spread=1.0, stickiness=0.8,
+                                   seed=8), k=5, seed=11).draw(6))
+
+    flt = Faults(slow_prob=0.4, drop_prob=0.3, seed=5)
+    s_mono, k_mono = FaultProcess(flt, k=5, seed=11).draw(6)
+    chunked = FaultProcess(flt, k=5, seed=11)
+    parts = [chunked.draw(2) for _ in range(3)]
+    np.testing.assert_array_equal(
+        s_mono, np.concatenate([p[0] for p in parts]))
+    np.testing.assert_array_equal(
+        k_mono, np.concatenate([p[1] for p in parts]))
+    assert set(np.unique(s_mono)) <= {1.0, flt.slow_factor}
+    assert set(np.unique(k_mono)) <= {0.0, 1.0}
+
+
+def test_scheduler_chunked_equals_monolithic_under_drift():
+    """Open-loop chunked planning is bit-identical to monolithic even
+    with every dynamics field live (the fixed g0 belief + per-period
+    fixed-shape draws make the stream position chunking-invariant)."""
+    kw = dict(fading=Fading(states=3, spread=1.2, stickiness=0.9),
+              faults=Faults(slow_prob=0.3, drop_prob=0.2, seed=1),
+              energy=EnergyBudget(budget_j=1.0))
+    mono = _sched(**kw).plan_horizon(6)
+    sch = _sched(**kw)
+    chunks = [sch.plan_horizon(2, warm_start=(i > 0)) for i in range(3)]
+    for f in ("batch", "tau_up", "latency", "participation", "energy",
+              "slowdown"):
+        np.testing.assert_array_equal(
+            getattr(mono, f),
+            np.concatenate([getattr(c, f) for c in chunks]), err_msg=f)
+
+
+def test_identity_dynamics_bitwise_scheduler():
+    """Zero-spread fading + prob-0 faults + infinite budget collapse to
+    the static plan bitwise — including on the fixed baseline policies,
+    whose rng draws must not shift when dynamics streams are live."""
+    for policy in ("proposed", "online", "full", "random"):
+        h0 = _sched(policy=policy).plan_horizon(5)
+        h1 = _sched(policy=policy,
+                    fading=Fading(states=3, spread=0.0),
+                    faults=Faults(slow_prob=0.0, drop_prob=0.0),
+                    energy=EnergyBudget()).plan_horizon(5)
+        np.testing.assert_array_equal(h0.batch, h1.batch, err_msg=policy)
+        np.testing.assert_array_equal(h0.tau_up, h1.tau_up, err_msg=policy)
+        np.testing.assert_array_equal(h0.latency, h1.latency,
+                                      err_msg=policy)
+        # identity dynamics still surface the config-static ledgers
+        assert h0.energy is None and h0.slowdown is None
+        assert np.all(h1.participation == 1.0)
+        assert np.all(h1.slowdown == 1.0)
+
+
+def test_identity_dynamics_bitwise_experiment(dataset):
+    """End to end: the identity-dynamics spec reproduces the static
+    run's every ledger bitwise (losses/accs/times/global_batch)."""
+    data, test = dataset
+    static = Experiment(data, test, [_spec(3, scheme="feel")]).run(
+        periods=PERIODS, executor=SerialExecutor())
+    ident = Experiment(data, test, [_spec(
+        3, scheme="feel",
+        fading=Fading(states=3, spread=0.0),
+        faults=Faults(slow_prob=0.0, drop_prob=0.0),
+        energy=EnergyBudget())]).run(
+            periods=PERIODS, executor=SerialExecutor())
+    _assert_bitwise(static, ident)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole pin: closed loop beats open loop under drift
+# ---------------------------------------------------------------------------
+
+_DRIFT = dict(devices=tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                            for f in (0.7, 2.1, 1.4, 0.9)),
+              fading=Fading(states=3, spread=1.2, stickiness=0.95))
+
+
+def test_closed_loop_diverges_and_wins_under_drift():
+    open_loop = _sched(**_DRIFT).plan_horizon(8)
+    sch = _sched(**_DRIFT)
+    closed = [sch.plan_horizon(2, warm_start=(i > 0), closed_loop=True)
+              for i in range(4)]
+    tau_c = np.concatenate([c.tau_up for c in closed])
+    lat_c = np.concatenate([c.latency for c in closed])
+    # same drift realization either way (own stream, chunking-invariant)…
+    assert not np.array_equal(open_loop.tau_up, tau_c)
+    # …but re-pricing the TDMA slots at fresh gains wins on the realized
+    # latency ledger (the stale g0 belief misallocates airtime)
+    assert lat_c.sum() < open_loop.latency.sum()
+
+
+def test_closed_loop_wins_end_to_end(dataset):
+    data, test = dataset
+    spec = _spec(4, scheme="feel", b_max=16, seeds=(3,),
+                 fleet=_DRIFT["devices"],
+                 fading=Fading(states=3, spread=1.2, stickiness=0.95))
+    ro = Experiment(data, test, [spec]).run(periods=8,
+                                            executor=SerialExecutor())
+    rc = Experiment(data, test, [spec]).run(periods=8, replan=2,
+                                            executor=SerialExecutor())
+    assert not np.array_equal(ro.times, rc.times)
+    assert rc.times[0, -1] < ro.times[0, -1]
+
+
+# ---------------------------------------------------------------------------
+# faults + energy ledgers
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_slowdown_stretches_latency():
+    h0 = _sched().plan_horizon(5)
+    h1 = _sched(faults=Faults(slow_prob=1.0, slow_factor=4.0)) \
+        .plan_horizon(5)
+    # the solver's allocation is untouched (stragglers are realized,
+    # not planned around) but the realized ledger pays the stretch
+    np.testing.assert_array_equal(h0.batch, h1.batch)
+    assert np.all(h1.slowdown == 4.0)
+    assert np.all(h1.latency >= h0.latency)
+    assert np.any(h1.latency > h0.latency)
+
+
+def test_dropout_masks_participation():
+    h = _sched(faults=Faults(drop_prob=0.5, seed=2)).plan_horizon(8)
+    part = h.participation
+    assert part is not None and set(np.unique(part)) <= {0.0, 1.0}
+    assert 0.0 < part.mean() < 1.0            # some dropped, some kept
+    np.testing.assert_array_equal(h.batch == 0, part == 0.0)
+
+
+def test_energy_budget_sheds_and_respects_ledger():
+    h0 = _sched().plan_horizon(5)
+    tight = _sched(energy=EnergyBudget(budget_j=0.35))
+    h1 = tight.plan_horizon(5)
+    assert h1.energy is not None
+    # shedding only ever reduces the allocation…
+    assert np.all(h1.batch <= h0.batch)
+    assert np.any(h1.batch < h0.batch)
+    # …and every user still participating lands under budget
+    active = h1.participation > 0.5
+    assert np.all(h1.energy[active] <= 0.35 + 1e-9)
+    assert np.all(h1.energy[~active] == 0.0)
+    # a budget nobody can meet soft-floors instead of dropping the fleet
+    h2 = _sched(energy=EnergyBudget(budget_j=1e-6)).plan_horizon(3)
+    assert np.all(h2.participation.sum(axis=1) >= 1)
+
+
+def test_energy_ledger_surfaces_through_lowering(dataset):
+    data, _ = dataset
+    specs = [_spec(3, scheme="feel", energy=EnergyBudget(budget_j=0.35))]
+    (bucket,) = lowering.group_rows(specs)
+    plan = lowering.plan_bucket(bucket, data, PERIODS)
+    ledger = plan.payload.get("energy")
+    assert ledger is not None and ledger.shape == (1, PERIODS, 3)
+    assert np.all(ledger <= 0.35 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# weighted (Horvitz-Thompson) sampling
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_weighted_sampling_unbiased_mean(seed):
+    """The executed 1/p-corrected aggregate is an unbiased estimator of
+    the full-participation weighted mean: averaging the HT estimator
+    over many cohort draws converges on the static aggregate."""
+    k, s, draws = 6, 3, 4000
+    rng = np.random.default_rng(seed)
+    bbar = rng.integers(1, 9, size=k).astype(float)   # planned batches
+    grads = rng.normal(size=k)                        # per-user payloads
+    samp = Sampling(size=s, weighted=True, seed=seed)
+    mask = ParticipationSampler(samp, k, seed=seed).draw(draws)
+    den = samp.p_of(k) * bbar.sum()                   # fixed denominator
+    est = (mask * (bbar * grads)).sum(axis=1) / den
+    target = (bbar * grads).sum() / bbar.sum()
+    se = est.std(ddof=1) / np.sqrt(draws)
+    assert abs(est.mean() - target) < 5.0 * se + 1e-12
+
+
+def test_weighted_full_cohort_collapses_to_plain(dataset):
+    """At S == K the inclusion probability is 1 and the HT denominator
+    equals the executed batch sum — weighted == unweighted bitwise."""
+    data, test = dataset
+    runs = []
+    for weighted in (False, True):
+        runs.append(Experiment(data, test, [_spec(
+            3, scheme="feel",
+            sampling=Sampling(size=3, weighted=weighted))]).run(
+                periods=PERIODS, executor=SerialExecutor()))
+    _assert_bitwise(runs[0], runs[1])
+
+
+def test_weighted_subsampling_changes_aggregate(dataset):
+    data, test = dataset
+    runs = []
+    for weighted in (False, True):
+        runs.append(Experiment(data, test, [_spec(
+            4, scheme="feel",
+            sampling=Sampling(size=2, weighted=weighted))]).run(
+                periods=PERIODS, executor=SerialExecutor()))
+    # the correction really reweights the executed aggregation
+    assert not np.array_equal(np.asarray(runs[0].losses),
+                              np.asarray(runs[1].losses))
+
+
+# ---------------------------------------------------------------------------
+# adaptive local steps
+# ---------------------------------------------------------------------------
+
+
+def test_recommend_tau_needs_feedback_then_scores():
+    sch = _sched()
+    # no realized chunk yet → conservatively keep the current τ
+    assert sch.recommend_tau((1, 2, 4), 2) == 2
+    sch.plan_horizon(2, closed_loop=True)
+    tau = sch.recommend_tau((1, 2, 4), 1)
+    assert tau in (1, 2, 4)
+    # the score is deterministic given the same realized stats
+    assert tau == sch.recommend_tau((1, 2, 4), 1)
+
+
+def test_adaptive_tau_end_to_end(dataset):
+    data, test = dataset
+    spec = _spec(3, scheme="feel", replan=2, local_steps=1,
+                 adapt_tau=TauAdapt(choices=(1, 2)))
+    res = Experiment(data, test, [spec]).run(periods=PERIODS,
+                                             executor=SerialExecutor())
+    assert np.all(np.isfinite(np.asarray(res.losses)))
+    assert np.all(np.diff(res.times[0]) > 0)

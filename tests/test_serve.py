@@ -96,9 +96,10 @@ def test_virtual_clock_and_arrival_fixtures():
 # ---------------------------------------------------------------------------
 
 
-def _req(spec, periods, t, seq, priority=0):
+def _req(spec, periods, t, seq, priority=0, deadline=None):
     return PendingRequest(ticket=None, spec=spec, periods=periods,
-                          priority=priority, submitted_at=t, seq=seq)
+                          priority=priority, submitted_at=t, seq=seq,
+                          deadline=deadline)
 
 
 def test_admission_queue_windows_merge_and_slice(fleet):
@@ -133,6 +134,38 @@ def test_admission_queue_windows_merge_and_slice(fleet):
         AdmissionQueue(window=-0.5)
     with pytest.raises(ValueError, match="max_batch"):
         AdmissionQueue(max_batch=0)
+
+
+def test_admission_deadline_slack_ordering(fleet):
+    """Due micro-batches admit tightest-slack first; a group's slack is
+    its most urgent member's; deadline-less groups keep FIFO among
+    themselves (infinite slack, seq tiebreak)."""
+    a = _spec(fleet, seeds=(0,))
+    b = _spec(fleet, b_max=BMAX - 4, seeds=(0,))
+    c = _spec(fleet, b_max=BMAX - 6, seeds=(0,))
+    q = AdmissionQueue(window=0.0)
+    q.push(_req(a, 4, 0.0, 0))                      # no deadline (FIFO)
+    q.push(_req(b, 4, 0.1, 1, deadline=5.0))
+    q.push(_req(c, 4, 0.2, 2, deadline=2.0))        # tightest → first
+    assert [[r.seq for r in g] for g in q.pop_due(1.0)] == [[2], [1], [0]]
+
+    # a group inherits its most urgent member's slack: the late urgent
+    # arrival drags its whole (compatible) micro-batch up the order
+    q = AdmissionQueue(window=1.0)
+    q.push(_req(a, 4, 0.0, 0))
+    q.push(_req(b, 4, 0.0, 1))
+    q.push(_req(a, 4, 0.5, 2, deadline=1.5))        # merges with seq 0
+    assert [[r.seq for r in g]
+            for g in q.pop_due(1.1)] == [[0, 2], [1]]
+
+    # no deadlines anywhere: order is bit-for-bit the old FIFO
+    q = AdmissionQueue(window=0.0)
+    q.push(_req(b, 4, 0.0, 0))
+    q.push(_req(a, 4, 0.1, 1))
+    assert [[r.seq for r in g] for g in q.pop_due(1.0)] == [[0], [1]]
+    assert PendingRequest(ticket=None, spec=a, periods=4, priority=0,
+                          submitted_at=0.0, seq=0).slack(99.0) == \
+        float("inf")
 
 
 def test_program_keys_and_chunk_lengths(dataset, fleet):
@@ -345,6 +378,10 @@ def test_submit_and_construction_validation(dataset, fleet):
         svc.submit("not-a-spec", periods=3)
     with pytest.raises(ValueError, match="periods"):
         svc.submit(_spec(fleet), periods=0)
+    with pytest.raises(ValueError, match="adapt_tau"):
+        from repro.dynamics import TauAdapt
+        svc.submit(_spec(fleet, replan=2,
+                         adapt_tau=TauAdapt(choices=(1, 2))), periods=3)
     with pytest.raises(ValueError, match="chunk_periods"):
         _service(data, test, chunk_periods=0)
     with pytest.raises(ValueError, match="window"):
