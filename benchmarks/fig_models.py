@@ -1,0 +1,82 @@
+"""Model families on the FEEL engine — transformer / Mamba-2 train steps
+next to the MLP scan (PR 10).
+
+Runs the ``model_family`` grid end-to-end on the device engine at
+CI-cheap shapes, once cold (trace + compile included) and once warm (the
+bucket program cache hit), and reports per family: the true parameter
+count (what the planner prices the SBC uplink at, ``s = r·d·p``), the
+cold and warm wall time per period, and the final training loss.
+
+Emits ``BENCH_models.json``.  Run:
+``PYTHONPATH=src python -m benchmarks.fig_models``
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.api import Experiment, ScenarioSpec
+from repro.compression.sbc import compressed_bits
+from repro.core import DeviceProfile
+from repro.data.pipeline import ClassificationData
+
+FAMILIES = ("feel_mlp", "transformer", "mamba2")
+
+
+def _spec(fleet, family: str) -> ScenarioSpec:
+    return ScenarioSpec(fleet=fleet, name=f"bench-{family}", b_max=12,
+                        base_lr=0.15, hidden=8, depth=2, seeds=(0,),
+                        model_family=family)
+
+
+def main(fast: bool = True):
+    from repro.api.lowering import _n_params
+
+    periods = 3 if fast else 8
+    full = ClassificationData.synthetic(n=160, dim=12, seed=0, spread=6.0)
+    data, test = full.split(40)
+    fleet = tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                  for f in (0.7, 1.4))
+
+    report, rows = {}, []
+    for family in FAMILIES:
+        spec = _spec(fleet, family)
+        exp = Experiment(data, test, [spec])
+        t0 = time.time()
+        res = exp.run(periods=periods)
+        cold_s = time.time() - t0
+        t0 = time.time()
+        res = Experiment(data, test, [spec]).run(periods=periods)
+        warm_s = time.time() - t0
+
+        losses = np.asarray(res.losses)
+        final = float(losses.reshape(-1, periods)[0, -1])
+        assert np.all(np.isfinite(losses)), f"{family}: non-finite loss"
+        n_params = _n_params(spec, data.x.shape[1])
+        entry = {
+            "n_params": int(n_params),
+            "sbc_uplink_bits": compressed_bits(n_params, spec.compression),
+            "cold_s_per_period": cold_s / periods,
+            "warm_s_per_period": warm_s / periods,
+            "final_loss": final,
+        }
+        report[family] = entry
+        print(f"{family}: {n_params} params, cold "
+              f"{entry['cold_s_per_period']:.3f} s/period, warm "
+              f"{entry['warm_s_per_period']:.3f} s/period, "
+              f"final loss {final:.3f}")
+        rows.append((f"fig_models/{family}",
+                     f"{entry['warm_s_per_period'] * 1e6:.0f}",
+                     f"params={n_params};loss={final:.3f}"))
+
+    report["periods"] = periods
+    with open("BENCH_models.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main(fast=True):
+        print(",".join(map(str, r)))

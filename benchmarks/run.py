@@ -9,7 +9,7 @@ import time
 def main() -> None:
     from benchmarks import (ablation_compression, fig2_gpu_training_function,
                             fig3_generalization, fig45_batchsize_policies,
-                            fig_dynamics, fig_replan, fig_users,
+                            fig_dynamics, fig_models, fig_replan, fig_users,
                             loss_decay_fit, roofline, serve_load,
                             smoke_experiment, solver_scaling, sweep_speed,
                             table2_schemes)
@@ -25,6 +25,7 @@ def main() -> None:
         ("fig_users", fig_users),
         ("fig_replan", fig_replan),
         ("fig_dynamics", fig_dynamics),
+        ("fig_models", fig_models),
         ("sweep_speed", sweep_speed),
         ("roofline", roofline),
         ("serve_load", serve_load),

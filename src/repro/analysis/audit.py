@@ -9,9 +9,11 @@ and writes a machine-readable ``AUDIT_report.json``:
   (``--users``), the ``local_steps > 1`` delta-upload variant, the
   per-round-sampled (time-varying participation mask) programs on both
   engines, the hierarchical cell→edge→cloud family (alone and composed
-  with sampling), the K-banded sub-bucketed sweep, and the PR-9 dynamics
+  with sampling), the K-banded sub-bucketed sweep, the PR-9 dynamics
   families (drifting block-fading channels, straggler/dropout faults,
-  energy-budget shedding — alone and composed with sampling);
+  energy-budget shedding — alone and composed with sampling), and the
+  PR-10 big-model families (transformer / Mamba-2 train-step scans,
+  SBC-compressed and dense uploads);
 * **trace ledger** over a real chunked closed-loop run
   (``Experiment.run(replan=R, audit=True)``) — proving one trace per
   (bucket, chunk-length) program and zero retraces across replan
@@ -109,6 +111,15 @@ def _grid_specs(users):
                    _spec(k, scheme="feel", sampling=Sampling(size=2),
                          energy=EnergyBudget(budget_j=0.5),
                          faults=Faults(slow_prob=0.2, drop_prob=0.2))],
+        # big-model train steps (PR 10): the transformer / mamba2 program
+        # families — SBC-compressed and dense uploads, plus composition
+        # with per-round sampling — certify like the MLP scan they mirror
+        "models": [_spec(k, scheme="feel", model_family="transformer"),
+                   _spec(k, scheme="feel", model_family="mamba2"),
+                   _spec(k, scheme="feel", model_family="transformer",
+                         compress=False),
+                   _spec(k, scheme="feel", model_family="mamba2",
+                         sampling=Sampling(size=2))],
     }
 
 

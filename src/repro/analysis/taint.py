@@ -820,11 +820,25 @@ class _Interp:
                     add_lane(oa.lanes if isinstance(oa.lanes, Known)
                              else VARIANT)
             elif d.axis in dn.collapsed_slice_dims \
-                    or d.axis in dn.start_index_map:
+                    or (d.axis in dn.start_index_map
+                        and slice_sizes[d.axis] != op_shape[d.axis]):
                 poison |= self._finding(
                     "taint.gather-over-user-axis", where,
                     f"gather indexes along user axis {d.axis}: padded-lane "
                     "data can surface at arbitrary output positions")
+            elif d.axis in dn.start_index_map:
+                # dynamic-slice-style gather whose slice spans the whole
+                # user axis: the only in-bounds start is 0 (and gather
+                # clamps), so the axis passes through untouched — lane
+                # structure is preserved exactly like a full offset dim
+                # (e.g. ``x[:, :, -1, :]`` batched over leading user axes)
+                self._assume("full-length gather slices start at 0 "
+                             "(out-of-range starts clamp to 0)")
+                j = op_offset_src.index(d.axis)
+                out_ax = dn.offset_dims[j]
+                digits.append(Digit(out_ax, d.sub_stride, d.extent))
+                add_lane(oa.lanes if isinstance(oa.lanes, Known)
+                         else VARIANT)
             else:
                 j = op_offset_src.index(d.axis)
                 out_ax = dn.offset_dims[j]

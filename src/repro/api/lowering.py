@@ -78,7 +78,7 @@ from repro.core.scheduler import (DevScheduler, FeelScheduler,
                                   plan_horizons_batch)
 from repro.data.pipeline import (FederatedBatcher, partition_iid,
                                  partition_noniid)
-from repro.fed import engine, feel_model
+from repro.fed import engine, feel_model, model_engine
 from repro.launch.mesh import pad_batch
 from repro.topology import band_width
 
@@ -218,6 +218,11 @@ def _partition(spec: ScenarioSpec, data, seed: int):
 
 
 def _n_params(spec: ScenarioSpec, input_dim: int, classes: int = 10) -> int:
+    if spec.model_family != "feel_mlp":
+        # the big-model families price the uplink at the true parameter
+        # count of the derived ArchConfig
+        return model_engine.family_n_params(
+            spec.model_family, spec.hidden, spec.depth)
     dims = [input_dim] + [spec.hidden] * (spec.depth - 1) + [classes]
     return sum(i * o + o for i, o in zip(dims[:-1], dims[1:]))
 
@@ -227,6 +232,9 @@ def _init_params_batch(rows: Sequence[Row], input_dim: int):
     per-row ``feel_model.init`` — threefry is counter-based)."""
     spec = rows[0].spec
     keys = jnp.stack([jax.random.key(r.seed) for r in rows])
+    if spec.model_family != "feel_mlp":
+        return model_engine.init_params_batch(
+            spec.model_family, spec.hidden, spec.depth, keys)
     return jax.vmap(lambda k: feel_model.init(
         k, spec.hidden, depth=spec.depth, input_dim=input_dim))(keys)
 
@@ -255,7 +263,7 @@ def _plan_key(r: Row) -> tuple:
     s = r.spec
     return (s.fleet, s.effective_policy, s.b_max, s.compression, s.cell,
             s.hidden, s.depth, r.seed, s.sampling, s.topology,
-            s.fading, s.faults, s.energy, s.adapt_tau)
+            s.fading, s.faults, s.energy, s.adapt_tau, s.model_family)
 
 
 def _rescale_lr(horizon, base_lr: float, ref_batch: float):
@@ -622,6 +630,14 @@ def _dispatch_feel(plan: BucketPlan, data, test, mesh,
             state, member, cloud, schedules, data, test,
             local_steps=local_steps, compress=spec0.compress,
             ratio=spec0.compression, mesh=mesh, active=active)
+    elif spec0.model_family != "feel_mlp":
+        # big-model families: the transformer / mamba2 train-step scan
+        state, (losses, accs, decays) = \
+            model_engine.resume_model_trajectory_batch(
+                state, schedules, data, test,
+                model_family=spec0.model_family, hidden=spec0.hidden,
+                depth=spec0.depth, compress=spec0.compress,
+                ratio=spec0.compression, mesh=mesh, active=active)
     else:
         state, (losses, accs, decays) = engine.resume_trajectory_batch(
             state, schedules, data, test,
@@ -785,6 +801,29 @@ def trace_bucket(plan: BucketPlan, data, test) -> TracedBucket:
                      "aggden": NO_LABEL},
                     NO_LABEL, NO_LABEL, NO_LABEL, NO_LABEL)
                 n_leaves = len(jax.tree_util.tree_leaves(params_e0))
+            elif spec0.model_family != "feel_mlp":
+                # big-model families trace against the tokenized datasets
+                # but share the MLP scan's label/contract story verbatim:
+                # the program's own masking must re-establish padding
+                # safety from variant schedule lanes
+                tok, lab = model_engine.tokenize(data)
+                test_tok, _ = model_engine.tokenize(test)
+                data_args = engine.host_to_device(
+                    (tok, lab, test_tok, np.asarray(test.y)))
+                fn = model_engine.model_trajectory_program(
+                    spec0.model_family, spec0.hidden, spec0.depth,
+                    spec0.compress, spec0.compression)
+                closed = jax.make_jaxpr(fn)(
+                    params0, residual0, active, xs, *data_args)
+                labels = (
+                    tree_map(lambda _: NO_LABEL, params0),
+                    tree_map(lambda _: LaneLabel(1, 0.0), residual0),
+                    LaneLabel(2, 0.0),
+                    {"idx": LaneLabel(2), "weight": LaneLabel(2),
+                     "batch": LaneLabel(2), "lr": NO_LABEL,
+                     "aggden": NO_LABEL},
+                    NO_LABEL, NO_LABEL, NO_LABEL, NO_LABEL)
+                n_leaves = len(jax.tree_util.tree_leaves(params0))
             else:
                 fn = engine.trajectory_program(
                     local_steps, spec0.compress, spec0.compression)

@@ -22,7 +22,9 @@ trajectory matches:
   shapes;
 * ``local_steps``, ``compress`` and ``compression`` — scan-body structure
   (static python branching / top-k fraction inside the jitted step);
-* model architecture (``hidden``, ``depth``) — parameter pytree shapes;
+* model architecture (``model_family``, ``hidden``, ``depth``) — the
+  per-device train step itself (MLP scan vs big-model transformer/mamba2
+  step) and the parameter pytree shapes;
 * ``replan`` (FEEL family) — the closed-loop ξ re-plan interval: the
   horizon executes as ``replan``-period chunked scans with estimator
   feedback between chunks, and every row of a bucket must chunk on the
@@ -57,6 +59,10 @@ from repro.dynamics import EnergyBudget, Fading, Faults, TauAdapt
 from repro.topology import Sampling, Topology
 
 SCHEMES = ("feel", "gradient_fl", "model_fl", "individual")
+# Per-device train-step families the FEEL engine can lower.  ``feel_mlp``
+# is the paper's MLP scan; ``transformer`` / ``mamba2`` run the big-model
+# train step (fed/train_step.py) with the pallas kernels in the hot path.
+MODEL_FAMILIES = ("feel_mlp", "transformer", "mamba2")
 # The dev-family schemes train full local epochs with a fixed per-device
 # batch; PR-1 capped it at 64 — kept as the lowering rule.
 DEV_EPOCH_BATCH_CAP = 64
@@ -86,6 +92,7 @@ class ScenarioSpec:
     faults: Optional[Faults] = None      # straggler slowdowns + dropout
     energy: Optional[EnergyBudget] = None  # per-user per-period energy caps
     adapt_tau: Optional[TauAdapt] = None   # re-planned local-steps knob
+    model_family: str = "feel_mlp"       # feel_mlp | transformer | mamba2
 
     def __post_init__(self):
         object.__setattr__(self, "fleet", tuple(self.fleet))
@@ -157,6 +164,28 @@ class ScenarioSpec:
                     f"local_steps={self.local_steps} is the starting point "
                     "of the adaptive schedule and must appear in adapt_tau "
                     f"choices {self.adapt_tau.choices!r}")
+        if self.model_family not in MODEL_FAMILIES:
+            raise ValueError(
+                f"model_family {self.model_family!r} not in {MODEL_FAMILIES}")
+        if self.model_family != "feel_mlp":
+            if self.is_dev_scheme:
+                raise ValueError(
+                    "big-model families run the FEEL train step; the "
+                    f"{self.scheme!r} scheme keeps per-device MLPs")
+            if self.topology is not None:
+                raise ValueError(
+                    "the hierarchical scan is feel_mlp-only; drop "
+                    "topology= or use model_family='feel_mlp'")
+            if self.local_steps != 1 or self.adapt_tau is not None:
+                raise ValueError(
+                    "big-model families take one aggregated step per "
+                    "period (local_steps=1, no adapt_tau); the local-SGD "
+                    "delta-upload loop is feel_mlp-only")
+            if self.hidden % 4 != 0:
+                raise ValueError(
+                    f"model_family={self.model_family!r} derives its "
+                    f"ArchConfig from hidden={self.hidden}, which must be "
+                    "divisible by 4 (attention heads / SSM head grouping)")
         if self.sampling is not None and self.sampling.weighted:
             if self.topology is not None:
                 raise ValueError(
@@ -237,7 +266,12 @@ class ScenarioSpec:
         choice set are structural program-family coordinates: the
         auditor certifies per family, and an adaptive bucket compiles
         one scan-body variant per realized τ, so only rows agreeing on
-        the candidate set may chunk together."""
+        the candidate set may chunk together.
+
+        ``model_family`` is structural: the scan body is a different
+        program per family (MLP scan vs the big-model train step on the
+        pallas kernels), so a ``grid(base, model_family=[...])`` sweep
+        lowers to exactly one program per family-bucket."""
         if self.is_dev_scheme:
             return ("dev", self.scheme, self.dev_epoch_batch,
                     self.hidden, self.depth)
@@ -247,7 +281,8 @@ class ScenarioSpec:
                 self.compress, self.compression if self.compress else None,
                 self.hidden, self.depth, self.replan, topo,
                 None if self.fading is None else self.fading.states,
-                None if self.adapt_tau is None else self.adapt_tau.choices)
+                None if self.adapt_tau is None else self.adapt_tau.choices,
+                self.model_family)
 
 
 jax.tree_util.register_static(ScenarioSpec)

@@ -10,9 +10,11 @@ s = r·d·p.
 
 ``compress_dense`` returns the *dense decompressed* gradient — the form the
 in-graph federated all-reduce consumes (DESIGN.md §3: uplink compression
-becomes a transform around the data-parallel mean).  The Pallas kernel
-(kernels/sbc_topk) computes the per-block magnitude threshold + binarize
-step on TPU; this module is its jnp oracle.
+becomes a transform around the data-parallel mean).  The Pallas kernels
+(kernels/sbc.py, dispatched through ``kernels.ops.sbc_compress``) compute
+the per-block magnitude stats + binarize step on TPU; this module is their
+jnp oracle.  ``sbc_uplink`` is the backend-dispatching entry point: the
+kernel path on accelerators, bitwise ``compress_dense`` on CPU.
 """
 from __future__ import annotations
 
@@ -92,6 +94,29 @@ def compress_dense(grads, ratio: float = 0.005, residual=None,
     acc = jax.tree_util.tree_map(lambda g, r: g + r, grads, residual)
     approx = jax.tree_util.tree_map(
         lambda t: sbc_tensor(t, ratio, exact=exact), acc)
+    new_res = jax.tree_util.tree_map(lambda a, ap: a - ap, acc, approx)
+    return approx, new_res
+
+
+def sbc_uplink(grads, ratio: float = 0.005, residual=None):
+    """Error-feedback SBC routed through the accelerator kernel path.
+
+    On TPU each leaf goes through the two-kernel composition in
+    ``kernels/sbc.py`` (``sbc_stats`` + ``sbc_apply`` via
+    ``kernels.ops.sbc_compress``); on CPU this *is* ``compress_dense`` —
+    bitwise, not merely allclose — so the engine path and the oracle are
+    interchangeable in CPU CI.  Returns ``(approx_grads, new_residual)``
+    with the same error-feedback contract as ``compress_dense``.
+    """
+    from repro.kernels import ops as kops  # lazy: kernels.ref imports us
+
+    if not kops._on_tpu():
+        return compress_dense(grads, ratio, residual)
+    if residual is None:
+        residual = jax.tree_util.tree_map(jnp.zeros_like, grads)
+    acc = jax.tree_util.tree_map(lambda g, r: g + r, grads, residual)
+    approx = jax.tree_util.tree_map(
+        lambda t: kops.sbc_compress(t, ratio), acc)
     new_res = jax.tree_util.tree_map(lambda a, ap: a - ap, acc, approx)
     return approx, new_res
 

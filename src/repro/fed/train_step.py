@@ -5,7 +5,9 @@ per-example weights (the federated B_k masks from the scheduler plan)
 enter the weighted CE loss; the cross-device gradient mean that jit/GSPMD
 emits over the data axis IS the paper's Step-3 aggregation.  Optional
 ``compress_uplink`` applies SBC to the gradients *before* the optimizer —
-the in-graph counterpart of the paper's Step-2 compression.
+the in-graph counterpart of the paper's Step-2 compression — with the
+error-feedback residual (Sattler et al.) threaded through
+``TrainState.residual`` so sparsification preserves convergence.
 """
 from __future__ import annotations
 
@@ -16,7 +18,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.compression.sbc import sbc_tensor
+from repro.compression.sbc import sbc_uplink
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models.layers import padded_vocab
 from repro.models.model import Runtime, forward, decode_step, init_cache
@@ -28,12 +30,18 @@ class TrainState:
     params: Any
     opt: Any
     step: jnp.ndarray
+    residual: Any = None   # SBC error-feedback accumulator (compress_uplink)
 
 
 jax.tree_util.register_pytree_node(
     TrainState,
-    lambda s: ((s.params, s.opt, s.step), None),
+    lambda s: ((s.params, s.opt, s.step, s.residual), None),
     lambda _, ch: TrainState(*ch))
+
+
+def zero_residual(params):
+    """A zeroed error-feedback accumulator matching ``params``' structure."""
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
 
 
 def weighted_ce(cfg: ArchConfig, logits, labels, weights):
@@ -71,16 +79,19 @@ def make_train_step(cfg: ArchConfig, rt: Runtime, opt: Optimizer,
         (total, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             state.params, batch)
         if compress_uplink:
-            # Step 2: per-device SBC before the (implicit) all-reduce.
-            grads = jax.tree_util.tree_map(
-                lambda g: sbc_tensor(g, compress_ratio, exact=False), grads)
+            # Step 2: per-device SBC before the (implicit) all-reduce, with
+            # the error-feedback residual — sparsification without it breaks
+            # the compress_dense convergence contract.
+            grads, new_res = sbc_uplink(grads, compress_ratio, state.residual)
+        else:
+            new_res = state.residual
         updates, new_opt = opt.update(grads, state.opt, state.params, lr)
         new_params = apply_updates(state.params, updates)
         gnorm = jnp.sqrt(sum(
             jnp.sum(jnp.square(g.astype(jnp.float32)))
             for g in jax.tree_util.tree_leaves(grads)))
         metrics = {"loss": ce, "total_loss": total, "grad_norm": gnorm}
-        return TrainState(new_params, new_opt, state.step + 1), metrics
+        return TrainState(new_params, new_opt, state.step + 1, new_res), metrics
 
     return train_step
 
@@ -100,6 +111,12 @@ def make_multi_train_step(cfg: ArchConfig, rt: Runtime, opt: Optimizer,
     step = make_train_step(cfg, rt, opt, compress_uplink, compress_ratio)
 
     def many(state: TrainState, batches, lrs):
+        if compress_uplink and state.residual is None:
+            # materialize the error-feedback accumulator before tracing the
+            # scan — the carry structure must be stable across periods
+            state = TrainState(state.params, state.opt, state.step,
+                               zero_residual(state.params))
+
         def body(s, xs):
             b, lr = xs
             return step(s, b, lr)
@@ -152,7 +169,11 @@ def input_specs(cfg: ArchConfig, shape: ShapeConfig, rt: Runtime):
             batch["weights"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
         return batch
 
-    # decode: cache allocated at min(seq_len, window) context
-    cache = jax.eval_shape(partial(init_cache, cfg, B, S, rt))
+    # decode: cache allocated at min(seq_len, window) context — the
+    # documented init_cache contract; a sliding-window arch's decode_step
+    # only ever addresses ``window`` ring-buffer slots
+    win = rt.win(cfg)
+    ctx = min(S, win) if win else S
+    cache = jax.eval_shape(partial(init_cache, cfg, B, ctx, rt))
     tok1 = (B, 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, 1)
     return {"cache": cache, "tokens": jax.ShapeDtypeStruct(tok1, i32)}

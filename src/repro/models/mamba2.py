@@ -140,7 +140,10 @@ def mamba2_forward(params, cfg: ArchConfig, x):
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
     A = -jnp.exp(params["A_log"])
     chunk = min(s.chunk, S)
-    y, _ = ssd_reference(xs, dt, A, Bm, Cm, chunk)
+    # dispatch through kernels.ops: pallas ssd_scan on TPU, ssd_reference
+    # on CPU (lazy import — kernels.ref imports this module for the oracle)
+    from repro.kernels import ops as _kops
+    y = _kops.ssd(xs, dt, A, Bm, Cm, chunk=chunk)
     y = y + xs * params["D"][None, None, :, None].astype(y.dtype)
     y = y.reshape(B_, S, d_in)
     y = rmsnorm(params["norm"], y * jax.nn.silu(z))

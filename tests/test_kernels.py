@@ -9,6 +9,7 @@ from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.ssd_scan import ssd_scan
 from repro.kernels.sbc import sbc_stats, sbc_apply
+from repro.testing.proptest import given, settings, strategies as st
 
 KEY = jax.random.key(42)
 
@@ -237,3 +238,44 @@ def test_sbc_apply_kernel():
     out = sbc_apply(x, scal, block=8, interpret=True)
     np.testing.assert_allclose(
         np.asarray(out), [0, -3.25, 0, 0, 0, -3.25, 0, 0], atol=1e-6)
+
+
+def test_sbc_edge_semantics():
+    """Pinned edge behavior, oracle and kernel pipeline agreeing: all-zero
+    input stays all-zero (thr=0 keeps everything, but neither sign group
+    has members and the count clamp prevents 0/0), a k=1 tiny leaf keeps
+    exactly its largest magnitude, and boundary ties all survive with the
+    positive group winning the >= tie-break."""
+    z = jnp.zeros(512)
+    np.testing.assert_array_equal(np.asarray(ref.sbc_ref(z, 0.01)),
+                                  np.zeros(512))
+    np.testing.assert_array_equal(
+        np.asarray(ops.sbc_compress(z, 0.01, block=128, interpret=True)),
+        np.zeros(512))
+
+    tiny = jnp.asarray([0.1, -5.0, 0.2])         # n*ratio < 1 → k = 1
+    np.testing.assert_allclose(np.asarray(ref.sbc_ref(tiny, 0.01)),
+                               [0.0, -5.0, 0.0], atol=1e-7)
+
+    ties = jnp.asarray([2.0, -2.0, 2.0, -2.0, 1.0, -1.0, 0.5, 0.0])
+    want = [2.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+    out = ref.sbc_ref(ties, 0.25)                # k=2, four tied at thr=2
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-7)
+    out = ops.sbc_compress(ties, 0.25, block=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(32, 2048), ratio=st.floats(0.005, 0.1),
+       seed=st.integers(0, 50))
+def test_sbc_kernel_composition_matches_oracle(n, ratio, seed):
+    """Property: the two-kernel composition (``sbc_stats`` + ``sbc_apply``
+    through ``ops.sbc_compress``) reproduces the ``sbc_tensor`` oracle in
+    interpret mode across sizes, ratios, and draws — including sizes that
+    need block padding."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=n) * np.linspace(0.1, 2.0, n),
+                    jnp.float32)
+    out = ops.sbc_compress(g, ratio, block=256, interpret=True)
+    want = ref.sbc_ref(g, ratio)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)

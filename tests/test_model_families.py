@@ -1,0 +1,340 @@
+"""Big-model FEEL workloads (PR 10): ``model_family`` as a structural grid
+axis, the transformer / Mamba-2 train-step scan wired into the lowering,
+kernel-vs-ref parity on the family shapes, and the SBC error-feedback
+fixes (``TrainState.residual`` threading, ``sbc_uplink`` == oracle on CPU,
+the windowed ``input_specs`` decode-cache contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Experiment, ScenarioSpec, grid
+from repro.compression.sbc import compress_dense, sbc_uplink
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import DeviceProfile
+from repro.data.pipeline import ClassificationData
+from repro.fed import model_engine
+from repro.fed.model_engine import KERNEL_RT, family_arch, tokenize
+from repro.fed.train_step import (TrainState, input_specs, make_loss_fn,
+                                  make_multi_train_step, make_train_step,
+                                  zero_residual)
+from repro.fed.engine import Schedule
+from repro.kernels import ops, ref
+from repro.models.mamba2 import ssd_reference
+from repro.models.model import Runtime, forward
+from repro.models.model import init as model_init
+from repro.optim import sgd
+from repro.testing import no_retrace
+
+tree_map = jax.tree_util.tree_map
+
+# distinctive shapes: no other module runs hidden=8 / b_max=12 / K=2
+# model-family buckets, so the trace-count assertions below are exact
+DIM, HIDDEN, DEPTH, BMAX = 12, 8, 2, 12
+FAMILIES = ["feel_mlp", "transformer", "mamba2"]
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    full = ClassificationData.synthetic(n=120, dim=DIM, seed=0, spread=6.0)
+    return full.split(40)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return tuple(DeviceProfile(kind="cpu", f_cpu=f * 1e9)
+                 for f in [0.7, 1.4])
+
+
+def _spec(fleet, **kw):
+    kw.setdefault("name", "fam")
+    kw.setdefault("b_max", BMAX)
+    kw.setdefault("base_lr", 0.15)
+    kw.setdefault("hidden", HIDDEN)
+    kw.setdefault("depth", DEPTH)
+    kw.setdefault("seeds", (0,))
+    return ScenarioSpec(fleet=fleet, **kw)
+
+
+# ---------------------------------------------------------------------------
+# spec axis: structural bucketing + validation
+# ---------------------------------------------------------------------------
+
+
+def test_model_family_is_structural(dataset, fleet):
+    """Each family compiles a different scan body, so the grid must split
+    into one bucket per family — model_family lives in ``bucket_key``."""
+    data, test = dataset
+    study = grid(_spec(fleet), model_family=FAMILIES)
+    buckets = Experiment(data, test, study).lower()
+    assert len(buckets) == 3
+    assert len({b.key for b in buckets}) == 3
+    assert {b.key[-1] for b in buckets} == set(FAMILIES)
+
+
+def test_model_family_validation(fleet):
+    with pytest.raises(ValueError):
+        _spec(fleet, model_family="rnn")
+    with pytest.raises(ValueError):                  # big models are FEEL-only
+        _spec(fleet, model_family="transformer", scheme="individual")
+    with pytest.raises(ValueError):                  # no hierarchy yet
+        from repro.topology import Topology
+        _spec(fleet, model_family="mamba2",
+              topology=Topology(cells=2, edges=2, agg_every=2))
+    with pytest.raises(ValueError):                  # one period == one step
+        _spec(fleet, model_family="transformer", local_steps=2)
+    with pytest.raises(ValueError):                  # head-divisibility
+        _spec(fleet, model_family="transformer", hidden=10)
+
+
+# ---------------------------------------------------------------------------
+# tentpole acceptance: the family grid end-to-end, audited
+# ---------------------------------------------------------------------------
+
+
+def test_family_grid_end_to_end_with_audit(dataset, fleet):
+    """``grid(base, model_family=[...])`` through ``Experiment.run`` with
+    ``audit=True``: one program per family bucket, taint/hygiene/trace
+    passes certify all three program families, coordinates select."""
+    data, test = dataset
+    study = grid(_spec(fleet), model_family=FAMILIES)
+    with no_retrace(expect=3):                       # one program per family
+        res = Experiment(data, test, study).run(periods=2, audit=True)
+    assert res.n_buckets == 3
+    assert res.audit is not None and res.audit.ok
+    for fam in FAMILIES:
+        losses = np.asarray(res.sel(model_family=fam).losses)
+        assert losses.shape[-1] == 2
+        assert np.all(np.isfinite(losses))
+
+
+def test_family_pricing_uses_true_param_count(fleet):
+    """The planner prices big-model uplinks at the derived ArchConfig's
+    parameter count, not the MLP formula."""
+    from repro.api.lowering import _n_params
+    for fam in ("transformer", "mamba2"):
+        spec = _spec(fleet, model_family=fam)
+        assert _n_params(spec, DIM) == family_arch(
+            fam, HIDDEN, DEPTH).param_count()
+    mlp = _spec(fleet)
+    dims = [DIM] + [HIDDEN] * (DEPTH - 1) + [10]
+    assert _n_params(mlp, DIM) == sum(
+        i * o + o for i, o in zip(dims[:-1], dims[1:]))
+
+
+# ---------------------------------------------------------------------------
+# engine wiring: the bucket scan IS make_multi_train_step's trajectory
+# ---------------------------------------------------------------------------
+
+
+def test_engine_matches_multi_train_step(dataset):
+    """A 1-user uncompressed bucket trajectory equals driving
+    ``make_multi_train_step`` over the same gathered schedule batches."""
+    data, test = dataset
+    P, slot = 3, 4
+    rng = np.random.default_rng(3)
+    idx = rng.integers(0, len(data.y), (P, 1, slot)).astype(np.int32)
+    sched = Schedule(idx=idx,
+                     weight=np.ones((P, 1, slot), np.float32),
+                     batch=np.full((P, 1), float(slot), np.float32),
+                     lr=np.full(P, 0.1, np.float32),
+                     times=np.zeros(P), global_batch=np.full(P, slot))
+
+    keys = jnp.stack([jax.random.key(7)])
+    params0 = model_engine.init_params_batch("transformer", HIDDEN, 1, keys)
+    residual0 = tree_map(
+        lambda p: jnp.zeros((p.shape[0], 1) + p.shape[1:], p.dtype), params0)
+    params, _, (losses, _, decays) = model_engine.run_model_trajectory_batch(
+        params0, residual0, [sched], data, test,
+        model_family="transformer", hidden=HIDDEN, depth=1, compress=False)
+
+    cfg = family_arch("transformer", HIDDEN, 1)
+    tok, lab = tokenize(data)
+    S = tok.shape[1]
+    batches = {"tokens": tok[idx[:, 0]].astype(np.int32),
+               "labels": lab[idx[:, 0]].astype(np.int32),
+               "weights": np.ones((P, slot, S), np.float32)}
+    opt = sgd()
+    single = tree_map(lambda a: a[0], params0)
+    state0 = TrainState(single, opt.init(single), jnp.zeros((), jnp.int32))
+    many = make_multi_train_step(cfg, KERNEL_RT, opt)
+    final, metrics = many(state0, batches, jnp.full(P, 0.1, jnp.float32))
+
+    for got, want in zip(jax.tree_util.tree_leaves(params),
+                         jax.tree_util.tree_leaves(final.params)):
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want),
+                                   atol=1e-6, rtol=1e-6)
+    # the engine emits loss AFTER the update; before == after + decay
+    np.testing.assert_allclose(np.asarray(losses[0] + decays[0]),
+                               np.asarray(metrics["loss"]),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# kernel-vs-ref parity on the family shapes
+# ---------------------------------------------------------------------------
+
+
+def test_transformer_forward_kernel_path_matches_naive(dataset):
+    """The engine runtime (attn_impl="pallas", ref-dispatched off-TPU)
+    agrees with the naive jnp attention on the family's exact shapes."""
+    data, _ = dataset
+    tok, _ = tokenize(data)
+    tok = jnp.asarray(tok[:4], jnp.int32)
+    cfg = family_arch("transformer", HIDDEN, DEPTH)
+    params = model_init(cfg, jax.random.key(0))
+    got, _ = forward(cfg, params, tok, rt=KERNEL_RT)
+    want, _ = forward(cfg, params, tok,
+                      rt=Runtime(dtype=jnp.float32, attn_impl="naive"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_mamba2_ssd_kernel_matches_reference_on_family_shapes():
+    """interpret-mode ``ssd_scan`` vs ``ssd_reference`` at the exact
+    (H, P, G, N, chunk) the mamba2 family derives from the spec."""
+    cfg = family_arch("mamba2", HIDDEN, DEPTH)
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    B, S = 2, 12
+    key = jax.random.key(1)
+    x = jax.random.normal(key, (B, S, H, s.head_dim))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(key, 3),
+                           (B, S, s.n_groups, s.d_state)) * 0.5
+    Cm = jax.random.normal(jax.random.fold_in(key, 4),
+                           (B, S, s.n_groups, s.d_state)) * 0.5
+    got = ops.ssd(x, dt, A, Bm, Cm, chunk=s.chunk, interpret=True)
+    want, _ = ssd_reference(x, dt, A, Bm, Cm, s.chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_mamba2_forward_routes_through_ops(dataset, monkeypatch):
+    """``mamba2_forward`` reaches its SSD scan via ``kernels.ops.ssd`` —
+    the backend dispatch point — not by calling the reference directly."""
+    data, _ = dataset
+    tok, _ = tokenize(data)
+    tok = jnp.asarray(tok[:2], jnp.int32)
+    cfg = family_arch("mamba2", HIDDEN, 1)
+    params = model_init(cfg, jax.random.key(0))
+    calls = []
+    real = ops.ssd
+
+    def spy(*a, **kw):
+        calls.append(kw.get("chunk"))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops, "ssd", spy)
+    forward(cfg, params, tok, rt=KERNEL_RT)
+    assert calls == [cfg.ssm.chunk]
+
+
+# ---------------------------------------------------------------------------
+# SBC error feedback (satellite 1) + uplink dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_sbc_uplink_is_compress_dense_on_cpu():
+    """Off-TPU the dispatching entry point IS the oracle — bitwise, which
+    is what makes the engine path and ``compress_dense`` interchangeable
+    in CPU CI."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("CPU dispatch contract")
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.normal(size=(64, 8)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
+    res = tree_map(lambda g: g * 0.25, grads)
+    got_g, got_r = sbc_uplink(grads, 0.02, res)
+    want_g, want_r = compress_dense(grads, 0.02, res)
+    for a, b in zip(jax.tree_util.tree_leaves((got_g, got_r)),
+                    jax.tree_util.tree_leaves((want_g, want_r))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_step_error_feedback_matches_compress_dense_loop(dataset):
+    """``make_train_step(compress_uplink=True)`` threads the residual
+    through ``TrainState`` exactly like a hand-rolled ``compress_dense``
+    error-feedback loop (the convergence-preserving contract), and the
+    scanned ``make_multi_train_step`` reproduces the same trajectory."""
+    data, _ = dataset
+    tok, lab = tokenize(data)
+    S = tok.shape[1]
+    batch = {"tokens": jnp.asarray(tok[:4], jnp.int32),
+             "labels": jnp.asarray(lab[:4], jnp.int32),
+             "weights": jnp.ones((4, S), jnp.float32)}
+    cfg = family_arch("transformer", HIDDEN, 1)
+    opt = sgd()
+    params = model_init(cfg, jax.random.key(2))
+    steps, ratio, lr = 4, 0.02, 0.1
+
+    step = make_train_step(cfg, KERNEL_RT, opt, compress_uplink=True,
+                           compress_ratio=ratio)
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    for _ in range(steps):
+        state, metrics = step(state, batch, lr)
+    assert state.residual is not None
+
+    loss_fn = make_loss_fn(cfg, KERNEL_RT)
+    p_manual, res = params, zero_residual(params)
+    for _ in range(steps):
+        grads = jax.grad(lambda p: loss_fn(p, batch)[0])(p_manual)
+        approx, res = compress_dense(grads, ratio, res)
+        p_manual = tree_map(lambda p, g: p - lr * g, p_manual, approx)
+
+    for got, want in zip(jax.tree_util.tree_leaves(state.params),
+                         jax.tree_util.tree_leaves(p_manual)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-7, rtol=1e-7)
+    for got, want in zip(jax.tree_util.tree_leaves(state.residual),
+                         jax.tree_util.tree_leaves(res)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-7, rtol=1e-7)
+    # sparsification dropped mass somewhere → the residual is live
+    assert any(float(jnp.abs(r).max()) > 0
+               for r in jax.tree_util.tree_leaves(state.residual))
+
+    # the scan materializes the residual from None and matches step-by-step
+    many = make_multi_train_step(cfg, KERNEL_RT, opt, compress_uplink=True,
+                                 compress_ratio=ratio)
+    stacked = tree_map(lambda a: jnp.broadcast_to(a, (steps,) + a.shape),
+                       batch)
+    state0 = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    final, _ = many(state0, stacked, jnp.full(steps, lr, jnp.float32))
+    for got, want in zip(jax.tree_util.tree_leaves(final.params),
+                         jax.tree_util.tree_leaves(state.params)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# windowed input_specs decode cache (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+def _decode_shape(seq_len):
+    return ShapeConfig("d", seq_len=seq_len, global_batch=2, mode="decode")
+
+
+def test_input_specs_windowed_decode_cache_allocation():
+    """The decode-cache spec allocates min(seq_len, window) context — the
+    documented ``init_cache`` contract — so sliding-window archs price the
+    ring buffer, not the full sequence."""
+    base = dict(name="w", family="dense", n_layers=2, d_model=16, n_heads=4,
+                n_kv_heads=2, d_ff=32, vocab=64)
+    rt = Runtime(dtype=jnp.float32)
+    windowed = ArchConfig(attn_window=8, **base)
+    cache = input_specs(windowed, _decode_shape(32), rt)["cache"]
+    assert cache["k"].shape[2] == 8 == cache["v"].shape[2]
+    # short sequences never over-allocate past seq_len
+    cache = input_specs(windowed, _decode_shape(4), rt)["cache"]
+    assert cache["k"].shape[2] == 4
+    # no window → full context; runtime override wins over the arch
+    cache = input_specs(ArchConfig(**base), _decode_shape(32), rt)["cache"]
+    assert cache["k"].shape[2] == 32
+    cache = input_specs(windowed, _decode_shape(32),
+                        Runtime(dtype=jnp.float32, window=4))["cache"]
+    assert cache["k"].shape[2] == 4
